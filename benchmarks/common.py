@@ -1,0 +1,100 @@
+"""Shared harness for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core.fed import FedEngine
+from repro.data import synthetic as syn
+from repro.models.small import CNNTask, MLPTask
+
+# CPU-feasible defaults; --paper flips to the paper's 32 clients.
+N_SAMPLES = 8192
+NOISE = {"mnist": 1.3, "fmnist": 1.8}
+
+
+def make_task(model: str):
+    return MLPTask(hidden=64) if model == "mlp" else CNNTask(channels=(8, 16))
+
+
+def make_fed(optimizer: str, *, clients: int, local_iters: int, lr: float,
+             tau: int = 5, rounds: int = 60) -> FedConfig:
+    return FedConfig(num_clients=clients, local_iters=local_iters,
+                     optimizer=optimizer, lr=lr, tau=tau,
+                     total_rounds=rounds)
+
+
+DEFAULT_LR = {"fed_sophia": 0.02, "fedavg": 0.05, "done": 1.0,
+              "fedadam": 0.02, "fedyogi": 0.02}
+
+
+@dataclass
+class RunResult:
+    accs: List[float]          # test accuracy per round
+    losses: List[float]
+    rounds_to_target: Optional[int]
+    seconds_per_round: float
+    local_iters: int
+
+
+def run_federated(model: str, dataset: str, optimizer: str, *,
+                  clients: int = 8, rounds: int = 40, local_iters: int = 10,
+                  lr: Optional[float] = None, tau: int = 5,
+                  batch: int = 64, target_acc: float = 0.75,
+                  seed: int = 0, eval_every: int = 1) -> RunResult:
+    key = jax.random.PRNGKey(seed)
+    x, y = syn.make_image_data(key, N_SAMPLES, dataset,
+                               noise=NOISE[dataset])
+    part = syn.dirichlet_partition(jax.random.fold_in(key, 1), y, clients,
+                                   alpha=0.5)
+    tr, te = syn.train_test_split(part)
+    task = make_task(model)
+    fed = make_fed(optimizer, clients=clients, local_iters=local_iters,
+                   lr=lr if lr is not None else DEFAULT_LR[optimizer],
+                   tau=tau, rounds=rounds)
+    engine = FedEngine(task, fed)
+    state = engine.init(jax.random.fold_in(key, 2))
+    round_fn = jax.jit(engine.round)
+    teb = syn.client_batches(jax.random.fold_in(key, 3), x, y, te, 128)
+    acc_fn = jax.jit(lambda p: jnp.mean(jax.vmap(
+        lambda b: task.accuracy(p, b))(teb)))
+
+    accs, losses = [], []
+    rounds_to_target = None
+    t0 = time.time()
+    for r in range(rounds):
+        batches = syn.client_batches(jax.random.fold_in(key, 100 + r),
+                                     x, y, tr, batch)
+        state, metrics = round_fn(state, batches,
+                                  jax.random.fold_in(key, 1000 + r))
+        losses.append(float(metrics["loss"]))
+        if r % eval_every == 0 or r == rounds - 1:
+            acc = float(acc_fn(state["params"]))
+            accs.append(acc)
+            if rounds_to_target is None and acc >= target_acc:
+                rounds_to_target = r + 1
+    dt = (time.time() - t0) / rounds
+    return RunResult(accs=accs, losses=losses,
+                     rounds_to_target=rounds_to_target,
+                     seconds_per_round=dt, local_iters=local_iters)
+
+
+def flops_per_local_iter(model: str, batch: int = 64) -> float:
+    """Forward+backward FLOPs for one local iteration (energy model)."""
+    task = make_task(model)
+    params = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    n = sum(int(jnp.prod(jnp.array(p.shape))) for p in
+            jax.tree.leaves(params))
+    return 6.0 * n * batch
+
+
+def num_params(model: str) -> int:
+    task = make_task(model)
+    params = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    return sum(int(jnp.prod(jnp.array(p.shape)))
+               for p in jax.tree.leaves(params))

@@ -1,0 +1,92 @@
+"""Render the roofline table from dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+        [--mesh prod1pod] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, mesh: str | None = None, tag: str = ""):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        if r.get("optimizer", "fed_sophia") != "fed_sophia":
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(recs, markdown=False):
+    hdr = ["arch", "shape", "mesh", "compute", "memory", "collective",
+           "bottleneck", "useful_flops", "temp_GiB"]
+    rows = []
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r["mesh"]))
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                         f"SKIP: {r['reason'][:42]}", "-", "-"])
+            continue
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                         "ERROR", "-", "-"])
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        temp = r.get("memory", {}).get("temp_size_in_bytes")
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            fmt_s(t["compute_s"]), fmt_s(t["memory_s"]),
+            fmt_s(t["collective_s"]), t["bottleneck"],
+            f"{ratio:.2f}" if ratio else "-",
+            f"{temp / 2**30:.1f}" if temp else "-",
+        ])
+    if markdown:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "|".join(["---"] * len(hdr)) + "|"]
+        out += ["| " + " | ".join(str(c) for c in row) + " |"
+                for row in rows]
+    else:
+        w = [max(len(str(r[i])) for r in [hdr] + rows)
+             for i in range(len(hdr))]
+        out = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+        out += ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(row))
+                for row in rows]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh, args.tag)
+    print(table(recs, markdown=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: federated Fed-Sophia pre-training of a ~100M-param
+decoder LM (minicpm-family reduced) on a synthetic token stream.
+
+Default runs a ~100M model for 100 rounds x 3 local iterations = 300
+local steps on CPU. Use --small for a quick functional check.
+
+    PYTHONPATH=src python examples/fed_llm_train.py --small
+    PYTHONPATH=src python examples/fed_llm_train.py          # ~100M run
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import ckpt
+from repro.configs.base import FedConfig
+from repro.core.fed import FedEngine
+from repro.data import synthetic as syn
+from repro.models import transformer as T
+
+
+def build_cfg(small: bool):
+    base = configs.get_model_config("minicpm-2b")
+    if small:
+        return base.reduced(d_model=128)
+    # ~100M-param member of the same family (depth-scaled residuals, WSD)
+    return dataclasses.replace(
+        base.reduced(num_layers=8, d_model=512),
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=8,
+        head_dim=64, d_ff=1536, vocab_size=32768, dtype="float32",
+        residual_scale=1.4 / (8 ** 0.5))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-iters", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="experiments/fed_llm_ckpt")
+    args = ap.parse_args()
+    if args.small:
+        args.rounds, args.seq, args.batch = 5, 64, 2
+
+    cfg = build_cfg(args.small)
+    task = T.LMTask(cfg)
+    fed = FedConfig(num_clients=args.clients, local_iters=args.local_iters,
+                    optimizer="fed_sophia", lr=args.lr, tau=5,
+                    schedule="wsd", total_rounds=args.rounds,
+                    warmup_rounds=max(args.rounds // 20, 1))
+    engine = FedEngine(task, fed)
+    key = jax.random.PRNGKey(0)
+    state = engine.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"model={cfg.name}-reduced  params={n_params / 1e6:.1f}M  "
+          f"clients={fed.num_clients} J={fed.local_iters} "
+          f"rounds={args.rounds} (WSD schedule)")
+    round_fn = jax.jit(engine.round)
+    t_start = time.time()
+    for r in range(args.rounds):
+        batches = syn.make_token_batch(
+            jax.random.fold_in(key, 100 + r), fed.num_clients, args.batch,
+            args.seq, cfg.vocab_size)
+        state, metrics = round_fn(state, batches,
+                                  jax.random.fold_in(key, 1000 + r))
+        if r % max(args.rounds // 20, 1) == 0 or r == args.rounds - 1:
+            print(f"round {r:4d}  loss={float(metrics['loss']):.4f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"({time.time() - t_start:.0f}s)", flush=True)
+    if args.ckpt:
+        ckpt.save(args.ckpt, state["params"], step=args.rounds,
+                  extra={"cfg": cfg.name, "params_m": n_params / 1e6})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Reproduce Table I: effect of learning rate and local iterations J on
+Fed-Sophia test accuracy (FMNIST + CNN).
+
+    PYTHONPATH=src python examples/hyperparam_table.py
+"""
+from benchmarks import common
+
+print(f"{'lr':>8} {'J':>3} {'test acc':>9}")
+for lr in (0.01, 0.003, 0.0005):
+    r = common.run_federated("cnn", "fmnist", "fed_sophia", clients=8,
+                             rounds=15, local_iters=10, lr=lr)
+    print(f"{lr:>8} {10:>3} {r.accs[-1]:>9.3f}")
+for J in (1, 5, 10):
+    r = common.run_federated("cnn", "fmnist", "fed_sophia", clients=8,
+                             rounds=15, local_iters=J, lr=0.001)
+    print(f"{0.001:>8} {J:>3} {r.accs[-1]:>9.3f}")

@@ -1,0 +1,44 @@
+"""Quickstart: the paper's core experiment in ~40 lines.
+
+Federated training of an MLP on (synthetic) non-IID MNIST with
+Fed-Sophia vs FedAvg — reproduces the Fig. 2 behaviour: Fed-Sophia
+reaches the target accuracy in fewer communication rounds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core.fed import FedEngine
+from repro.data import synthetic as syn
+from repro.models.small import MLPTask
+
+ROUNDS, CLIENTS = 25, 8
+
+key = jax.random.PRNGKey(0)
+x, y = syn.make_image_data(key, 8192, "mnist", noise=1.3)
+part = syn.dirichlet_partition(jax.random.fold_in(key, 1), y, CLIENTS,
+                               alpha=0.5)
+train_idx, test_idx = syn.train_test_split(part)
+task = MLPTask(hidden=64)
+test_batches = syn.client_batches(jax.random.fold_in(key, 2), x, y,
+                                  test_idx, 128)
+
+for optimizer, lr in (("fed_sophia", 0.02), ("fedavg", 0.05)):
+    fed = FedConfig(num_clients=CLIENTS, local_iters=10, optimizer=optimizer,
+                    lr=lr, tau=5, total_rounds=ROUNDS)
+    engine = FedEngine(task, fed)
+    state = engine.init(jax.random.fold_in(key, 3))
+    round_fn = jax.jit(engine.round)
+    print(f"\n== {optimizer} (lr={lr}) ==")
+    for r in range(ROUNDS):
+        batches = syn.client_batches(jax.random.fold_in(key, 100 + r),
+                                     x, y, train_idx, 64)
+        state, metrics = round_fn(state, batches,
+                                  jax.random.fold_in(key, 1000 + r))
+        if r % 5 == 0 or r == ROUNDS - 1:
+            acc = jnp.mean(jax.vmap(
+                lambda b: task.accuracy(state["params"], b))(test_batches))
+            print(f"round {r:3d}  local-loss={float(metrics['loss']):.4f}"
+                  f"  test-acc={float(acc):.3f}")

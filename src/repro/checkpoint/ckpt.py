@@ -1,0 +1,74 @@
+"""Minimal distributed-aware checkpointing.
+
+Leaves are gathered to host (works for sharded arrays via device_get of
+fully-addressable arrays or process-local replicas), flattened with
+stable path keys, and stored as .npz + a JSON manifest. Restore rebuilds
+the pytree and (optionally) re-shards with device_put against provided
+shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(path: str, tree: Any, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+
+    def to_np(v):
+        # numpy's savez can't serialise bfloat16 — store as float32, the
+        # manifest keeps the logical dtype and restore() casts back.
+        if hasattr(v, "dtype") and v.dtype == jnp.bfloat16:
+            v = jnp.asarray(v, jnp.float32)
+        return np.asarray(jax.device_get(v))
+
+    arrays = {k: to_np(v) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any, shardings: Optional[Any] = None):
+    """Restore into the structure of ``like``; optionally device_put with a
+    matching pytree of shardings."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = _flatten_with_paths(like)
+    leaves = {}
+    for key, ref in flat_like.items():
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            f"shape mismatch for {key}: {arr.shape} vs {ref.shape}"
+        leaves[key] = jnp.asarray(arr, dtype=ref.dtype)
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [leaves[k] for k in flat_like.keys()])
+    if shardings is not None:
+        restored = jax.tree.map(jax.device_put, restored, shardings)
+    return restored
+
+
+def load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)

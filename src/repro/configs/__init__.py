@@ -1,0 +1,38 @@
+"""Config registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (FedConfig, INPUT_SHAPES, MLAConfig,
+                                ModelConfig, MoEConfig, RunConfig,
+                                ShapeConfig)
+
+ARCH_IDS = [
+    "qwen3-moe-235b-a22b",
+    "minicpm-2b",
+    "qwen3-14b",
+    "deepseek-v2-lite-16b",
+    "hubert-xlarge",
+    "gemma2-9b",
+    "xlstm-1.3b",
+    "qwen2-vl-2b",
+    "chatglm3-6b",
+    "recurrentgemma-2b",
+]
+
+
+def _module(arch_id: str):
+    mod = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_model_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_fed_overrides(arch_id: str) -> dict:
+    return getattr(_module(arch_id), "FED", {})
+
+
+def get_citation(arch_id: str) -> str:
+    return getattr(_module(arch_id), "CITATION", "")

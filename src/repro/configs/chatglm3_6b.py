@@ -1,0 +1,13 @@
+"""chatglm3-6b [dense] — 28L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=65024, partial rotary (the legacy 2d-RoPE layout: rotary on half
+the head dims). [arXiv:2406.12793]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b", family="dense",
+    num_layers=28, d_model=4096, num_heads=32, num_kv_heads=2,
+    d_ff=13696, vocab_size=65024, rotary_pct=0.5, ffn_kind="swiglu",
+    tie_embeddings=False, dtype="bfloat16",
+)
+FED = dict(strategy="parallel")
+CITATION = "[arXiv:2406.12793]"

@@ -1,0 +1,299 @@
+"""Federated runtime: one jitted call = one communication round (Alg. 1).
+
+Two execution strategies (DESIGN.md §4):
+  * parallel   — vmap over a leading client axis; client axis is sharded
+                 along the mesh 'data' (and 'pod') axes, so the final
+                 aggregation mean lowers to the cross-client all-reduce
+                 that realises Eq. 4.
+  * sequential — lax.scan over clients; each client trains with the whole
+                 mesh (FSDP); memory O(1) in the number of clients.
+
+Optimizers: fed_sophia (the paper), fedavg, done, fedadam, fedyogi.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import sophia
+from repro.core.gnb import gnb_estimate
+from repro.core.schedules import lr_at_round
+from repro.utils.tree import tree_mean_axis0, tree_sq_norm, tree_zeros_like
+
+
+class FedEngine:
+    def __init__(self, task, fed: FedConfig, gather_shardings=None):
+        self.task = task
+        self.fed = fed
+        # FSDP (sequential strategy): params are STORED sharded over the
+        # data axes; each use must see them model-only-sharded, otherwise
+        # GSPMD resolves the data-axis contraction by replicating the
+        # batch-sharded activations instead (16x activation traffic).
+        # gather_shardings = model-only NamedSharding pytree; constraining
+        # params to it at each local step lowers to the per-step weight
+        # all-gather that defines FSDP/ZeRO-3.
+        self.gather_shardings = gather_shardings
+
+    def _gathered(self, params):
+        if self.gather_shardings is None:
+            return params
+        return jax.tree.map(jax.lax.with_sharding_constraint, params,
+                            self.gather_shardings)
+
+    def _value_and_grad(self, loss_fn, params, batch, rng=None):
+        """value_and_grad with optional exact micro-batch accumulation."""
+        n = self.fed.grad_microbatches
+        if n <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch, rng)
+        mb = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def body(acc, xs):
+            i, b = xs
+            r = jax.random.fold_in(rng, i) if rng is not None else None
+            l, g = jax.value_and_grad(loss_fn)(params, b, r)
+            acc = (acc[0] + l / n,
+                   jax.tree.map(lambda a, gg: a + gg / n, acc[1], g))
+            return acc, None
+
+        init = (jnp.zeros((), jnp.float32), tree_zeros_like(params))
+        (loss, grads), _ = jax.lax.scan(
+            body, init, (jnp.arange(n), mb))
+        return loss, grads
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        params = self.task.init(key)
+        state: Dict[str, Any] = {"params": params, "round": jnp.zeros((), jnp.int32)}
+        if (self.fed.optimizer == "fed_sophia"
+                and self.fed.persistent_client_state):
+            opt = sophia.init_state(params)
+            state["client_opt"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (self.fed.num_clients,) + x.shape).copy(), opt)
+        if self.fed.optimizer in ("fedadam", "fedyogi"):
+            state["server_opt"] = {"m": tree_zeros_like(params),
+                                   "v": tree_zeros_like(params)}
+        return state
+
+    # ------------------------------------------------- local client training
+    def _local_sophia(self, params, opt, batch, round_idx, rng, lr):
+        fed = self.fed
+        task = self.task
+
+        # round mode (Alg. 1 line 9 literal: refresh when k mod tau == 0):
+        # the GNB estimate uses the round-start params, so it hoists out of
+        # the local-iteration scan — one estimator call per refresh round
+        # instead of a lax.cond in every local step.
+        round_mode = fed.hessian_every_unit == "round"
+        if round_mode:
+            do_h_round = (round_idx % fed.tau) == 0
+            h_hat_round = jax.lax.cond(
+                do_h_round,
+                lambda: gnb_estimate(task, self._gathered(params), batch,
+                                     jax.random.fold_in(rng, 0x7FFFFFFF),
+                                     vg_fn=self._value_and_grad),
+                lambda: tree_zeros_like(params))
+
+        def step(carry, j):
+            p, st = carry
+            pg = self._gathered(p)          # FSDP: model-only view for use
+            loss, grads = self._value_and_grad(task.loss, pg, batch, None)
+            if round_mode:
+                do_h = do_h_round & (j == 0)   # EMA applied once per refresh
+                h_hat = h_hat_round
+            else:
+                t = round_idx * fed.local_iters + j
+                do_h = (t % fed.tau) == 0
+                rng_j = jax.random.fold_in(rng, j)
+                h_hat = jax.lax.cond(
+                    do_h,
+                    lambda: gnb_estimate(task, pg, batch, rng_j,
+                                         vg_fn=self._value_and_grad),
+                    lambda: tree_zeros_like(p))
+            p, st = sophia.sophia_step(
+                p, grads, st, h_hat, do_h,
+                lr=lr, beta1=fed.beta1, beta2=fed.beta2, rho=fed.rho,
+                eps=fed.eps, weight_decay=fed.weight_decay,
+                use_pallas=fed.use_pallas)
+            return (p, st), loss
+
+        (params, opt), losses = jax.lax.scan(
+            step, (params, opt), jnp.arange(fed.local_iters))
+        return params, opt, jnp.mean(losses)
+
+    def _local_sgd(self, params, batch, rng, lr):
+        fed = self.fed
+        task = self.task
+
+        def step(p, j):
+            loss, grads = self._value_and_grad(
+                task.loss, self._gathered(p), batch, None)
+            p = jax.tree.map(lambda t, g: (t - lr * g).astype(t.dtype),
+                             p, grads)
+            return p, loss
+
+        params, losses = jax.lax.scan(step, params, jnp.arange(fed.local_iters))
+        return params, jnp.mean(losses)
+
+    def _local_done(self, params, batch, rng, lr):
+        """DONE baseline: Richardson iteration for d ~= H^-1 g (HVPs).
+
+        Richardson requires alpha * (lmax + damping) < 2; non-IID clients
+        have wildly different local curvature, so alpha is set per client
+        from a short power-iteration estimate of lmax.
+        """
+        fed = self.fed
+        task = self.task
+        params_g = self._gathered(params)
+        loss, g = jax.value_and_grad(task.loss)(params_g, batch, None)
+        grad_fn = lambda p: jax.grad(task.loss)(p, batch, None)
+
+        def hvp(d):
+            return jax.jvp(grad_fn, (params_g,), (d,))[1]
+
+        def power(v, _):
+            hv = hvp(v)
+            nrm = jnp.sqrt(tree_sq_norm(hv)) + 1e-12
+            return jax.tree.map(lambda x: x / nrm, hv), nrm
+
+        v0 = jax.tree.map(
+            lambda x: x / (jnp.sqrt(tree_sq_norm(g)) + 1e-12), g)
+        _, norms = jax.lax.scan(power, v0, None, length=5)
+        lmax = norms[-1]
+        alpha = 0.9 / (lmax + fed.done_damping)
+
+        def rich(d, _):
+            hd = hvp(d)
+            # damped Richardson: d += alpha * (g - (H + delta I) d)
+            d = jax.tree.map(
+                lambda dd, gg, hh: dd + alpha
+                * (gg - hh - fed.done_damping * dd), d, g, hd)
+            return d, None
+
+        d, _ = jax.lax.scan(rich, tree_zeros_like(params), None,
+                            length=fed.done_richardson_iters)
+        # trust region: indefinite local Hessians can still blow the
+        # Richardson solve up on pathological non-IID clients — cap the
+        # Newton step at a multiple of the gradient norm.
+        gn = jnp.sqrt(tree_sq_norm(g))
+        dn = jnp.sqrt(tree_sq_norm(d))
+        cap = jnp.minimum(1.0, 10.0 * gn / (dn + 1e-12))
+        new = jax.tree.map(lambda t, dd: (t - lr * cap * dd).astype(t.dtype),
+                           params, d)
+        return new, loss
+
+    # ------------------------------------------------------------- the round
+    def round(self, state, batches, rng):
+        """batches: pytree with leading client axis C. Returns (state, metrics)."""
+        fed = self.fed
+        round_idx = state["round"]
+        lr = lr_at_round(fed, round_idx)
+        params = state["params"]
+        C = fed.num_clients
+        client_rngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
+            jnp.arange(C))
+
+        if fed.optimizer == "fed_sophia":
+            stateful = fed.persistent_client_state
+
+            def one(opt, batch, crng):
+                if opt is None:   # stateless: fresh EMAs each round
+                    opt = sophia.init_state(params)
+                return self._local_sophia(params, opt, batch, round_idx,
+                                          crng, lr)
+            if fed.strategy == "parallel":
+                if stateful:
+                    new_p, new_opt, losses = jax.vmap(one)(
+                        state["client_opt"], batches, client_rngs)
+                else:
+                    new_p, _, losses = jax.vmap(
+                        lambda b, r: one(None, b, r))(batches, client_rngs)
+                agg = tree_mean_axis0(new_p)
+            else:
+                def scan_body(acc, xs):
+                    if stateful:
+                        opt, batch, crng = xs
+                    else:
+                        batch, crng = xs
+                        opt = None
+                    p_i, opt_i, loss = one(opt, batch, crng)
+                    acc = jax.tree.map(lambda a, x: a + x / C, acc, p_i)
+                    return acc, ((opt_i, loss) if stateful else loss)
+                xs = ((state["client_opt"], batches, client_rngs)
+                      if stateful else (batches, client_rngs))
+                agg, ys = jax.lax.scan(scan_body, tree_zeros_like(params), xs)
+                new_opt, losses = ys if stateful else (None, ys)
+                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
+            state = {**state, "params": agg}
+            if stateful:
+                state["client_opt"] = new_opt
+
+        elif fed.optimizer in ("fedavg", "fedadam", "fedyogi"):
+            def one(batch, crng):
+                return self._local_sgd(params, batch, crng, lr)
+            if fed.strategy == "parallel":
+                new_p, losses = jax.vmap(one)(batches, client_rngs)
+                agg = tree_mean_axis0(new_p)
+            else:
+                def scan_body(acc, xs):
+                    batch, crng = xs
+                    p_i, loss = one(batch, crng)
+                    return jax.tree.map(lambda a, x: a + x / C, acc, p_i), loss
+                agg, losses = jax.lax.scan(
+                    scan_body, tree_zeros_like(params), (batches, client_rngs))
+                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
+            if fed.optimizer == "fedavg":
+                state = {**state, "params": agg}
+            else:
+                state = self._server_opt_update(state, agg)
+
+        elif fed.optimizer == "done":
+            def one(batch, crng):
+                return self._local_done(params, batch, crng, lr)
+            if fed.strategy == "parallel":
+                new_p, losses = jax.vmap(one)(batches, client_rngs)
+                agg = tree_mean_axis0(new_p)
+            else:
+                def scan_body(acc, xs):
+                    batch, crng = xs
+                    p_i, loss = one(batch, crng)
+                    return jax.tree.map(lambda a, x: a + x / C, acc, p_i), loss
+                agg, losses = jax.lax.scan(
+                    scan_body, tree_zeros_like(params), (batches, client_rngs))
+                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
+            state = {**state, "params": agg}
+        else:
+            raise ValueError(fed.optimizer)
+
+        state["round"] = round_idx + 1
+        metrics = {"loss": jnp.mean(losses), "lr": lr}
+        return state, metrics
+
+    # ------------------------------------------------ server-side optimizers
+    def _server_opt_update(self, state, agg):
+        """FedOpt family: Delta = params - mean(client params) is the
+        pseudo-gradient; apply Adam/Yogi on the server."""
+        fed = self.fed
+        params = state["params"]
+        so = state["server_opt"]
+        delta = jax.tree.map(jnp.subtract, params, agg)
+        m = jax.tree.map(lambda mm, d: fed.server_beta1 * mm
+                         + (1 - fed.server_beta1) * d, so["m"], delta)
+        if fed.optimizer == "fedadam":
+            v = jax.tree.map(lambda vv, d: fed.server_beta2 * vv
+                             + (1 - fed.server_beta2) * d * d, so["v"], delta)
+        else:  # fedyogi
+            v = jax.tree.map(
+                lambda vv, d: vv - (1 - fed.server_beta2) * d * d
+                * jnp.sign(vv - d * d), so["v"], delta)
+        new_params = jax.tree.map(
+            lambda p, mm, vv: (p - fed.server_lr * mm
+                               / (jnp.sqrt(vv) + fed.server_eps)).astype(p.dtype),
+            params, m, v)
+        return {**state, "params": new_params,
+                "server_opt": {"m": m, "v": v}}

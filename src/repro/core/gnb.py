@@ -1,0 +1,28 @@
+"""Gauss-Newton-Bartlett diagonal Hessian estimator (Alg. 2).
+
+    1. compute logits phi(theta, x_b) on the minibatch
+    2. sample y_b ~ softmax(logits)
+    3. g_hat = grad of (1/B) sum CE(logits, y_b)   w.r.t. theta
+    4. h_hat = B * g_hat ⊙ g_hat
+
+The sampled labels are stop-gradient'd; the backward pass reuses the same
+graph as the training loss, so GSPMD partitions it identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gnb_estimate(task, params, batch, rng, vg_fn=None):
+    """Returns the h_hat pytree (same structure as params).
+
+    vg_fn: optional (loss_fn, params, batch, rng) -> (loss, grads), used by
+    the engine to micro-batch the estimator backward pass (exact — g_hat is
+    the mean over the full minibatch either way)."""
+    if vg_fn is None:
+        g_hat = jax.grad(task.sampled_loss)(params, batch, rng)
+    else:
+        _, g_hat = vg_fn(task.sampled_loss, params, batch, rng)
+    B = task.gnb_batch_size(batch)
+    return jax.tree.map(lambda g: B * g * g, g_hat)

@@ -1,0 +1,32 @@
+"""Learning-rate schedules over communication rounds.
+
+WSD (warmup-stable-decay) is included because the minicpm-2b assigned
+architecture cites it as its training schedule [arXiv:2404.06395].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+
+
+def lr_at_round(fed: FedConfig, round_idx):
+    """Traced-friendly lr(round). round_idx may be a tracer."""
+    r = jnp.asarray(round_idx, jnp.float32)
+    total = max(fed.total_rounds, 1)
+    warm = fed.warmup_rounds
+    base = fed.lr
+    if fed.schedule == "const":
+        lr = jnp.full((), base)
+    elif fed.schedule == "cosine":
+        t = jnp.clip((r - warm) / max(total - warm, 1), 0.0, 1.0)
+        lr = base * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif fed.schedule == "wsd":
+        decay_start = total * (1.0 - fed.decay_frac)
+        t = jnp.clip((r - decay_start) / max(total * fed.decay_frac, 1), 0.0, 1.0)
+        lr = base * (1.0 - t * (1.0 - 0.1))      # linear decay to 10%
+    else:
+        raise ValueError(fed.schedule)
+    if warm > 0:
+        lr = lr * jnp.clip((r + 1.0) / warm, 0.0, 1.0)
+    return lr

@@ -1,0 +1,73 @@
+"""The Sophia update (Liu et al. 2023) as used by Fed-Sophia (Alg. 1).
+
+Pure-JAX reference implementation; ``repro.kernels`` provides a fused
+Pallas version with identical semantics (selected via use_pallas).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SophiaState(NamedTuple):
+    m: object   # EMA of gradients       (Eq. 9)
+    h: object   # EMA of Hessian diag    (Eq. 10)
+
+
+def init_state(params) -> SophiaState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return SophiaState(m=zeros, h=jax.tree.map(jnp.zeros_like, params))
+
+
+def update_m(m, grads, beta1: float):
+    """Eq. 9: m <- b1 m + (1-b1) g."""
+    return jax.tree.map(lambda mm, g: beta1 * mm + (1.0 - beta1) * g, m, grads)
+
+
+def update_h(h, h_hat, beta2: float):
+    """Eq. 10: h <- b2 h + (1-b2) h_hat."""
+    return jax.tree.map(lambda hh, e: beta2 * hh + (1.0 - beta2) * e, h, h_hat)
+
+
+def clip(z, rho: float):
+    """Eq. 11: elementwise clip to [-rho, rho]."""
+    return jnp.clip(z, -rho, rho)
+
+
+def apply_update(params, m, h, *, lr: float, rho: float, eps: float,
+                 weight_decay: float):
+    """Alg. 1 lines 15-16: decoupled weight decay then clipped
+    pre-conditioned step  theta <- theta - lr*clip(m / max(h, eps), rho)."""
+    def leaf(theta, mm, hh):
+        dtype = theta.dtype
+        theta = theta - lr * weight_decay * theta
+        step = clip(mm / jnp.maximum(hh, eps), rho)
+        return (theta - lr * step).astype(dtype)
+    return jax.tree.map(leaf, params, m, h)
+
+
+def sophia_step(params, grads, state: SophiaState, h_hat, do_h_update,
+                *, lr, beta1, beta2, rho, eps, weight_decay,
+                use_pallas: bool = False):
+    """One full local iteration of Alg. 1 (lines 7-16).
+
+    h_hat: GNB estimate pytree (only consumed when do_h_update).
+    do_h_update: traced bool — h-EMA applied under lax.cond-style select.
+    """
+    if use_pallas:
+        # single fused Pallas pass: m-EMA, gated h-EMA, decay, clip, update
+        from repro.kernels.ops import sophia_fused_step
+        params, m, h = sophia_fused_step(
+            params, state.m, state.h, grads, h_hat, do_h_update,
+            lr=lr, beta1=beta1, beta2=beta2, rho=rho, eps=eps,
+            weight_decay=weight_decay)
+        return params, SophiaState(m=m, h=h)
+    m = update_m(state.m, grads, beta1)
+    h_new = update_h(state.h, h_hat, beta2)
+    h = jax.tree.map(
+        lambda new, old: jnp.where(do_h_update, new, old), h_new, state.h)
+    params = apply_update(params, m, h, lr=lr, rho=rho, eps=eps,
+                          weight_decay=weight_decay)
+    return params, SophiaState(m=m, h=h)

@@ -1,0 +1,76 @@
+"""jit'd pytree-level wrappers around the Pallas kernels.
+
+``sophia_apply_fused`` packs every floating leaf of the param pytree into
+one flat (R, C) buffer, runs the fused kernel once, and unpacks — one
+kernel launch per local iteration regardless of model structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sophia_update import BLOCK_C, sophia_update_flat
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pack(trees):
+    """Flatten+concat each tree along leaves -> (flat_2d list, meta)."""
+    leaves0, treedef = jax.tree_util.tree_flatten(trees[0])
+    sizes = [l.size for l in leaves0]
+    shapes = [l.shape for l in leaves0]
+    dtypes = [l.dtype for l in leaves0]
+    total = sum(sizes)
+    C = BLOCK_C
+    R = -(-total // C)
+    pad = R * C - total
+
+    def flat(tree):
+        ls = jax.tree_util.tree_flatten(tree)[0]
+        v = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in ls])
+        return jnp.pad(v, (0, pad)).reshape(R, C)
+
+    meta = (treedef, sizes, shapes, dtypes, total)
+    return [flat(t) for t in trees], meta
+
+
+def _unpack(flat2d, meta):
+    treedef, sizes, shapes, dtypes, total = meta
+    v = flat2d.reshape(-1)[:total]
+    out, off = [], 0
+    for sz, shp, dt in zip(sizes, shapes, dtypes):
+        out.append(v[off:off + sz].reshape(shp).astype(dt))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sophia_fused_step(params, m, h, grads, h_hat, do_h, *, lr, beta1, beta2,
+                      rho, eps, weight_decay, interpret=None):
+    """Fused m-EMA + h-EMA-select + decay + clip + update over a pytree.
+
+    Returns (new_params, new_m, new_h).
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    (t2, m2, h2, g2, hh2), meta = _pack([params, m, h, grads, h_hat])
+    t2, m2, h2 = sophia_update_flat(
+        t2, m2, h2, g2, hh2, do_h, lr, beta1=beta1, beta2=beta2,
+        rho=rho, eps=eps, weight_decay=weight_decay, interpret=interpret)
+    return _unpack(t2, meta), _unpack(m2, meta), _unpack(h2, meta)
+
+
+def sophia_apply_fused(params, m, h, *, lr, rho, eps, weight_decay,
+                       interpret=None):
+    """Apply-only variant used by core.sophia when the EMAs are already
+    updated (matches sophia.apply_update semantics)."""
+    if interpret is None:
+        interpret = _INTERPRET
+    (t2, m2, h2), meta = _pack([params, m, h])
+    zeros = jnp.zeros_like(t2)
+    # beta1=1, beta2=1 make the EMAs no-ops; do_h=0 keeps h unchanged.
+    t2, _, _ = sophia_update_flat(
+        t2, m2, h2, zeros, zeros, 0.0, lr, beta1=1.0, beta2=1.0,
+        rho=rho, eps=eps, weight_decay=weight_decay, interpret=interpret)
+    return _unpack(t2, meta)

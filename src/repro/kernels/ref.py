@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sophia_update_ref(theta, m, h, g, h_hat, do_h, *, lr, beta1, beta2,
+                      rho, eps, weight_decay):
+    """Reference semantics of the fused Sophia update (flat arrays)."""
+    do_h = jnp.asarray(do_h, jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * g
+    h_new = beta2 * h + (1.0 - beta2) * h_hat
+    h = do_h * h_new + (1.0 - do_h) * h
+    theta = theta - lr * weight_decay * theta
+    step = jnp.clip(m / jnp.maximum(h, eps), -rho, rho)
+    return theta - lr * step, m, h

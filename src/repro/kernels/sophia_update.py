@@ -1,0 +1,79 @@
+"""Fused Sophia parameter update as a Pallas TPU kernel.
+
+The Sophia local iteration is an elementwise state machine over theta/m/h/g
+(Alg. 1 lines 8, 11, 15-16). Left to XLA it becomes ~8 HBM-bound
+elementwise ops (m-EMA, h-EMA select, max, div, clip, decay, axpy); fusing
+them into one VMEM pass reads each of the 4 input streams once and writes
+3 output streams once — the HBM-roofline optimum for this op.
+
+TPU mapping: parameters are flattened and tiled into (8, 1024)-multiples
+(fp32 VREG tiling is (8,128); 1024 lanes amortises grid overhead).
+Each grid step owns one (BLOCK_R, BLOCK_C) tile in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 1024
+
+
+def _sophia_kernel(theta_ref, m_ref, h_ref, g_ref, hhat_ref, flags_ref,
+                   theta_out, m_out, h_out, *, beta1, beta2, rho, eps,
+                   weight_decay):
+    """One VMEM tile of the fused update.
+
+    flags_ref: (1, 2) scalars — [do_h_update (0/1), lr]. Runtime inputs
+    (lr is schedule-driven and traced).
+    """
+    do_h = flags_ref[0, 0]
+    lr = flags_ref[0, 1]
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g                     # Eq. 9
+    h_new = beta2 * h_ref[...] + (1.0 - beta2) * hhat_ref[...]     # Eq. 10
+    h = do_h * h_new + (1.0 - do_h) * h_ref[...]
+    theta = theta_ref[...]
+    theta = theta - lr * weight_decay * theta                      # line 15
+    step = m / jnp.maximum(h, eps)
+    step = jnp.clip(step, -rho, rho)                               # Eq. 11
+    theta_out[...] = theta - lr * step                             # line 16
+    m_out[...] = m
+    h_out[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "rho",
+                                             "eps", "weight_decay",
+                                             "interpret"))
+def sophia_update_flat(theta, m, h, g, h_hat, do_h, lr, *, beta1, beta2,
+                       rho, eps, weight_decay, interpret: bool = True):
+    """Fused update over a flat (R, C) fp32 view. Returns (theta, m, h).
+
+    interpret=True executes the kernel body in Python on CPU (this
+    container); on a real TPU pass interpret=False.
+    """
+    R, C = theta.shape
+    br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
+    grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
+    flags = jnp.stack([jnp.asarray(do_h, jnp.float32).reshape(()),
+                       jnp.asarray(lr, jnp.float32).reshape(())]
+                      ).reshape(1, 2)
+
+    tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    smem = pl.BlockSpec((1, 2), lambda i, j: (0, 0))
+
+    kernel = functools.partial(
+        _sophia_kernel, beta1=beta1, beta2=beta2, rho=rho, eps=eps,
+        weight_decay=weight_decay)
+    out_shape = [jax.ShapeDtypeStruct((R, C), theta.dtype)] * 3
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, tile, smem],
+        out_specs=[tile, tile, tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(theta, m, h, g, h_hat, flags)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+# ^ MUST precede every other import: jax locks device count on first init.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import api
+from repro.launch.mesh import make_production_mesh, make_small_mesh
+from repro.launch.hlo_cost import HloCost
+from repro.launch.roofline import (collective_bytes, count_params,
+                                   model_flops, roofline_terms)
+
+
+def _mem_dict(mem):
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def parse_overrides(s: str) -> dict:
+    """'k=v,k2=v2' -> {k: v} (values stay strings; api coerces)."""
+    out = {}
+    for kv in (s or "").split(","):
+        if "=" in kv:
+            k, _, v = kv.partition("=")
+            out[k.strip()] = v.strip()
+    return out
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            reduced: bool = False, small_mesh: bool = False,
+            optimizer: str = "fed_sophia", local_iters: int = 10,
+            out_dir: str = "experiments/dryrun", tag: str = "",
+            cfg_overrides: dict | None = None,
+            fed_overrides: dict | None = None,
+            fsdp_gather: bool = True) -> dict:
+    mesh_name = ("small" if small_mesh else "prod") + \
+        ("2pod" if multi_pod else "1pod")
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "optimizer": optimizer, "tag": tag}
+    ok, reason = api.applicable(arch, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _save(rec, out_dir, arch, shape, mesh_name, optimizer, tag)
+        return rec
+
+    mesh = (make_small_mesh(multi_pod=multi_pod) if small_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    rec["mesh_shape"] = {k: int(v) for k, v in mesh.shape.items()}
+    t0 = time.time()
+    try:
+        kw = {"cfg_overrides": cfg_overrides}
+        if INPUT_SHAPES[shape].kind == "train":
+            kw.update(optimizer=optimizer, local_iters=local_iters,
+                      fsdp_gather=fsdp_gather,
+                      fed_overrides=fed_overrides)
+        bundle = api.build(arch, shape, mesh, reduced=reduced, **kw)
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings)
+            lowered = jitted.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = _mem_dict(compiled.memory_analysis())
+            cost = dict(compiled.cost_analysis() or {})
+            hlo = compiled.as_text()
+        # loop-aware cost model (XLA's counts while bodies only once)
+        hc = HloCost(hlo).summary()
+        flops = float(hc["flops"])
+        byts = float(hc["bytes"])
+        coll = dict(hc["collectives"])
+        coll["total"] = hc["collective_total"]
+        terms = roofline_terms(flops, byts, coll["total"])
+        cfg = bundle.meta["cfg"]
+        nchips = 1
+        for v in mesh.shape.values():
+            nchips *= int(v)
+        mflops = model_flops(cfg, shape, local_iters=local_iters) \
+            if not reduced else 0.0
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            entry=bundle.meta["entry"],
+            memory=mem,
+            hlo_flops_per_dev=flops,
+            hlo_bytes_per_dev=byts,
+            xla_cost_analysis={k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float))
+                               and k in ("flops", "bytes accessed",
+                                         "transcendentals")},
+            collective_bytes=coll,
+            roofline=terms,
+            params=count_params(cfg),
+            model_flops_total=mflops,
+            useful_flops_ratio=(mflops / (flops * nchips)
+                                if flops and mflops else None),
+            hlo_collective_ops={k: v for k, v in coll.items()
+                                if k != "total"},
+            bytes_by_opcode=hc.get("bytes_by_opcode", {}),
+            flops_by_opcode=hc.get("flops_by_opcode", {}),
+        )
+    except Exception as e:                            # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _save(rec, out_dir, arch, shape, mesh_name, optimizer, tag)
+    return rec
+
+
+def _save(rec, out_dir, arch, shape, mesh_name, optimizer, tag):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    fn = f"{arch}_{shape}_{mesh_name}"
+    if optimizer != "fed_sophia":
+        fn += f"_{optimizer}"
+    if tag:
+        fn += f"_{tag}"
+    with open(os.path.join(out_dir, fn + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run 1-pod and 2-pod for each combo")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced model dims (CI smoke)")
+    ap.add_argument("--small-mesh", action="store_true",
+                    help="8-device mesh (CI smoke)")
+    ap.add_argument("--optimizer", default="fed_sophia")
+    ap.add_argument("--local-iters", type=int, default=10)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--overrides", default="",
+                    help="ModelConfig overrides, e.g. slstm_unroll=16")
+    ap.add_argument("--fed-overrides", default="",
+                    help="FedConfig overrides, e.g. hessian_every_unit=round")
+    ap.add_argument("--no-fsdp-gather", action="store_true",
+                    help="§Perf baseline: skip the explicit FSDP gather "
+                         "constraint in sequential-strategy training")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.overrides)
+
+    archs = configs.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_one(arch, shape, multi_pod=mp,
+                              reduced=args.reduced,
+                              small_mesh=args.small_mesh,
+                              optimizer=args.optimizer,
+                              local_iters=args.local_iters,
+                              out_dir=args.out_dir, tag=args.tag,
+                              cfg_overrides=overrides,
+                              fed_overrides=parse_overrides(
+                                  args.fed_overrides),
+                              fsdp_gather=not args.no_fsdp_gather)
+                status = rec["status"]
+                line = f"[{status:7s}] {arch:24s} {shape:12s} {rec['mesh']}"
+                if status == "ok":
+                    r = rec["roofline"]
+                    line += (f" compile={rec['compile_s']:.1f}s"
+                             f" flops/dev={rec['hlo_flops_per_dev']:.3g}"
+                             f" coll={rec['collective_bytes']['total']:.3g}B"
+                             f" bottleneck={r['bottleneck']}")
+                elif status == "skipped":
+                    line += f" ({rec['reason']})"
+                else:
+                    line += f" {rec['error'][:160]}"
+                    failures += 1
+                print(line, flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,443 @@
+"""Loop-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scan-over-layers / local-iteration / kv-chunk loops by their
+trip counts. This analyzer parses the post-SPMD HLO module, walks the call
+graph (entry -> calls/fusions/whiles/conditionals), extracts while trip
+counts from their condition computations, and accumulates:
+
+  * flops            — dot/convolution from shapes (2*M*N*K), elementwise ~1/elem
+  * bytes            — operands+outputs of top-level (fusion-boundary) ops
+  * collective bytes — per kind, ring-algorithm accounting (see roofline.py)
+
+Conditionals are counted at the max over branches (conservative: the GNB
+branch runs on Hessian-refresh steps).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|called_computations=\{|calls)="
+    r"?%?([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+
+def _shape_list(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    return sum(_DTYPE_BYTES[dt] * (math.prod(dims) if dims else 1)
+               for dt, dims in shapes)
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_shapes: list
+    operand_names: list
+    attrs: str
+    called: List[str] = field(default_factory=list)
+    body: Optional[str] = None
+    condition: Optional[str] = None
+    raw: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("{" in line):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, out_txt, opcode, rest = m.groups()
+        # split rest at the closing paren of the operand list
+        depth, idx = 1, 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands_txt, attrs = rest[:idx], rest[idx + 1:]
+        called = []
+        for cm in re.finditer(
+                r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)", attrs):
+            called.append(cm.group(1))
+        fm = re.search(r"called_computations=\{([^}]*)\}", attrs)
+        if fm:
+            called += [c.strip().lstrip("%")
+                       for c in fm.group(1).split(",") if c.strip()]
+        opnames = re.findall(r"%([\w.\-]+)", operands_txt)
+        bm = re.search(r"body=%?([\w.\-]+)", attrs)
+        cm2 = re.search(r"condition=%?([\w.\-]+)", attrs)
+        cur.ops.append(Op(name, opcode, _shape_list(out_txt),
+                          opnames, attrs, called,
+                          body=bm.group(1) if bm else None,
+                          condition=cm2.group(1) if cm2 else None,
+                          raw=line))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def build_symbols(comps) -> Dict[str, list]:
+    """op name -> output shape list (names are module-unique)."""
+    table: Dict[str, list] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            table[op.name] = op.out_shapes
+    return table
+
+
+def _while_trip_count(comps, cond_name: str) -> int:
+    """Heuristic: largest integer constant in the condition computation
+    (our scans lower to `i < N`). Falls back to 1."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    # constants appear as: %c = s32[] constant(40)
+    for op in cond.ops:
+        for m in re.finditer(r"constant\((\d+)\)", op.raw):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _collective_moved(opcode: str, out_b: int, in_b: int) -> float:
+    base = opcode.replace("-start", "")
+    if base == "all-gather":
+        return max(out_b - in_b, 0)
+    if base == "all-reduce":
+        return 2.0 * in_b
+    return float(in_b)
+
+
+def _dot_flops(op: Op, operand_shapes) -> float:
+    out_elems = sum(math.prod(d) if d else 1 for _, d in op.out_shapes)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    k = 1
+    if m and operand_shapes:
+        lhs_dims = operand_shapes[0][1]
+        for i in m.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                k *= lhs_dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self.symbols = build_symbols(self.comps)
+        self._memo: Dict[Tuple[str, bool], dict] = {}
+
+    def _operand_shapes(self, op: Op) -> list:
+        out = []
+        for n in op.operand_names:
+            out.extend(self.symbols.get(n, []))
+        return out
+
+    def _fusion_effective_bytes(self, op: Op) -> Tuple[float, float]:
+        """Effective HBM (read, write) bytes of a fusion.
+
+        * A parameter whose only in-fusion uses are dynamic-slice/gather
+          (operand 0) is read slice-wise — KV caches / scan xs buffers.
+        * A root (or root-tuple element) that is a dynamic-update-slice
+          writes only the update slice — XLA aliases the buffer in-place
+          (scan ys accumulation) — and the aliased input param is free.
+        """
+        out_full = float(_bytes_of(op.out_shapes))
+        comp = self.comps.get(op.called[0]) if op.called else None
+        if comp is None or not comp.ops:
+            return float(_bytes_of(self._operand_shapes(op))), out_full
+        pidx = {}
+        for o in comp.ops:
+            if o.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o.raw)
+                if m:
+                    pidx[o.name] = int(m.group(1))
+        byname = {o.name: o for o in comp.ops}
+        # ---- outputs: root DUS elements write slice-wise, alias their dst
+        root = comp.ops[-1]
+        roots = ([byname[n] for n in root.operand_names if n in byname]
+                 if root.opcode == "tuple" else [root])
+        out_eff, aliased = 0.0, set()
+        for r in roots:
+            if r.opcode == "dynamic-update-slice" and len(r.operand_names) >= 2:
+                upd = byname.get(r.operand_names[1])
+                out_eff += float(_bytes_of(upd.out_shapes)) if upd else 0.0
+                dst = r.operand_names[0]
+                if dst in pidx:
+                    aliased.add(dst)
+            else:
+                out_eff += float(_bytes_of(r.out_shapes))
+        if root.opcode != "tuple" and not roots:
+            out_eff = out_full
+        out_eff = min(out_eff, out_full) if roots else out_full
+        # ---- inputs: slice-wise params
+        eff = {}
+        for o in comp.ops:
+            for n in o.operand_names:
+                if n not in pidx:
+                    continue
+                if o.opcode in ("dynamic-slice", "gather", "slice") \
+                        and o.operand_names and o.operand_names[0] == n:
+                    cur = eff.get(n)
+                    if cur is None or cur[0] == "slice":
+                        eff[n] = ("slice",
+                                  (cur[1] if cur else 0.0)
+                                  + _bytes_of(o.out_shapes))
+                elif o.opcode == "dynamic-update-slice" \
+                        and o.operand_names and o.operand_names[0] == n \
+                        and o in roots:
+                    pass                      # aliased destination
+                else:
+                    eff[n] = ("full", None)
+        tot = 0.0
+        for name, idx in pidx.items():
+            if name in aliased and eff.get(name, ("x",))[0] != "full":
+                continue
+            opname = (op.operand_names[idx]
+                      if idx < len(op.operand_names) else None)
+            full_b = float(_bytes_of(self.symbols.get(opname, [])))
+            kind = eff.get(name, ("full", None))
+            tot += min(kind[1], full_b) if kind[0] == "slice" else full_b
+        return tot, out_eff
+
+    def _zero(self):
+        return {"flops": 0.0, "bytes": 0.0,
+                "collectives": {k: 0.0 for k in _COLL_KINDS},
+                "by_opcode": {}}
+
+    def _add(self, a, b, scale=1.0):
+        a["flops"] += b["flops"] * scale
+        a["bytes"] += b["bytes"] * scale
+        for k in _COLL_KINDS:
+            a["collectives"][k] += b["collectives"][k] * scale
+        for k, (f, by) in b["by_opcode"].items():
+            cf, cb = a["by_opcode"].get(k, (0.0, 0.0))
+            a["by_opcode"][k] = (cf + f * scale, cb + by * scale)
+
+    @staticmethod
+    def _tally(total, opcode, flops, byts):
+        total["flops"] += flops
+        total["bytes"] += byts
+        f, b = total["by_opcode"].get(opcode, (0.0, 0.0))
+        total["by_opcode"][opcode] = (f + flops, b + byts)
+
+    def analyze(self, comp_name: str = "__entry__",
+                inside_fusion: bool = False) -> dict:
+        key = (comp_name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = self._zero()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return total
+        self._memo[key] = total          # guard cycles
+        for op in comp.ops:
+            oc = op.opcode
+            operand_shapes = self._operand_shapes(op)
+            out_b = _bytes_of(op.out_shapes)
+            in_b = _bytes_of(operand_shapes)
+            base = oc.replace("-start", "").replace("-done", "")
+            if oc.endswith("-done"):
+                continue
+            if base in _COLL_KINDS:
+                total["collectives"][base] += _collective_moved(
+                    oc, out_b, in_b)
+                self._tally(total, base, 0.0, out_b + in_b)
+            elif oc in ("dot", "dot-general"):
+                self._tally(total, "dot", _dot_flops(op, operand_shapes),
+                            0.0 if inside_fusion else out_b + in_b)
+            elif oc == "convolution":
+                # approximate: 2 * out_elems * kernel-elems-per-out-channel
+                if len(operand_shapes) > 1 and operand_shapes[1][1]:
+                    kdims = operand_shapes[1][1]
+                    ratio = math.prod(kdims) / max(kdims[-1], 1)
+                else:
+                    ratio = 1
+                out_e = sum(math.prod(d) if d else 1
+                            for _, d in op.out_shapes)
+                self._tally(total, oc, 2.0 * out_e * ratio,
+                            0.0 if inside_fusion else out_b + in_b)
+            elif oc in ("dynamic-slice", "gather", "slice"):
+                # reads only the slice it extracts (+ writes it): NOT the
+                # full operand buffer — scan xs/cache lookups hit this.
+                self._tally(total, oc, 0.0,
+                            0.0 if inside_fusion else 2.0 * out_b)
+            elif oc in ("dynamic-update-slice", "scatter"):
+                # in-place: read update slice + write the region it covers.
+                upd_i = 1 if oc == "dynamic-update-slice" else 2
+                upd_b = (_bytes_of(operand_shapes[upd_i:upd_i + 1])
+                         if len(operand_shapes) > upd_i else out_b)
+                self._tally(total, oc, 0.0,
+                            0.0 if inside_fusion else 2.0 * upd_b)
+            elif oc == "fusion":
+                sub = self.analyze(op.called[0], True) if op.called \
+                    else self._zero()
+                self._add(total, sub)
+                # fusion boundary traffic: slice-wise reads for operands
+                # only dynamic-sliced inside; slice-wise writes for
+                # in-place dynamic-update-slice roots (scan accumulators).
+                eff_in, eff_out = (self._fusion_effective_bytes(op)
+                                   if op.called else (in_b, out_b))
+                self._tally(total, "fusion", 0.0, eff_out + eff_in)
+            elif oc == "while":
+                trips = (_while_trip_count(self.comps, op.condition)
+                         if op.condition else 1)
+                sub = (self.analyze(op.body, False) if op.body
+                       else self._zero())
+                self._add(total, sub, scale=trips)
+            elif oc == "conditional":
+                branches = [self.analyze(c, False) for c in op.called]
+                if branches:
+                    best = max(branches, key=lambda s: s["flops"])
+                    self._add(total, best)
+            elif oc in ("call", "custom-call", "async-start"):
+                for c in op.called:
+                    self._add(total, self.analyze(c, inside_fusion))
+                if oc == "custom-call" and not inside_fusion:
+                    total["bytes"] += out_b + in_b
+            else:
+                # elementwise & misc: ~1 flop/elem; bytes at top level only
+                total["flops"] += sum(math.prod(d) if d else 1
+                                      for _, d in op.out_shapes)
+                if not inside_fusion and oc not in (
+                        "parameter", "constant", "tuple",
+                        "get-tuple-element", "bitcast"):
+                    total["bytes"] += out_b + in_b
+        self._memo[key] = total
+        return total
+
+    def top_contributors(self, n: int = 25) -> List[dict]:
+        """Heaviest individual ops (bytes x loop-trip scale). Walks the call
+        tree with the accumulated trip multiplier so a fusion inside a
+        48-layer scan x 128-chunk scan shows its true total."""
+        acc: Dict[str, dict] = {}
+
+        def walk(comp_name: str, scale: float, inside_fusion: bool,
+                 depth: int = 0):
+            comp = self.comps.get(comp_name)
+            if comp is None or depth > 40:
+                return
+            for op in comp.ops:
+                oc = op.opcode
+                base = oc.replace("-start", "").replace("-done", "")
+                if oc.endswith("-done"):
+                    continue
+                out_b = _bytes_of(op.out_shapes)
+                in_b = _bytes_of(self._operand_shapes(op))
+                byts = flops = 0.0
+                if base in _COLL_KINDS:
+                    byts = out_b + in_b
+                elif oc in ("dot", "dot-general"):
+                    flops = _dot_flops(op, self._operand_shapes(op))
+                    byts = 0 if inside_fusion else out_b + in_b
+                elif oc in ("dynamic-slice", "gather", "slice"):
+                    byts = 0 if inside_fusion else 2.0 * out_b
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    sh = self._operand_shapes(op)
+                    i = 1 if oc == "dynamic-update-slice" else 2
+                    byts = 0 if inside_fusion else 2.0 * _bytes_of(
+                        sh[i:i + 1] if len(sh) > i else op.out_shapes)
+                elif oc == "fusion":
+                    eff_in, eff_out = (self._fusion_effective_bytes(op)
+                                       if op.called else (in_b, out_b))
+                    byts = eff_out + eff_in
+                    walk(op.called[0], scale, True, depth + 1) \
+                        if op.called else None
+                elif oc == "while":
+                    trips = (_while_trip_count(self.comps, op.condition)
+                             if op.condition else 1)
+                    if op.body:
+                        walk(op.body, scale * trips, False, depth + 1)
+                elif oc == "conditional":
+                    for c in op.called:
+                        walk(c, scale, False, depth + 1)
+                elif oc in ("call", "custom-call", "async-start"):
+                    for c in op.called:
+                        walk(c, scale, inside_fusion, depth + 1)
+                    if oc == "custom-call" and not inside_fusion:
+                        byts = out_b + in_b
+                else:
+                    flops = sum(math.prod(d) if d else 1
+                                for _, d in op.out_shapes)
+                    if inside_fusion or oc in (
+                            "parameter", "constant", "tuple",
+                            "get-tuple-element", "bitcast"):
+                        byts = 0
+                    else:
+                        byts = out_b + in_b
+                if byts * scale or flops * scale:
+                    key = op.name
+                    e = acc.setdefault(key, dict(
+                        name=op.name, opcode=oc, bytes=0.0, flops=0.0,
+                        scale=scale,
+                        shape=op.raw.split("=")[1].strip()[:60] if "=" in op.raw else ""))
+                    e["bytes"] += byts * scale
+                    e["flops"] += flops * scale
+
+        walk("__entry__", 1.0, False)
+        return sorted(acc.values(), key=lambda e: -e["bytes"])[:n]
+
+    def summary(self) -> dict:
+        res = self.analyze()
+        out = {"flops": res["flops"], "bytes": res["bytes"],
+               "collectives": dict(res["collectives"])}
+        out["collective_total"] = sum(out["collectives"].values())
+        out["bytes_by_opcode"] = dict(sorted(
+            ((k, round(v[1])) for k, v in res["by_opcode"].items()),
+            key=lambda kv: -kv[1])[:12])
+        out["flops_by_opcode"] = dict(sorted(
+            ((k, round(v[0])) for k, v in res["by_opcode"].items()),
+            key=lambda kv: -kv[1])[:8])
+        return out

@@ -1,0 +1,36 @@
+"""Production mesh construction (TPU v5e pods; CPU placeholder devices in
+the dry-run). Functions, not module-level constants, so importing never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_small_mesh(*, multi_pod: bool = False):
+    """Reduced-footprint mesh for tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def client_axes(mesh) -> tuple:
+    """Clients lay out over (pod, data): in-pod mean then cross-pod mean =
+    the hierarchical PS aggregation of DESIGN.md §3."""
+    return data_axes(mesh)
+
+
+# TPU v5e hardware constants for the roofline model (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

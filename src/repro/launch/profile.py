@@ -1,0 +1,70 @@
+"""Dry-run profiler: lower one (arch x shape x mesh) combo and print the
+heaviest individual HLO ops (bytes x loop-trip scale) — the §Perf
+hypothesis-forming view.
+
+    PYTHONPATH=src python -m repro.launch.profile --arch xlstm-1.3b \
+        --shape prefill_32k [--multi-pod] [--top 25] [--dump-hlo out.txt]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+import argparse
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import api
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_cost import HloCost
+from repro.launch.roofline import roofline_terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--optimizer", default="fed_sophia")
+    ap.add_argument("--local-iters", type=int, default=10)
+    ap.add_argument("--dump-hlo", default="")
+    ap.add_argument("--overrides", default="")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import parse_overrides
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    kw = {"cfg_overrides": parse_overrides(args.overrides)}
+    if INPUT_SHAPES[args.shape].kind == "train":
+        kw.update(optimizer=args.optimizer, local_iters=args.local_iters)
+    bundle = api.build(args.arch, args.shape, mesh, **kw)
+    with mesh:
+        lowered = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                          out_shardings=bundle.out_shardings)
+        compiled = lowered.lower(*bundle.args).compile()
+        hlo = compiled.as_text()
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(hlo)
+        print(f"HLO -> {args.dump_hlo} ({len(hlo)} chars)")
+    hc = HloCost(hlo)
+    s = hc.summary()
+    terms = roofline_terms(s["flops"], s["bytes"], s["collective_total"])
+    print(f"flops/dev={s['flops']:.3g}  bytes/dev={s['bytes']:.3g}  "
+          f"coll/dev={s['collective_total']:.3g}")
+    print("roofline:", {k: (f"{v:.4g}" if isinstance(v, float) else v)
+                        for k, v in terms.items()})
+    print("\nbytes by opcode:")
+    for k, v in s["bytes_by_opcode"].items():
+        print(f"  {k:24s} {v:.4g}")
+    print(f"\ntop {args.top} ops by bytes (scale = loop trip multiplier):")
+    hdr = f"{'bytes':>12s} {'flops':>12s} {'scale':>8s} {'opcode':20s} shape"
+    print(hdr)
+    for e in hc.top_contributors(args.top):
+        print(f"{e['bytes']:12.4g} {e['flops']:12.4g} {e['scale']:8.0f} "
+              f"{e['opcode']:20s} {e['shape'][:70]}")
+
+
+if __name__ == "__main__":
+    main()

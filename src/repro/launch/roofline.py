@@ -1,0 +1,128 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI link bw
+
+cost_analysis() reports the per-device (post-SPMD) module, so the
+"/ chips" in the spec formulas is already applied. Collective bytes are
+parsed from the partitioned HLO text with ring-algorithm accounting:
+
+  all-gather          output - operand     (bytes received per device)
+  reduce-scatter      operand bytes        (bytes sent per device)
+  all-reduce          2 x operand bytes    (reduce-scatter + all-gather)
+  all-to-all          operand bytes
+  collective-permute  operand bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\b")
+
+_MULT = {"all-reduce": 2.0, "all-gather": -1.0,  # output - operand
+         "reduce-scatter": 1.0, "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bs = _DTYPE_BYTES.get(dtype)
+    if bs is None:
+        return 0                       # token types etc.
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bs
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved over ICI, by collective kind."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "=" not in line:
+            continue
+        if "-done" in line[m.start():m.end() + 6]:
+            continue                   # -done pairs with -start; count once
+        kind = m.group(1)
+        lhs, _, rhs = line.partition("=")
+        rhs_head, _, rhs_args = rhs.partition("(")
+        out_bytes = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(rhs_head))
+        operand_bytes = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(rhs_args))
+        if kind == "all-gather":
+            moved = max(out_bytes - operand_bytes, 0)
+        else:
+            moved = _MULT[kind] * operand_bytes
+        out[kind] = out.get(kind, 0.0) + moved
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    terms = {
+        "compute_s": flops_per_dev / PEAK_FLOPS_BF16,
+        "memory_s": bytes_per_dev / HBM_BW,
+        "collective_s": coll_bytes_per_dev / ICI_BW,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    ).replace("_s", "")
+    return terms
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS (useful work) per entry point
+# --------------------------------------------------------------------------
+
+def count_params(cfg) -> Dict[str, float]:
+    """Total and active (MoE top-k) parameter counts from shapes alone."""
+    import jax
+
+    from repro.models import transformer as T
+
+    params = jax.eval_shape(lambda k: T.init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    total = expert = 0
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.moe is not None and "ffn" in pstr and "shared" not in pstr \
+                and pstr.split("/")[-1] in ("w_gate", "w_up", "w_down"):
+            expert += n
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += expert * cfg.moe.top_k / cfg.moe.num_experts
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(cfg, shape_name: str, *, local_iters: int = 10) -> float:
+    from repro.configs.base import INPUT_SHAPES
+    shape = INPUT_SHAPES[shape_name]
+    n = count_params(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * local_iters
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token each

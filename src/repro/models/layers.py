@@ -1,0 +1,505 @@
+"""Shared neural-net primitives for the model zoo.
+
+Everything is functional: ``init_*`` builds a param pytree (nested dicts of
+jnp arrays), ``*_apply`` consumes it. Layouts: activations (B, S, D);
+attention tensors (B, S, H, hd).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# Neg-inf substitute that is safe in bf16 softmax arithmetic.
+MASK_VALUE = -1e9
+
+# Materialised attention scores above this seq length use the chunked
+# online-softmax path (memory: O(S * KV_CHUNK) instead of O(S^2)).
+CHUNK_ATTN_THRESHOLD = 2048
+KV_CHUNK = 1024
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (n, d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def ffn_act(kind: str, gate, up):
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# RoPE (standard / partial / M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_sin_cos(positions, rot_dim: int, theta: float):
+    """positions (...,) -> sin/cos (..., rot_dim//2) in fp32."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, positions, cfg: ModelConfig, rot_dim: Optional[int] = None):
+    """x: (B, S, H, hd). positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    if rot_dim is None:
+        rot_dim = int(hd * cfg.rotary_pct)
+        rot_dim -= rot_dim % 2
+    half = rot_dim // 2
+
+    if cfg.mrope_sections is not None and positions.ndim == 3:
+        # M-RoPE: the rot_dim/2 frequency slots are split into (t, h, w)
+        # sections, each reading its own position channel.
+        sins, coss = [], []
+        start = 0
+        for sec, pos_c in zip(cfg.mrope_sections, positions):
+            freqs_idx = jnp.arange(start, start + sec, dtype=jnp.float32)
+            inv = 1.0 / (cfg.rope_theta ** (freqs_idx / half))
+            ang = pos_c.astype(jnp.float32)[..., None] * inv  # (B,S,sec)
+            sins.append(jnp.sin(ang))
+            coss.append(jnp.cos(ang))
+            start += sec
+        sin = jnp.concatenate(sins, axis=-1)[:, :, None, :]
+        cos = jnp.concatenate(coss, axis=-1)[:, :, None, :]
+    else:
+        if positions.ndim == 3:          # collapse M-RoPE channels (text-only)
+            positions = positions[0]
+        sin, cos = _rope_sin_cos(positions, rot_dim, cfg.rope_theta)
+        sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+
+    rot, rest = x[..., :rot_dim], x[..., rot_dim:]
+    r1, r2 = rot[..., :half], rot[..., half:]
+    r1f, r2f = r1.astype(jnp.float32), r2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [r1f * cos - r2f * sin, r2f * cos + r1f * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1) if rest.shape[-1] else out
+
+
+# --------------------------------------------------------------------------
+# attention cores
+# --------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q (B,Sq,H,hd), k (B,Sk,K,hd) -> scores (B,H,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    q = q.reshape(B, Sq, K, H // K, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+    return s.reshape(B, H, Sq, k.shape[1])
+
+
+def _gqa_out(probs, v, out_dtype=None):
+    """probs (B,H,Sq,Sk), v (B,Sk,K,hd) -> (B,Sq,H,hd)."""
+    B, H, Sq, Sk = probs.shape
+    K = v.shape[2]
+    p = probs.reshape(B, K, H // K, Sq, Sk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v,
+                   preferred_element_type=out_dtype)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def attn_mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
+                   k_valid=None):
+    """Additive bias (…, Sq, Sk) in fp32."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, MASK_VALUE).astype(jnp.float32)
+
+
+def attention_dense(q, k, v, bias, scale: float, softcap_val=None):
+    """Reference full-materialisation attention. bias (Sq,Sk) or (B,1,Sq,Sk)."""
+    s = _gqa_scores(q, k).astype(jnp.float32) * scale
+    s = softcap(s, softcap_val)
+    if bias.ndim == 2:
+        bias = bias[None, None]
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p.astype(v.dtype), v)
+
+
+def attention_chunked(q, k, v, *, q_pos, k_pos, causal, window,
+                      scale, softcap_val=None, k_valid=None,
+                      kv_chunk: int = KV_CHUNK):
+    """Online-softmax attention, scanning KV in chunks.
+
+    Memory is O(Sq * kv_chunk) per head instead of O(Sq * Sk). Pure JAX
+    (differentiable); the Pallas flash kernel in repro/kernels mirrors it.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    n_chunks = -(-Sk // kv_chunk)
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        kv_ok = jnp.pad(
+            k_valid if k_valid is not None else jnp.ones((Sk,), bool),
+            (0, pad), constant_values=False)
+    else:
+        kv_ok = k_valid if k_valid is not None else jnp.ones((Sk,), bool)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, k.shape[2], hd)
+    vc = v.reshape(B, n_chunks, kv_chunk, v.shape[2], v.shape[-1])
+    kpc = k_pos.reshape(n_chunks, kv_chunk)
+    kokc = kv_ok.reshape(n_chunks, kv_chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kp, kok = xs
+        s = _gqa_scores(q, kb).astype(jnp.float32) * scale  # (B,H,Sq,ck)
+        s = softcap(s, softcap_val)
+        s = s + attn_mask_bias(q_pos, kp, causal=causal, window=window,
+                               k_valid=kok)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = _gqa_out(p.astype(jnp.float32), vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv.transpose(0, 2, 1, 3)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpc, kokc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,hd)
+
+
+def attention(q, k, v, *, q_pos, k_pos, causal, window=None, scale=None,
+              softcap_val=None, k_valid=None, chunk_threshold=None,
+              kv_chunk=None):
+    """Dispatch between dense and chunked attention."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    if chunk_threshold is None:
+        chunk_threshold = CHUNK_ATTN_THRESHOLD
+    Sq, Sk = q.shape[1], k.shape[1]
+    if max(Sq, Sk) > chunk_threshold and Sq > 1:
+        return attention_chunked(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                 causal=causal, window=window, scale=scale,
+                                 softcap_val=softcap_val, k_valid=k_valid,
+                                 kv_chunk=kv_chunk or KV_CHUNK)
+    bias = attn_mask_bias(q_pos, k_pos, causal=causal, window=window,
+                          k_valid=k_valid)
+    return attention_dense(q, k, v, bias, scale, softcap_val)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (covers attn / local / global kinds)
+# --------------------------------------------------------------------------
+
+def pad_head_mask(cfg: ModelConfig):
+    """Bool (Hp*hd,) — True where the flattened q/o dim holds a REAL head.
+
+    Padded heads are interleaved at the END OF EACH KV GROUP (not the tail
+    of the tensor): real q-head j of kv-group j//g_old must land in slot
+    (j//g_old)*g_new + j%g_old so the GQA pairing is preserved. Requires
+    GQA with Hp divisible by num_kv_heads."""
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hp = max(cfg.pad_attn_heads, H)
+    assert K < H and Hp % K == 0, (
+        "pad_attn_heads requires GQA (K < H) and padded count divisible "
+        f"by kv heads; got H={H} K={K} Hp={Hp}")
+    g_old, g_new = H // K, Hp // K
+    real = (jnp.arange(Hp) % g_new) < g_old
+    return jnp.repeat(real, hd)
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hp = max(cfg.pad_attn_heads, H) if cfg.pad_attn_heads else H
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, Hp * hd, dtype),
+        "wk": dense_init(ks[1], D, K * hd, dtype),
+        "wv": dense_init(ks[2], D, K * hd, dtype),
+        "wo": dense_init(ks[3], Hp * hd, D, dtype),
+    }
+    if Hp != H:
+        # zero the padded head columns/rows: exact no-op heads (zero
+        # output contribution, zero gradient, zeros preserved by
+        # decay/clip updates); group-interleaved so real heads keep
+        # their kv pairing
+        col = pad_head_mask(cfg).astype(dtype)
+        p["wq"] = p["wq"] * col[None, :]
+        p["wo"] = p["wo"] * col[:, None]
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_apply(p, cfg: ModelConfig, x, positions, *, kind: str,
+                    cache=None, pos=None):
+    """x (B,S,D). Full-seq if cache is None, else single-token decode.
+
+    Returns (out, new_cache). new_cache is a dict {"k","v"} (rolling window
+    buffers for 'local' kind).
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.pad_attn_heads:
+        H = max(cfg.pad_attn_heads, H)      # zero no-op heads (see init)
+    window = cfg.window if kind == "local" else None
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+
+    if cache is None:
+        q_pos = positions[0] if positions.ndim == 3 else positions
+        q_pos = q_pos[0] if q_pos.ndim == 2 else q_pos  # (S,)
+        out = attention(q, k, v, q_pos=q_pos, k_pos=q_pos,
+                        causal=cfg.causal, window=window,
+                        softcap_val=cfg.softcap_attn,
+                        chunk_threshold=cfg.attn_chunk_threshold,
+                        kv_chunk=cfg.attn_kv_chunk)
+        if cfg.pad_attn_heads:
+            # zero the padded heads' outputs: their uniform-softmax PV is
+            # nonzero, and without this the zero wo ROWS would still
+            # receive gradient (out^T dY) and drift away from zero
+            out = out * pad_head_mask(cfg).reshape(H, hd).astype(out.dtype)
+        new_cache = {"k": k, "v": v}
+    else:
+        # decode: S == 1, pos is the absolute position of this token.
+        ck, cv = cache["k"], cache["v"]
+        W = ck.shape[1]
+        slot = pos % W if window is not None else jnp.minimum(pos, W - 1)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        if window is not None:
+            # rolling buffer: absolute positions of the W slots
+            base = pos - (W - 1)
+            idx = jnp.arange(W)
+            k_pos = jnp.where(idx <= slot, pos - (slot - idx),
+                              pos - (slot - idx) - W)
+            k_valid = k_pos >= 0
+        else:
+            k_pos = jnp.arange(W)
+            k_valid = k_pos <= pos
+        out = attention(q, ck, cv, q_pos=pos[None], k_pos=k_pos,
+                        causal=False, window=None,
+                        softcap_val=cfg.softcap_attn, k_valid=k_valid)
+        if cfg.pad_attn_heads:
+            out = out * pad_head_mask(cfg).reshape(H, hd).astype(out.dtype)
+        new_cache = {"k": ck, "v": cv}
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, kind: str, batch: int,
+                         max_len: int, dtype):
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = min(cfg.window, max_len) if kind == "local" and cfg.window else max_len
+    return {"k": jnp.zeros((batch, L, K, hd), dtype),
+            "v": jnp.zeros((batch, L, K, hd), dtype)}
+
+
+# --------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): latent-compressed KV cache
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], D, H * qk_dim, dtype),
+        "w_dkv": dense_init(ks[1], D, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_ukv": dense_init(ks[2], m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[3], H * m.v_head_dim, D, dtype),
+    }
+
+
+def _mla_kv(p, cfg, ckv_norm, kpe, H):
+    """Up-project latent -> per-head k, v. ckv_norm (B,S,rank), kpe (B,S,rd)."""
+    m = cfg.mla
+    B, S = ckv_norm.shape[:2]
+    kv = (ckv_norm @ p["w_ukv"]).reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+    k_pe = jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_pe], axis=-1)
+    return k, v
+
+
+def mla_apply(p, cfg: ModelConfig, x, positions, *, cache=None, pos=None):
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, qk_dim)
+    q_nope, q_pe = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg, rot_dim=m.qk_rope_head_dim)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+
+    dkv = x @ p["w_dkv"]
+    ckv, kpe = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    ckv = rms_norm(ckv, p["kv_norm"])
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg,
+                     rot_dim=m.qk_rope_head_dim)[:, :, 0, :]
+
+    scale = 1.0 / math.sqrt(qk_dim)
+    if cache is None:
+        k, v = _mla_kv(p, cfg, ckv, kpe, H)
+        q_pos = positions[0] if positions.ndim == 3 else positions
+        q_pos = q_pos[0] if q_pos.ndim == 2 else q_pos
+        out = attention(q, k, v, q_pos=q_pos, k_pos=q_pos, causal=cfg.causal,
+                        scale=scale)
+        new_cache = {"ckv": ckv, "kpe": kpe}
+    else:
+        cckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+        ckpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe, (0, pos, 0))
+        Sc = cckv.shape[1]
+        k, v = _mla_kv(p, cfg, cckv, ckpe, H)   # up-project on the fly
+        k_pos = jnp.arange(Sc)
+        out = attention(q, k, v, q_pos=pos[None], k_pos=k_pos, causal=False,
+                        scale=scale, k_valid=k_pos <= pos)
+        new_cache = {"ckv": cckv, "kpe": ckpe}
+    out = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    return out, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+
+
+# --------------------------------------------------------------------------
+# dense FFN + MoE
+# --------------------------------------------------------------------------
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[2], d_ff, d_model, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], d_model, d_ff, dtype)
+    return p
+
+
+def ffn_apply(p, kind: str, x):
+    gate = x @ p["w_gate"] if "w_gate" in p else None
+    up = x @ p["w_up"]
+    return ffn_act(kind, gate if gate is not None else up, up) @ p["w_down"]
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    mo = cfg.moe
+    D, E, F = cfg.d_model, mo.num_experts, mo.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": stacked_dense_init(ks[1], E, D, F, dtype),
+        "w_up": stacked_dense_init(ks[2], E, D, F, dtype),
+        "w_down": stacked_dense_init(ks[3], E, F, D, dtype),
+    }
+    if mo.num_shared:
+        p["shared"] = init_ffn(ks[4], D, mo.num_shared * mo.d_ff_shared,
+                               cfg.ffn_kind, dtype)
+    return p
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """Capacity-based top-k routing with one-hot dispatch einsums.
+
+    The (B,S,E,C) dispatch/combine tensors shard B->data, E->model; GSPMD
+    turns the token->expert regrouping into the all-to-all of classic
+    expert parallelism. Returns (out, aux_loss).
+    """
+    mo = cfg.moe
+    B, S, D = x.shape
+    E, K = mo.num_experts, mo.top_k
+    C = max(int(S * K / E * mo.capacity_factor), 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position-in-expert bookkeeping, processed selection-by-selection
+    combine = jnp.zeros((B, S, E, C), jnp.float32)
+    fill = jnp.zeros((B, E), jnp.float32)                    # tokens per expert
+    for kk in range(K):
+        mask_k = jax.nn.one_hot(expert_idx[:, :, kk], E)     # (B,S,E)
+        pos_in_e = jnp.cumsum(mask_k, axis=1) - mask_k + fill[:, None, :]
+        keep = (pos_in_e < C) * mask_k
+        slot = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C) # (B,S,E,C)
+        combine = combine + (gate_vals[:, :, kk, None, None]
+                             * keep[..., None] * slot)
+        fill = fill + jnp.sum(mask_k, axis=1)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)          # (E,B,C,D)
+    h_gate = jnp.einsum("ebcd,edf->ebcf", xin, p["w_gate"])
+    h_up = jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"])
+    h = ffn_act(cfg.ffn_kind, h_gate, h_up)
+    eout = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"])
+    out = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), eout)
+
+    if mo.num_shared:
+        out = out + ffn_apply(p["shared"], cfg.ffn_kind, x)
+
+    # Switch-style load-balance auxiliary loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, E).sum(axis=2), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = mo.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
+    return out, aux

@@ -1,0 +1,363 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (Griffin/RecurrentGemma),
+mLSTM and sLSTM (xLSTM).
+
+TPU adaptation notes (see DESIGN.md §3):
+  * RG-LRU uses ``lax.associative_scan`` (log-depth, elementwise diagonal
+    recurrence) instead of the GPU kernel of the Griffin paper.
+  * mLSTM uses the chunkwise-parallel form — intra-chunk attention-style
+    matmuls (MXU-friendly) + inter-chunk ``lax.scan`` over the matrix
+    memory. Validated against a step-by-step scan oracle in tests.
+  * sLSTM has no parallel form (nonlinear recurrence) — ``lax.scan``.
+All blocks share the attention-block interface:
+    apply(p, cfg, x, positions, cache=None, pos=None) -> (out, new_cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+RG_LRU_C = 8.0
+MLSTM_CHUNK = 128
+
+
+def _replicate_tail(x, keep: int = 1):
+    """Pin all dims but the first `keep` to replicated — forces GSPMD to
+    reshard HERE (on this dtype) instead of after a later fp32 convert.
+    No-op outside a mesh context (single-device tests)."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            from jax.interpreters import pxla       # legacy `with mesh:`
+            lm = pxla.thread_resources.env.physical_mesh
+        if lm is None or lm.empty:
+            return x
+    P = jax.sharding.PartitionSpec
+    spec = P(*([P.UNCONSTRAINED] * keep + [None] * (x.ndim - keep)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# causal depthwise temporal conv (shared by RG-LRU and mLSTM blocks)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(u, w, conv_state=None):
+    """u (B,S,W), w (cw,W) depthwise. Returns (out, new_state (B,cw-1,W))."""
+    cw = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    padded = jnp.concatenate([conv_state, u], axis=1)
+    out = sum(padded[:, i:i + u.shape[1], :] * w[i] for i in range(cw))
+    return out, padded[:, -(cw - 1):, :]
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block
+# --------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = exp(-c*softplus(L)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * RG_LRU_C)))
+    return {
+        "w_in": dense_init(ks[1], D, W, dtype),
+        "w_gate_in": dense_init(ks[2], D, W, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, W)) * 0.1).astype(dtype),
+        "w_a": dense_init(ks[4], W, W, dtype),
+        "b_a": jnp.zeros((W,), dtype),
+        "w_x": dense_init(ks[5], W, W, dtype),
+        "b_x": jnp.zeros((W,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], W, D, dtype),
+    }
+
+
+def _rglru_gates(p, u):
+    """u (B,S,W) -> (log_a, scaled_input) in fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"]) * r
+    scaled = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+    return log_a, scaled
+
+
+def rglru_apply(p, cfg: ModelConfig, x, positions, *, cache=None, pos=None):
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate_in"], approximate=True)
+    u = x @ p["w_in"]
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = causal_conv1d(u, p["conv_w"], conv_state)
+    log_a, scaled = _rglru_gates(p, u)
+
+    if cache is None:
+        a = jnp.exp(log_a)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, scaled), axis=1)
+        h_last = h[:, -1, :]
+    else:
+        h_prev = cache["state"]
+        h = jnp.exp(log_a) * h_prev[:, None, :] + scaled
+        h_last = h[:, -1, :]
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])
+    return out, {"state": h_last, "conv": new_conv}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    W = cfg.lru_width or cfg.d_model
+    return {"state": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype)}
+
+
+# --------------------------------------------------------------------------
+# mLSTM block (chunkwise-parallel matrix memory)
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * D)
+    H = cfg.num_heads
+    assert inner % H == 0
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], D, inner, dtype),
+        "w_up_gate": dense_init(ks[1], D, inner, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, inner)) * 0.1).astype(dtype),
+        "wq": dense_init(ks[3], inner, inner, dtype),
+        "wk": dense_init(ks[4], inner, inner, dtype),
+        "wv": dense_init(ks[5], inner, inner, dtype),
+        "w_if": dense_init(ks[6], inner, 2 * H, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "w_down": dense_init(ks[7], inner, D, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, state=None,
+                      cdt=jnp.float32):
+    """Chunkwise stabilized mLSTM recurrence.
+
+    q,k,v: (B,H,S,dh) with k pre-scaled by 1/sqrt(dh).
+    li, lf: (B,H,S) log input/forget gates (fp32).
+    state: optional (C (B,H,dk,dv), n (B,H,dk), m (B,H)) — stabilized.
+    cdt: chunk-operand dtype — bf16 keeps q/k/v bf16 across the model-axis
+    resharding boundary (halves gather bytes); einsums accumulate fp32 via
+    preferred_element_type. Carries (C, n, m) are always fp32.
+    Returns (h (B,H,S,dh), new_state).
+    """
+    B, H, S, dh = q.shape
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0, "sequence must be divisible by mLSTM chunk"
+    nc = S // L
+
+    def rs(t):
+        return t.reshape(B, H, nc, L, -1).swapaxes(0, 2).swapaxes(1, 2) \
+            if t.ndim == 4 else t.reshape(B, H, nc, L).swapaxes(0, 2).swapaxes(1, 2)
+    # -> (nc, B, H, L, dh) / (nc, B, H, L)
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    lic, lfc = rs(li), rs(lf)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, xs):
+        C, n, m = carry                       # stabilized: C~ = C * e^{-m}
+        qb, kb, vb, lib, lfb = xs             # (B,H,L,dh)/(B,H,L)
+        b = jnp.cumsum(lfb, axis=-1)          # inclusive cumsum of log-f
+        # intra-chunk log decay matrix D_ij = b_i - lf_i... careful:
+        # decay from j to i (j<=i) = sum_{s=j+1..i} lf_s = b_i - b_j
+        Dm = b[..., :, None] - b[..., None, :] + lib[..., None, :]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        Dm = jnp.where(mask, Dm, -jnp.inf)
+        inter_log = m[..., None] + b          # (B,H,L) decay of carry-in
+        m_i = jnp.maximum(jnp.max(Dm, axis=-1), inter_log)   # (B,H,L)
+        W = jnp.exp(Dm - m_i[..., None])                     # (B,H,L,L)
+        qb, kb, vb = qb.astype(cdt), kb.astype(cdt), vb.astype(cdt)
+        qk = jnp.einsum("bhid,bhjd->bhij", qb, kb,
+                        preferred_element_type=jnp.float32)
+        intra_num = jnp.einsum("bhij,bhjd->bhid", (W * qk).astype(cdt), vb,
+                               preferred_element_type=jnp.float32)
+        intra_den = jnp.einsum("bhij,bhij->bhi", W, qk)
+        w_inter = jnp.exp(inter_log - m_i)                   # (B,H,L)
+        # C/n readout in cdt (carry itself stays fp32; fp32 accumulation)
+        inter_num = jnp.einsum("bhid,bhde->bhie", qb, C.astype(cdt),
+                               preferred_element_type=jnp.float32) \
+            * w_inter[..., None]
+        inter_den = jnp.einsum("bhid,bhd->bhi", qb, n.astype(cdt),
+                               preferred_element_type=jnp.float32) \
+            * w_inter
+        num = intra_num + inter_num
+        den = jnp.maximum(jnp.abs(intra_den + inter_den), jnp.exp(-m_i))
+        h = num / den[..., None]
+        # carry update to chunk end
+        btot = b[..., -1]                                    # (B,H)
+        m_new = jnp.maximum(m + btot,
+                            jnp.max(btot[..., None] - b + lib, axis=-1))
+        w_kv = jnp.exp(btot[..., None] - b + lib - m_new[..., None])
+        C_new = C * jnp.exp(m + btot - m_new)[..., None, None] + jnp.einsum(
+            "bhj,bhjd,bhje->bhde", w_kv.astype(cdt), kb, vb,
+            preferred_element_type=jnp.float32)
+        n_new = n * jnp.exp(m + btot - m_new)[..., None] + jnp.einsum(
+            "bhj,bhjd->bhd", w_kv.astype(cdt), kb,
+            preferred_element_type=jnp.float32)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(1, 2).swapaxes(0, 2).reshape(B, H, S, dh)
+    return h, (C, n, m)
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, positions, *, cache=None, pos=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    inner = int(cfg.mlstm_proj_factor * D)
+    dh = inner // H
+    z = x @ p["w_up"]
+    og = jax.nn.silu(x @ p["w_up_gate"])
+    conv_state = cache["conv"] if cache is not None else None
+    zc, new_conv = causal_conv1d(z, p["conv_w"], conv_state)
+    zc = jax.nn.silu(zc)
+    q = (zc @ p["wq"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (zc @ p["wk"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3) / math.sqrt(dh)
+    v = (z @ p["wv"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    gates = zc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    li = gates[..., :H].transpose(0, 2, 1)            # (B,H,S) exp input gate
+    lf = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    if cache is None:
+        cdt = jnp.dtype(cfg.scan_compute_dtype)
+        h, state = _mlstm_chunk_scan(q, k, v, li, lf, cdt=cdt)
+    else:
+        # single-step recurrent update (S == 1)
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        li0, lf0 = li[..., 0], lf[..., 0]
+        m_new = jnp.maximum(lf0 + m, li0)
+        fp = jnp.exp(lf0 + m - m_new)
+        ip = jnp.exp(li0 - m_new)
+        k0 = k[..., 0, :].astype(jnp.float32)
+        v0 = v[..., 0, :].astype(jnp.float32)
+        q0 = q[..., 0, :].astype(jnp.float32)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            k0[..., :, None] * v0[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * k0
+        num = jnp.einsum("bhd,bhde->bhe", q0, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n)),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None])[:, :, None, :]                # (B,H,1,dh)
+        state = (C, n, m_new)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, inner).astype(x.dtype)
+    out = (h * og) @ p["w_down"]
+    return out, {"C": state[0], "n": state[1], "m": state[2], "conv": new_conv}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.num_heads
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    dh = inner // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), dtype)}
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (strictly sequential nonlinear recurrence -> lax.scan)
+# --------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    ks = jax.random.split(key, 7)
+    d_up = int(cfg.slstm_proj_factor * D)
+    return {
+        "w_gates": dense_init(ks[0], D, 4 * D, dtype),     # z,i,f,o
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * D,)), 3.0 * jnp.ones((D,)), jnp.zeros((D,))]
+        ).astype(jnp.float32),
+        "r_gates": (jax.random.normal(ks[1], (4, H, dh, dh)) / math.sqrt(dh)
+                    ).astype(dtype),
+        "gn": jnp.ones((D,), dtype),
+        "w_up": dense_init(ks[2], D, d_up, dtype),
+        "w_up_gate": dense_init(ks[3], D, d_up, dtype),
+        "w_down": dense_init(ks[4], d_up, D, dtype),
+    }
+
+
+def _slstm_step(p, H, dh, carry, wx):
+    """carry: (h,c,n,m) each (B,H,dh). wx: (B,4D) precomputed W x + b."""
+    h, c, n, m = carry
+    B = h.shape[0]
+    D = H * dh
+    rg = p["r_gates"].astype(jnp.float32)
+    rh = jnp.einsum("bhd,ghde->gbhe", h, rg)          # (4,B,H,dh)
+    wz, wi, wf, wo = [wx[:, i * D:(i + 1) * D].reshape(B, H, dh)
+                      for i in range(4)]
+    z = jnp.tanh(wz + rh[0])
+    it = wi + rh[1]
+    ft = wf + rh[2]
+    o = jax.nn.sigmoid(wo + rh[3])
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, m_new)
+
+
+def slstm_apply(p, cfg: ModelConfig, x, positions, *, cache=None, pos=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    wx = x.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32) + p["b_gates"]
+
+    if cache is None:
+        carry = tuple(jnp.zeros((B, H, dh), jnp.float32) for _ in range(3)) + (
+            jnp.full((B, H, dh), -1e30, jnp.float32),)
+        carry = (carry[0], carry[1], carry[2], carry[3])
+
+        def step(carry, wx_t):
+            new = _slstm_step(p, H, dh, carry, wx_t)
+            return new, new[0]
+
+        carry, hs = jax.lax.scan(step, carry, wx.swapaxes(0, 1),
+                                 unroll=max(1, cfg.slstm_unroll))
+        h_seq = hs.swapaxes(0, 1).reshape(B, S, D)
+    else:
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry = _slstm_step(p, H, dh, carry, wx[:, 0])
+        h_seq = carry[0].reshape(B, 1, D)
+
+    from repro.models.layers import rms_norm
+    h_seq = rms_norm(h_seq.astype(x.dtype), p["gn"])
+    up = jax.nn.gelu(h_seq @ p["w_up"], approximate=True) * (h_seq @ p["w_up_gate"])
+    out = up @ p["w_down"]
+    new_cache = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}

@@ -1,0 +1,101 @@
+"""The paper's evaluation models: MLP and CNN image classifiers
+(MNIST/FMNIST-shaped inputs 28x28x1, 10 classes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+NUM_CLASSES = 10
+
+
+class MLPTask:
+    """784 -> hidden -> hidden -> 10, ReLU (paper's MLP)."""
+
+    def __init__(self, hidden: int = 128, num_classes: int = NUM_CLASSES):
+        self.hidden = hidden
+        self.num_classes = num_classes
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w1": dense_init(k1, 784, self.hidden),
+            "b1": jnp.zeros((self.hidden,)),
+            "w2": dense_init(k2, self.hidden, self.hidden),
+            "b2": jnp.zeros((self.hidden,)),
+            "w3": dense_init(k3, self.hidden, self.num_classes),
+            "b3": jnp.zeros((self.num_classes,)),
+        }
+
+    def logits(self, params, batch):
+        x = batch["x"].reshape(batch["x"].shape[0], -1)
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        h = jax.nn.relu(h @ params["w2"] + params["b2"])
+        return h @ params["w3"] + params["b3"]
+
+    def loss(self, params, batch, rng=None):
+        return _ce(self.logits(params, batch), batch["y"])
+
+    def sampled_loss(self, params, batch, rng):
+        logits = self.logits(params, batch)
+        y = jax.random.categorical(rng, jax.lax.stop_gradient(logits), axis=-1)
+        return _ce(logits, y)
+
+    def accuracy(self, params, batch):
+        return jnp.mean(
+            jnp.argmax(self.logits(params, batch), -1) == batch["y"])
+
+    def gnb_batch_size(self, batch) -> int:
+        return int(batch["y"].shape[0])
+
+
+class CNNTask:
+    """2x (conv3x3 + relu + maxpool2) -> fc (paper's CNN)."""
+
+    def __init__(self, channels: Tuple[int, int] = (16, 32),
+                 num_classes: int = NUM_CLASSES):
+        self.channels = channels
+        self.num_classes = num_classes
+
+    def init(self, key):
+        c1, c2 = self.channels
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "conv1": jax.random.normal(k1, (3, 3, 1, c1)) / math.sqrt(9),
+            "bc1": jnp.zeros((c1,)),
+            "conv2": jax.random.normal(k2, (3, 3, c1, c2)) / math.sqrt(9 * c1),
+            "bc2": jnp.zeros((c2,)),
+            "fc": dense_init(k3, 7 * 7 * c2, self.num_classes),
+            "bfc": jnp.zeros((self.num_classes,)),
+        }
+
+    def logits(self, params, batch):
+        x = batch["x"]
+        if x.ndim == 3:
+            x = x[..., None]
+        for w, b in ((params["conv1"], params["bc1"]),
+                     (params["conv2"], params["bc2"])):
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + b)
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        return x @ params["fc"] + params["bfc"]
+
+    loss = MLPTask.loss
+    sampled_loss = MLPTask.sampled_loss
+    accuracy = MLPTask.accuracy
+    gnb_batch_size = MLPTask.gnb_batch_size
+
+
+def _ce(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,352 @@
+"""Generic transformer/hybrid stack covering all 10 assigned architectures.
+
+Layers are stacked per block-pattern position and iterated with
+``lax.scan`` so HLO size (and therefore 512-device compile time) is O(1)
+in depth. Pattern remainder layers (e.g. recurrentgemma's trailing 2
+recurrent blocks) are unrolled singly.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+ATTN_KINDS = ("attn", "local", "global")
+
+
+def _mixer_kind(cfg: ModelConfig, kind: str) -> str:
+    if kind in ATTN_KINDS and cfg.mla is not None:
+        return "mla"
+    return kind
+
+
+def _effective_kind(cfg: ModelConfig, kind: str) -> str:
+    """gemma2 long-context serving mode: global layers fall back to SWA."""
+    if kind == "global" and cfg.long_mode_swa_only:
+        return "local"
+    return kind
+
+
+# --------------------------------------------------------------------------
+# single block init / apply
+# --------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype):
+    km = _mixer_kind(cfg, kind)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if km == "mla":
+        p["mixer"] = L.init_mla(ks[0], cfg, dtype)
+    elif km in ATTN_KINDS:
+        p["mixer"] = L.init_attention(ks[0], cfg, dtype)
+    elif km == "rec":
+        p["mixer"] = R.init_rglru(ks[0], cfg, dtype)
+    elif km == "m":
+        p["mixer"] = R.init_mlstm(ks[0], cfg, dtype)
+    elif km == "s":
+        p["mixer"] = R.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        p["post_ln1"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.d_ff > 0 or cfg.moe is not None:
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        if cfg.moe is not None:
+            p["ffn"] = L.init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = L.init_ffn(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.ffn_kind, dtype)
+        if cfg.post_norm:
+            p["post_ln2"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def apply_block(p, cfg: ModelConfig, kind: str, x, positions, *,
+                cache=None, pos=None):
+    """Returns (x, new_cache, aux_loss)."""
+    kind = _effective_kind(cfg, kind)
+    km = _mixer_kind(cfg, kind)
+    h = L.rms_norm(x, p["ln1"])
+    if km == "mla":
+        mix, new_cache = L.mla_apply(p["mixer"], cfg, h, positions,
+                                     cache=cache, pos=pos)
+    elif km in ATTN_KINDS:
+        mix, new_cache = L.attention_apply(p["mixer"], cfg, h, positions,
+                                           kind=kind, cache=cache, pos=pos)
+    elif km == "rec":
+        mix, new_cache = R.rglru_apply(p["mixer"], cfg, h, positions,
+                                       cache=cache, pos=pos)
+    elif km == "m":
+        mix, new_cache = R.mlstm_apply(p["mixer"], cfg, h, positions,
+                                       cache=cache, pos=pos)
+    elif km == "s":
+        mix, new_cache = R.slstm_apply(p["mixer"], cfg, h, positions,
+                                       cache=cache, pos=pos)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        mix = L.rms_norm(mix, p["post_ln1"])
+    x = x + cfg.residual_scale * mix
+
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h = L.rms_norm(x, p["ln2"])
+        if cfg.moe is not None:
+            f, aux = L.moe_apply(p["ffn"], cfg, h)
+        else:
+            f = L.ffn_apply(p["ffn"], cfg.ffn_kind, h)
+        if cfg.post_norm:
+            f = L.rms_norm(f, p["post_ln2"])
+        x = x + cfg.residual_scale * f
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype):
+    kind = _effective_kind(cfg, kind)
+    km = _mixer_kind(cfg, kind)
+    if km == "mla":
+        return L.init_mla_cache(cfg, batch, max_len, dtype)
+    if km in ATTN_KINDS:
+        return L.init_attention_cache(cfg, kind, batch, max_len, dtype)
+    if km == "rec":
+        return R.init_rglru_cache(cfg, batch, dtype)
+    if km == "m":
+        return R.init_mlstm_cache(cfg, batch, dtype)
+    if km == "s":
+        return R.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    n_pat = len(cfg.block_pattern)
+    keys = jax.random.split(key, n_pat + len(cfg.pattern_remainder) + 2)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model,
+                                         cfg.vocab_padded, dtype)
+    reps = cfg.pattern_reps
+    for pi, kind in enumerate(cfg.block_pattern):
+        ks = jax.random.split(keys[2 + pi], reps)
+        params[f"blocks_{pi}"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind, dtype))(ks)
+    for ri, kind in enumerate(cfg.pattern_remainder):
+        params[f"rem_{ri}"] = init_block(keys[2 + n_pat + ri], cfg, kind,
+                                         dtype)
+    return params
+
+
+def _embed_in(params, cfg: ModelConfig, batch):
+    if cfg.embedding_inputs:
+        x = batch["embeds"].astype(param_dtype(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+    return x * cfg.scale_emb
+
+
+def _logits_out(params, cfg: ModelConfig, x):
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = x @ head
+    return L.softcap(logits.astype(jnp.float32), cfg.softcap_final)
+
+
+def _default_positions(cfg: ModelConfig, B: int, S: int, offset=0):
+    pos = jnp.arange(S) + offset
+    pos = jnp.broadcast_to(pos[None], (B, S))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def forward(params, cfg: ModelConfig, batch, *, want_cache: bool = False,
+            max_cache_len: Optional[int] = None, remat: bool = True):
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits, cache, aux). ``cache`` is None unless want_cache.
+    """
+    x = _embed_in(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+
+    def block_fn(kind):
+        def f(xa, bp):
+            xx, aux_in = xa
+            xx, c, aux = apply_block(bp, cfg, kind, xx, positions)
+            return (xx, aux_in + aux), c
+        return jax.checkpoint(f) if remat else f
+
+    caches = {}
+    aux = jnp.zeros((), jnp.float32)
+    for pi, kind in enumerate(cfg.block_pattern):
+        def scan_body(carry, bp, _kind=kind, _pi=pi):
+            (xx, a), c = block_fn(_kind)(carry, bp[f"b{_pi}"])
+            return (xx, a), c
+        # pack: scan over a dict so each pattern position keeps its own tree
+        stacked = {f"b{pi}": params[f"blocks_{pi}"]}
+        (x, aux), cache_g = jax.lax.scan(scan_body, (x, aux), stacked)
+        if want_cache:
+            caches[f"g{pi}"] = cache_g
+    for ri, kind in enumerate(cfg.pattern_remainder):
+        (x, aux), c = block_fn(kind)((x, aux), params[f"rem_{ri}"])
+        if want_cache:
+            caches[f"r{ri}"] = c
+    logits = _logits_out(params, cfg, x)
+    return logits, (caches if want_cache else None), aux
+
+
+def prefill_to_decode_cache(cfg: ModelConfig, cache, prefill_len: int,
+                            max_len: int):
+    """Convert forward(want_cache=True) output into decode_step layout.
+
+    Full attention / MLA: pad the seq dim to max_len. Local (sliding
+    window) attention: regroup the last W positions into the rolling
+    buffer layout (slot = pos % W). Recurrent states pass through.
+    """
+    kinds = {f"g{pi}": kind for pi, kind in enumerate(cfg.block_pattern)}
+    kinds.update({f"r{ri}": kind
+                  for ri, kind in enumerate(cfg.pattern_remainder)})
+
+    def grow(arr, seq_axis):
+        if arr.shape[seq_axis] < max_len:
+            pad = [(0, 0)] * arr.ndim
+            pad[seq_axis] = (0, max_len - arr.shape[seq_axis])
+            arr = jnp.pad(arr, pad)
+        return arr
+
+    def to_rolling(arr, seq_axis, W, P):
+        idx = jnp.arange(W)
+        src = idx + ((P - 1 - idx) // W) * W           # j == idx (mod W)
+        src = jnp.clip(src, 0, P - 1)                  # invalid slots masked
+        return jnp.take(arr, src, axis=seq_axis)       # by k_valid at decode
+
+    new = {}
+    for gname, c in cache.items():
+        kind = _effective_kind(cfg, kinds[gname])
+        seq_axis = 2 if gname.startswith("g") else 1   # leading scan-rep dim
+        if isinstance(c, dict) and "k" in c:
+            if kind == "local" and cfg.window and prefill_len > 0:
+                W = min(cfg.window, max_len)
+                new[gname] = {n: to_rolling(a, seq_axis, W, prefill_len)
+                              for n, a in c.items()}
+            else:
+                new[gname] = {n: grow(a, seq_axis) for n, a in c.items()}
+        elif isinstance(c, dict) and "ckv" in c:
+            new[gname] = {n: grow(a, seq_axis) for n, a in c.items()}
+        else:
+            new[gname] = c
+    return new
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    dtype = param_dtype(cfg)
+    caches = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        single = init_block_cache(cfg, kind, batch_size, max_len, dtype)
+        caches[f"g{pi}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.pattern_reps,) + a.shape
+                                       ).copy(), single)
+    for ri, kind in enumerate(cfg.pattern_remainder):
+        caches[f"r{ri}"] = init_block_cache(cfg, kind, batch_size, max_len,
+                                            dtype)
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, pos):
+    """One-token decode. batch: tokens (B,1) or embeds (B,1,D); pos scalar."""
+    x = _embed_in(params, cfg, batch)
+    B = x.shape[0]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, 1, offset=pos)
+    new_cache = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        def scan_body(xx, bp_c, _kind=kind):
+            bp, c = bp_c
+            xx, newc, _ = apply_block(bp, cfg, _kind, xx, positions,
+                                      cache=c, pos=pos)
+            return xx, newc
+        x, cache_g = jax.lax.scan(
+            scan_body, x, (params[f"blocks_{pi}"], cache[f"g{pi}"]))
+        new_cache[f"g{pi}"] = cache_g
+    for ri, kind in enumerate(cfg.pattern_remainder):
+        x, c, _ = apply_block(params[f"rem_{ri}"], cfg, kind, x, positions,
+                              cache=cache[f"r{ri}"], pos=pos)
+        new_cache[f"r{ri}"] = c
+    logits = _logits_out(params, cfg, x)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# losses (CE over padded vocab) + Task abstraction
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """logits (..., Vp) fp32, labels (...) int. Pad region masked out."""
+    Vp = logits.shape[-1]
+    if Vp > vocab_size:
+        mask = jnp.arange(Vp) < vocab_size
+        logits = jnp.where(mask, logits, L.MASK_VALUE)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def sample_labels(rng, logits, vocab_size: int):
+    Vp = logits.shape[-1]
+    if Vp > vocab_size:
+        mask = jnp.arange(Vp) < vocab_size
+        logits = jnp.where(mask, logits, L.MASK_VALUE)
+    return jax.random.categorical(rng, logits, axis=-1)
+
+
+class LMTask:
+    """Bundles init/loss/sampled-loss for the federated engine."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_lm(key, self.cfg)
+
+    def logits(self, params, batch):
+        logits, _, aux = forward(params, self.cfg, batch,
+                                 remat=self.cfg.train_remat)
+        return logits, aux
+
+    def loss(self, params, batch, rng=None):
+        logits, aux = self.logits(params, batch)
+        return cross_entropy(logits, batch["labels"], self.cfg.vocab_size) + aux
+
+    def sampled_loss(self, params, batch, rng):
+        """GNB inner loss: CE against labels sampled from the model itself."""
+        logits, aux = self.logits(params, batch)
+        y = sample_labels(rng, jax.lax.stop_gradient(logits),
+                          self.cfg.vocab_size)
+        return cross_entropy(logits, y, self.cfg.vocab_size) + aux
+
+    def gnb_batch_size(self, batch) -> int:
+        lab = batch["labels"]
+        return int(lab.shape[0] * lab.shape[1]) if lab.ndim > 1 else int(lab.shape[0])

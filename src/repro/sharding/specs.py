@@ -1,0 +1,182 @@
+"""PartitionSpec rules for params / batches / caches.
+
+Single tensor-parallel axis ("model", 16) + data axes ("data" or
+("pod","data")). A dim is sharded only when divisible by the axis size;
+otherwise the rule falls through (DESIGN.md §7 documents the fallback
+consequences, which the roofline table surfaces).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
+
+MODEL_AXIS = "model"
+
+# leaf-name -> which matmul dim prefers the model axis
+_LAST_DIM = {"wq", "wk", "wv", "w_up", "w_gate", "w_in", "w_gate_in",
+             "w_dkv", "w_ukv", "w_gates", "w_up_gate", "lm_head", "w_a",
+             "w_x"}
+_FIRST_DIM = {"wo", "w_down", "w_out"}
+_REPLICATED = {"router", "conv_w", "conv1", "conv2", "r_gates", "lam",
+               "b_a", "b_x", "b_gates", "b_if", "w_if", "fc", "gn"}
+
+
+def _axis_prod(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_spec_fn(cfg: ModelConfig, mesh: Mesh, *,
+                  fsdp_axes: Optional[Tuple[str, ...]] = None):
+    """Returns fn(path, leaf) -> PartitionSpec for SERVER model params."""
+    msize = _axis_prod(mesh, MODEL_AXIS)
+    fsize = _axis_prod(mesh, fsdp_axes) if fsdp_axes else 0
+
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        name = pstr.split("/")[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        dims: list = [None] * nd
+
+        def try_shard(dim, axis, size):
+            if dim is not None and 0 <= dim < nd and dims[dim] is None \
+                    and axis not in [d for d in dims if d] \
+                    and shape[dim] % size == 0 and shape[dim] >= size:
+                dims[dim] = axis
+                return True
+            return False
+
+        model_dim = None
+        if name in _REPLICATED or nd == 0:
+            pass
+        elif name == "embed":
+            model_dim = 0
+        elif cfg.moe is not None and "ffn" in pstr and "shared" not in pstr \
+                and name in ("w_gate", "w_up", "w_down") and nd >= 3:
+            model_dim = nd - 3          # expert dim
+        elif name in _LAST_DIM:
+            model_dim = nd - 1
+        elif name in _FIRST_DIM:
+            model_dim = nd - 2
+        elif nd >= 2:
+            model_dim = int(np.argmax(shape))     # generic fallback
+
+        if model_dim is not None:
+            ok = try_shard(model_dim, MODEL_AXIS, msize)
+            if not ok and nd >= 2:
+                # alternate matmul dim
+                alt = nd - 1 if model_dim != nd - 1 else nd - 2
+                try_shard(alt, MODEL_AXIS, msize)
+
+        if fsdp_axes and nd >= 2 and name not in _REPLICATED:
+            # shard one remaining dim over the data axes (FSDP / ZeRO-3)
+            order = [nd - 2, nd - 1, 0]
+            for d in order:
+                if dims[d] is None and try_shard(d, fsdp_axes, fsize):
+                    break
+        return P(*dims)
+
+    return spec
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params, *,
+                    fsdp_axes=None, client_axes=None):
+    """NamedSharding pytree. client_axes: leading client dim (opt states /
+    per-client params in the parallel strategy)."""
+    fn = param_spec_fn(cfg, mesh, fsdp_axes=fsdp_axes)
+
+    def one(path, leaf):
+        spec = fn(path, leaf)
+        if client_axes is not None:
+            spec = P(client_axes, *spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh: Mesh, *, client_axes=None, batch_axes=("data",)):
+    """Specs for input batches. With client_axes set, leaves are (C, b, ...)
+    and C shards over the client axes; otherwise dim0 is the global batch."""
+    lead = client_axes if client_axes is not None else batch_axes
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        size = _axis_prod(mesh, lead)
+        if leaf.shape[0] % size == 0 and leaf.shape[0] >= size:
+            return NamedSharding(mesh, P(lead, *([None] * (nd - 1))))
+        # M-RoPE positions (3,B,S) and tiny leading dims: try dim1
+        if nd >= 2 and leaf.shape[1] % size == 0 and leaf.shape[1] >= size:
+            return NamedSharding(mesh, P(None, lead, *([None] * (nd - 2))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return spec
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache, *,
+                    batch_axes=("data",)):
+    """KV/recurrent cache sharding for serving.
+
+    batch -> data axes when divisible; else (batch==1 long-context) the
+    sequence/window dim -> data. kv-heads -> model when divisible, else
+    head_dim -> model.
+    """
+    bsize = _axis_prod(mesh, batch_axes)
+    msize = _axis_prod(mesh, MODEL_AXIS)
+
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        name = pstr.split("/")[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        stacked = pstr.split("/")[0].startswith("g")  # leading scan-rep dim
+        off = 1 if stacked else 0
+        dims = [None] * nd
+        bdim = off  # batch dim
+
+        def put(dim, axis, size):
+            if dim < nd and dims[dim] is None and shape[dim] % size == 0 \
+                    and shape[dim] >= size:
+                dims[dim] = axis
+                return True
+            return False
+
+        if name in ("k", "v"):           # (B, S, K, hd)
+            if not put(bdim, batch_axes, bsize):
+                put(bdim + 1, batch_axes, bsize)          # seq over data
+            if not put(bdim + 2, MODEL_AXIS, msize):      # kv heads
+                put(bdim + 3, MODEL_AXIS, msize)          # head_dim
+        elif name in ("ckv", "kpe"):     # (B, S, rank)
+            if not put(bdim, batch_axes, bsize):
+                put(bdim + 1, batch_axes, bsize)
+            put(bdim + 2, MODEL_AXIS, msize)
+        elif name in ("state",):         # (B, W)
+            put(bdim, batch_axes, bsize)
+            put(bdim + 1, MODEL_AXIS, msize)
+        elif name == "C":                # (B, H, dk, dv)
+            put(bdim, batch_axes, bsize)
+            put(bdim + 3, MODEL_AXIS, msize)
+        elif name in ("n", "h", "c", "m"):
+            put(bdim, batch_axes, bsize)
+        elif name == "conv":             # (B, cw-1, W)
+            put(bdim, batch_axes, bsize)
+            put(bdim + 2, MODEL_AXIS, msize)
+        else:
+            put(bdim, batch_axes, bsize)
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,56 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_mean_axis0(tree):
+    """Mean over a leading (client) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_sq_norm(tree):
+    return tree_dot(tree, tree)
+
+
+def tree_count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_any_nan(tree):
+    flags = [jnp.any(jnp.isnan(x)) for x in jax.tree.leaves(tree)
+             if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.any(jnp.stack(flags)) if flags else jnp.asarray(False)

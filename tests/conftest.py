@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# run on the single real CPU device. Only launch/dryrun.py forces 512
+# placeholder devices (in its own process).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,86 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each instantiates a REDUCED variant of the same family (2 layers,
+d_model<=512, <=4 experts) and runs one forward + one federated
+Fed-Sophia training round on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import FedConfig
+from repro.core.fed import FedEngine
+from repro.models import transformer as T
+
+ARCHS = configs.ARCH_IDS
+
+
+def _reduced(arch_id):
+    return configs.get_model_config(arch_id).reduced(d_model=128)
+
+
+def _batch(cfg, C, b, S, key):
+    if cfg.embedding_inputs:
+        batch = {"embeds": jax.random.normal(key, (C, b, S, cfg.d_model))}
+    else:
+        batch = {"tokens": jax.random.randint(key, (C, b, S), 0,
+                                              cfg.vocab_size)}
+    batch["labels"] = jax.random.randint(
+        jax.random.fold_in(key, 1), (C, b, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_no_nan(arch):
+    cfg = _reduced(arch)
+    assert cfg.num_layers <= 8 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = T.init_lm(key, cfg)
+    B, S = 2, 16
+    batch = jax.tree.map(lambda x: x[0], _batch(cfg, 1, B, S, key))
+    logits, _, aux = T.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_fed_sophia_round(arch):
+    cfg = _reduced(arch)
+    task = T.LMTask(cfg)
+    overrides = configs.get_fed_overrides(arch)
+    fed = FedConfig(num_clients=2, local_iters=2, optimizer="fed_sophia",
+                    lr=1e-3, tau=2,
+                    strategy=overrides.get("strategy", "parallel"),
+                    schedule=overrides.get("schedule", "const"))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(1))
+    batch = _batch(cfg, 2, 2, 16, jax.random.PRNGKey(2))
+    state, metrics = jax.jit(eng.round)(state, batch, jax.random.PRNGKey(3))
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    assert not any(bool(jnp.any(jnp.isnan(l)))
+                   for l in jax.tree.leaves(state["params"])
+                   if jnp.issubdtype(l.dtype, jnp.floating)), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert-xlarge"])
+def test_reduced_decode_step(arch):
+    cfg = _reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_lm(key, cfg)
+    B = 2
+    cache = T.init_cache(cfg, B, 32)
+    if cfg.embedding_inputs:
+        batch = {"embeds": jax.random.normal(key, (B, 1, cfg.d_model))}
+    else:
+        batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    logits, new_cache = jax.jit(
+        lambda p, b, c: T.decode_step(p, cfg, b, c, jnp.asarray(5, jnp.int32))
+    )(params, batch, cache)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)

@@ -1,0 +1,56 @@
+"""Dry-run smoke test: the launch machinery must lower+compile reduced
+configs on an 8-device placeholder mesh, in a subprocess (device-count env
+must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("minicpm-2b", "train_4k"),
+    ("qwen3-moe-235b-a22b", "train_4k"),       # sequential + MoE
+    ("gemma2-9b", "prefill_32k"),
+    ("deepseek-v2-lite-16b", "decode_32k"),    # MLA cache
+    ("xlstm-1.3b", "long_500k"),               # recurrent decode
+])
+def test_dryrun_reduced_small_mesh(arch, shape, tmp_path):
+    r = _run(["--arch", arch, "--shape", shape, "--small-mesh", "--reduced",
+              "--local-iters", "2", "--out-dir", str(tmp_path)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    files = os.listdir(tmp_path)
+    assert len(files) == 1
+    rec = json.load(open(tmp_path / files[0]))
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["hlo_flops_per_dev"] > 0
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory",
+                                             "collective")
+
+
+def test_dryrun_multipod_reduced(tmp_path):
+    r = _run(["--arch", "recurrentgemma-2b", "--shape", "train_4k",
+              "--small-mesh", "--multi-pod", "--reduced",
+              "--local-iters", "2", "--out-dir", str(tmp_path)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(tmp_path / os.listdir(tmp_path)[0]))
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["mesh_shape"].get("pod") == 2
+
+
+def test_dryrun_skip_rules(tmp_path):
+    r = _run(["--arch", "hubert-xlarge", "--shape", "decode_32k",
+              "--small-mesh", "--reduced", "--out-dir", str(tmp_path)])
+    assert r.returncode == 0
+    assert "skipped" in r.stdout

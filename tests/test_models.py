@@ -1,0 +1,217 @@
+"""Model-zoo correctness: decode==prefill consistency, chunked attention
+vs dense, recurrent blocks vs step-by-step oracles, MoE dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models import transformer as T
+
+BASE = dict(num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+            d_ff=128, vocab_size=128)
+
+
+def _cfg(**kw):
+    d = {**BASE, **kw}
+    fam = d.pop("family", "dense")
+    name = d.pop("name", "t")
+    return ModelConfig(name=name, family=fam, **d)
+
+
+# --------------------------------------------------------------- attention
+def test_chunked_attention_matches_dense():
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    pos = jnp.arange(S)
+    for window, softc in [(None, None), (16, None), (None, 30.0)]:
+        bias = L.attn_mask_bias(pos, pos, causal=True, window=window)
+        dense = L.attention_dense(q, k, v, bias, 0.25, softc)
+        chunk = L.attention_chunked(q, k, v, q_pos=pos, k_pos=pos,
+                                    causal=True, window=window, scale=0.25,
+                                    softcap_val=softc, kv_chunk=16)
+        np.testing.assert_allclose(dense, chunk, rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------- decode == full forward
+def _decode_consistency(cfg, S=32, B=2, atol=2e-3):
+    key = jax.random.PRNGKey(0)
+    params = T.init_lm(key, cfg)
+    if cfg.embedding_inputs:
+        feats = jax.random.normal(key, (B, S + 1, cfg.d_model))
+        full_batch = {"embeds": feats}
+        tok = lambda i: {"embeds": feats[:, i:i + 1]}
+    else:
+        tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+        full_batch = {"tokens": tokens}
+        tok = lambda i: {"tokens": tokens[:, i:i + 1]}
+
+    logits_full, cache_pre, _ = T.forward(
+        params, cfg, jax.tree.map(lambda x: x[:, :S], full_batch),
+        want_cache=True, remat=False)
+    cache = T.prefill_to_decode_cache(cfg, cache_pre, S, S + 4)
+    logits_dec, _ = T.decode_step(params, cfg, tok(S), cache,
+                                  jnp.asarray(S, jnp.int32))
+    logits_ref, _, _ = T.forward(params, cfg, full_batch, remat=False)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_ref[:, S]),
+                               rtol=1e-3, atol=atol)
+
+
+def test_decode_gqa():
+    _decode_consistency(_cfg(qk_norm=True))
+
+
+def test_decode_local_global():
+    _decode_consistency(_cfg(block_pattern=("local", "global"), window=8,
+                             softcap_attn=50.0, softcap_final=30.0,
+                             post_norm=True, ffn_kind="geglu"))
+
+
+def test_decode_mla():
+    _decode_consistency(_cfg(head_dim=32, mla=MLAConfig(32, 16, 8, 16)))
+
+
+def test_decode_moe():
+    # capacity is per-sequence-length; decode (S=1) routes every token,
+    # prefill may drop -> compare with generous capacity
+    cfg = _cfg(family="moe",
+               moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                             capacity_factor=4.0))
+    _decode_consistency(cfg)
+
+
+def test_decode_xlstm():
+    cfg = _cfg(family="ssm", d_ff=0, block_pattern=("m", "m", "m", "s"))
+    _decode_consistency(cfg)
+
+
+def test_decode_recurrentgemma():
+    cfg = _cfg(family="hybrid", num_layers=5,
+               block_pattern=("rec", "rec", "local"), window=8, lru_width=48)
+    assert len(cfg.pattern_remainder) == 2    # exercises remainder blocks
+    _decode_consistency(cfg)
+
+
+def test_decode_mrope():
+    cfg = _cfg(family="vlm", mrope_sections=(8, 4, 4), head_dim=32,
+               embedding_inputs=True)
+    _decode_consistency(cfg)
+
+
+def test_decode_partial_rotary():
+    _decode_consistency(_cfg(rotary_pct=0.5))
+
+
+# ----------------------------------------------------- recurrent oracles
+def test_rglru_matches_step_oracle():
+    cfg = _cfg(lru_width=32)
+    key = jax.random.PRNGKey(3)
+    p = R.init_rglru(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 24, cfg.d_model))
+    out, cache = R.rglru_apply(p, cfg, x, None)
+    # step-by-step oracle
+    c = R.init_rglru_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(24):
+        o, c = R.rglru_apply(p, cfg, x[:, t:t + 1], None, cache=c, pos=t)
+        outs.append(o)
+    oracle = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out, oracle, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cache["state"], c["state"], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_mlstm_chunked_matches_step_oracle():
+    cfg = _cfg(d_ff=0, num_layers=2, block_pattern=("m",))
+    key = jax.random.PRNGKey(4)
+    p = R.init_mlstm(key, cfg, jnp.float32)
+    S = 32
+    x = jax.random.normal(key, (2, S, cfg.d_model))
+    out, cache = R.mlstm_apply(p, cfg, x, None)
+    c = R.init_mlstm_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, c = R.mlstm_apply(p, cfg, x[:, t:t + 1], None, cache=c, pos=t)
+        outs.append(o)
+    oracle = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out, oracle, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(cache["C"], c["C"], rtol=5e-4, atol=5e-4)
+
+
+def test_slstm_decode_matches_scan():
+    cfg = _cfg(d_ff=0, num_layers=1, block_pattern=("s",))
+    key = jax.random.PRNGKey(5)
+    p = R.init_slstm(key, cfg, jnp.float32)
+    S = 16
+    x = jax.random.normal(key, (2, S, cfg.d_model))
+    out, _ = R.slstm_apply(p, cfg, x, None)
+    c = R.init_slstm_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, c = R.slstm_apply(p, cfg, x[:, t:t + 1], None, cache=c, pos=t)
+        outs.append(o)
+    np.testing.assert_allclose(out, jnp.concatenate(outs, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- MoE
+def test_moe_respects_capacity_and_gates():
+    cfg = _cfg(family="moe",
+               moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                             capacity_factor=1.0))
+    key = jax.random.PRNGKey(6)
+    p = L.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    out, aux = L.moe_apply(p, cfg, x)
+    assert out.shape == x.shape
+    assert jnp.isfinite(aux) and aux >= 0
+    # zero-capacity dropping must not produce NaN
+    assert not jnp.any(jnp.isnan(out))
+
+
+def test_moe_aux_loss_balanced_is_one_coef():
+    """Perfectly uniform router -> aux == coef (E * (1/E) * 1)."""
+    cfg = _cfg(family="moe",
+               moe=MoEConfig(num_experts=4, top_k=1, d_ff_expert=16,
+                             aux_loss_coef=0.01))
+    key = jax.random.PRNGKey(7)
+    p = L.init_moe(key, cfg, jnp.float32)
+    p["router"] = jnp.zeros_like(p["router"])   # uniform probs
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    _, aux = L.moe_apply(p, cfg, x)
+    np.testing.assert_allclose(aux, 0.01, rtol=0.3)
+
+
+# --------------------------------------------------------------- RoPE
+def test_rope_preserves_norm():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = L.apply_rope(x, pos, cfg)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+
+    def score(i, j):
+        qi = L.apply_rope(q, jnp.full((1, 1), i), cfg)
+        kj = L.apply_rope(k, jnp.full((1, 1), j), cfg)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(score(3, 1) - score(10, 8)) < 1e-4
+    assert abs(score(5, 5) - score(0, 0)) < 1e-4

@@ -1,0 +1,87 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import sophia
+from repro.kernels.ref import sophia_update_ref
+from repro.kernels.sophia_update import sophia_update_flat
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+floats = st.floats(min_value=-100.0, max_value=100.0, allow_nan=False,
+                   width=32)
+pos_floats = st.floats(min_value=0.0, max_value=100.0, allow_nan=False,
+                       width=32)
+
+
+@settings(**SETTINGS)
+@given(z=hnp.arrays(np.float32, hnp.array_shapes(max_dims=2, max_side=16),
+                    elements=floats),
+       rho=st.floats(min_value=0.0009765625, max_value=1.0, width=32))
+def test_clip_is_bounded_and_idempotent(z, rho):
+    out = sophia.clip(jnp.asarray(z), rho)
+    assert np.all(np.abs(np.asarray(out)) <= rho + 1e-7)
+    np.testing.assert_array_equal(np.asarray(sophia.clip(out, rho)),
+                                  np.asarray(out))
+
+
+@settings(**SETTINGS)
+@given(m0=floats, g=floats, b1=st.floats(min_value=0.0, max_value=1.0,
+                                         width=32))
+def test_m_ema_convex_combination(m0, g, b1):
+    out = float(sophia.update_m({"x": jnp.float32(m0)},
+                                {"x": jnp.float32(g)}, b1)["x"])
+    lo, hi = min(m0, g), max(m0, g)
+    assert lo - 1e-3 <= out <= hi + 1e-3
+
+
+@settings(**SETTINGS)
+@given(theta=hnp.arrays(np.float32, (8, 128), elements=floats),
+       g=hnp.arrays(np.float32, (8, 128), elements=floats),
+       hh=hnp.arrays(np.float32, (8, 128), elements=pos_floats),
+       lr=st.floats(min_value=7.62939453125e-06, max_value=0.125, width=32),
+       do_h=st.sampled_from([0.0, 1.0]))
+def test_kernel_equals_oracle_property(theta, g, hh, lr, do_h):
+    """Pallas kernel == oracle for arbitrary inputs (the per-kernel
+    allclose requirement, driven by hypothesis)."""
+    m = 0.1 * g
+    h = 0.5 * hh
+    hp = dict(beta1=0.9, beta2=0.95, rho=0.04, eps=1e-12, weight_decay=1e-4)
+    out = sophia_update_flat(jnp.asarray(theta), jnp.asarray(m),
+                             jnp.asarray(h), jnp.asarray(g),
+                             jnp.asarray(hh), do_h, lr, interpret=True, **hp)
+    ref = sophia_update_ref(theta, m, h, g, hh, do_h, lr=lr, **hp)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(theta=hnp.arrays(np.float32, (4, 16), elements=floats),
+       lr=st.floats(min_value=7.62939453125e-06, max_value=0.125, width=32),
+       rho=st.floats(min_value=0.0009765625, max_value=1.0, width=32))
+def test_update_bounded_step_property(theta, lr, rho):
+    """Paper's guarantee: per-coordinate move (beyond weight decay) is
+    bounded by lr * rho regardless of gradient/Hessian values."""
+    key = jax.random.PRNGKey(0)
+    m = 100.0 * jax.random.normal(key, theta.shape)
+    h = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), theta.shape))
+    out = sophia.apply_update({"t": jnp.asarray(theta)}, {"t": m}, {"t": h},
+                              lr=lr, rho=rho, eps=1e-12, weight_decay=0.0)
+    delta = np.abs(np.asarray(out["t"]) - theta)
+    # allow one ulp of theta for the float32 subtract
+    assert np.all(delta <= lr * rho * (1 + 1e-5) + 1e-5 * np.abs(theta) + 1e-6)
+
+
+@settings(**SETTINGS)
+@given(vals=hnp.arrays(np.float32, (3, 5, 7), elements=floats))
+def test_aggregation_mean_bounds(vals):
+    """Server aggregate lies in the per-coordinate convex hull of client
+    params (Eq. 4 sanity)."""
+    from repro.utils.tree import tree_mean_axis0
+    agg = np.asarray(tree_mean_axis0({"w": jnp.asarray(vals)})["w"])
+    assert np.all(agg <= vals.max(axis=0) + 1e-5)
+    assert np.all(agg >= vals.min(axis=0) - 1e-5)

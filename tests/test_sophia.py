@@ -1,0 +1,81 @@
+"""Unit tests for the Sophia update (Alg. 1 lines 7-16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sophia
+
+
+def _tree():
+    return {"a": jnp.array([1.0, -2.0, 3.0]),
+            "b": {"c": jnp.ones((2, 2))}}
+
+
+def test_init_state_zeros():
+    st = sophia.init_state(_tree())
+    for leaf in jax.tree.leaves(st.m) + jax.tree.leaves(st.h):
+        assert jnp.all(leaf == 0)
+
+
+def test_update_m_ema():
+    m = {"a": jnp.array([1.0])}
+    g = {"a": jnp.array([3.0])}
+    out = sophia.update_m(m, g, beta1=0.9)
+    np.testing.assert_allclose(out["a"], 0.9 * 1.0 + 0.1 * 3.0)
+
+
+def test_update_h_ema():
+    h = {"a": jnp.array([2.0])}
+    e = {"a": jnp.array([4.0])}
+    out = sophia.update_h(h, e, beta2=0.95)
+    np.testing.assert_allclose(out["a"], 0.95 * 2.0 + 0.05 * 4.0, rtol=1e-6)
+
+
+def test_clip_bounds():
+    z = jnp.array([-5.0, -0.01, 0.0, 0.02, 7.0])
+    out = sophia.clip(z, 0.04)
+    assert jnp.all(out <= 0.04) and jnp.all(out >= -0.04)
+    np.testing.assert_allclose(out, [-0.04, -0.01, 0.0, 0.02, 0.04])
+
+
+def test_apply_update_matches_manual():
+    lr, rho, eps, wd = 0.01, 0.05, 1e-12, 0.1
+    theta = jnp.array([1.0, -1.0])
+    m = jnp.array([0.5, -2.0])
+    h = jnp.array([10.0, 0.0])      # second entry exercises eps guard
+    out = sophia.apply_update({"t": theta}, {"t": m}, {"t": h},
+                              lr=lr, rho=rho, eps=eps, weight_decay=wd)["t"]
+    t1 = theta - lr * wd * theta
+    step = jnp.clip(m / jnp.maximum(h, eps), -rho, rho)
+    np.testing.assert_allclose(out, t1 - lr * step, rtol=1e-6)
+
+
+def test_step_size_bounded_by_lr_rho():
+    """|theta_new - theta_wd| <= lr*rho elementwise — the paper's guard."""
+    key = jax.random.PRNGKey(0)
+    theta = {"w": jax.random.normal(key, (64,))}
+    grads = {"w": 100.0 * jax.random.normal(jax.random.fold_in(key, 1), (64,))}
+    st = sophia.init_state(theta)
+    h_hat = {"w": jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (64,)))}
+    lr, rho = 0.01, 0.04
+    new, _ = sophia.sophia_step(theta, grads, st, h_hat, jnp.asarray(True),
+                                lr=lr, beta1=0.9, beta2=0.95, rho=rho,
+                                eps=1e-12, weight_decay=0.0)
+    delta = jnp.abs(new["w"] - theta["w"])
+    assert jnp.all(delta <= lr * rho + 1e-7)
+
+
+def test_h_update_gating():
+    theta = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.ones((4,))}
+    st = sophia.init_state(theta)
+    h_hat = {"w": 2.0 * jnp.ones((4,))}
+    _, st_on = sophia.sophia_step(theta, grads, st, h_hat, jnp.asarray(True),
+                                  lr=0.1, beta1=0.9, beta2=0.5, rho=1.0,
+                                  eps=1e-12, weight_decay=0.0)
+    _, st_off = sophia.sophia_step(theta, grads, st, h_hat, jnp.asarray(False),
+                                   lr=0.1, beta1=0.9, beta2=0.5, rho=1.0,
+                                   eps=1e-12, weight_decay=0.0)
+    np.testing.assert_allclose(st_on.h["w"], 1.0)   # 0.5*0 + 0.5*2
+    np.testing.assert_allclose(st_off.h["w"], 0.0)  # unchanged
