@@ -1,0 +1,24 @@
+# Tier-1 verify targets. `test-fast` is the default CI gate: collection
+# plus the fast subset (pytest.ini deselects `slow`), so regressions
+# like a hard import of an optional dependency are caught in minutes.
+PY := PYTHONPATH=src python
+
+.PHONY: test-fast test-slow test-all collect bench-comm example-comm
+
+test-fast:
+	$(PY) -m pytest -q
+
+test-slow:
+	$(PY) -m pytest -q -m slow
+
+test-all:
+	$(PY) -m pytest -q -m ""
+
+collect:
+	$(PY) -m pytest -q --collect-only > /dev/null
+
+bench-comm:
+	$(PY) -m benchmarks.run --only comm
+
+example-comm:
+	$(PY) examples/comm_compression.py

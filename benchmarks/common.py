@@ -8,7 +8,8 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FedConfig
+from repro.comm import accounting as comm_accounting
+from repro.configs.base import CommConfig, FedConfig
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
 from repro.models.small import CNNTask, MLPTask
@@ -23,10 +24,12 @@ def make_task(model: str):
 
 
 def make_fed(optimizer: str, *, clients: int, local_iters: int, lr: float,
-             tau: int = 5, rounds: int = 60) -> FedConfig:
+             tau: int = 5, rounds: int = 60,
+             comm: Optional[CommConfig] = None) -> FedConfig:
     return FedConfig(num_clients=clients, local_iters=local_iters,
                      optimizer=optimizer, lr=lr, tau=tau,
-                     total_rounds=rounds)
+                     total_rounds=rounds,
+                     comm=comm if comm is not None else CommConfig())
 
 
 DEFAULT_LR = {"fed_sophia": 0.02, "fedavg": 0.05, "done": 1.0,
@@ -40,13 +43,18 @@ class RunResult:
     rounds_to_target: Optional[int]
     seconds_per_round: float
     local_iters: int
+    uplink_bytes_per_round: int = 0
+    # exact cumulative uplink bytes when the target accuracy was reached
+    # (None if never reached) — the Fig. 3-style x-axis
+    bytes_to_target: Optional[int] = None
 
 
 def run_federated(model: str, dataset: str, optimizer: str, *,
                   clients: int = 8, rounds: int = 40, local_iters: int = 10,
                   lr: Optional[float] = None, tau: int = 5,
                   batch: int = 64, target_acc: float = 0.75,
-                  seed: int = 0, eval_every: int = 1) -> RunResult:
+                  seed: int = 0, eval_every: int = 1,
+                  comm: Optional[CommConfig] = None) -> RunResult:
     key = jax.random.PRNGKey(seed)
     x, y = syn.make_image_data(key, N_SAMPLES, dataset,
                                noise=NOISE[dataset])
@@ -56,16 +64,22 @@ def run_federated(model: str, dataset: str, optimizer: str, *,
     task = make_task(model)
     fed = make_fed(optimizer, clients=clients, local_iters=local_iters,
                    lr=lr if lr is not None else DEFAULT_LR[optimizer],
-                   tau=tau, rounds=rounds)
+                   tau=tau, rounds=rounds, comm=comm)
     engine = FedEngine(task, fed)
     state = engine.init(jax.random.fold_in(key, 2))
     round_fn = jax.jit(engine.round)
     teb = syn.client_batches(jax.random.fold_in(key, 3), x, y, te, 128)
     acc_fn = jax.jit(lambda p: jnp.mean(jax.vmap(
         lambda b: task.accuracy(p, b))(teb)))
+    # exact per-round uplink from the accounting model (the in-metrics
+    # float32 mirror loses precision above ~16M params)
+    n_params = num_params(model)
+    per_round_up = comm_accounting.round_bytes(
+        fed.comm, n_params, clients)["uplink_bytes"]
 
     accs, losses = [], []
     rounds_to_target = None
+    bytes_to_target = None
     t0 = time.time()
     for r in range(rounds):
         batches = syn.client_batches(jax.random.fold_in(key, 100 + r),
@@ -78,10 +92,13 @@ def run_federated(model: str, dataset: str, optimizer: str, *,
             accs.append(acc)
             if rounds_to_target is None and acc >= target_acc:
                 rounds_to_target = r + 1
+                bytes_to_target = per_round_up * (r + 1)
     dt = (time.time() - t0) / rounds
     return RunResult(accs=accs, losses=losses,
                      rounds_to_target=rounds_to_target,
-                     seconds_per_round=dt, local_iters=local_iters)
+                     seconds_per_round=dt, local_iters=local_iters,
+                     uplink_bytes_per_round=per_round_up,
+                     bytes_to_target=bytes_to_target)
 
 
 def flops_per_local_iter(model: str, batch: int = 64) -> float:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.configs.base import CommConfig
 from repro.metrics import energy
 
 
@@ -122,6 +123,44 @@ def table2_energy(paper_scale: bool, out: dict):
     out["table2"] = res
 
 
+# ------------------------------------------------------------- Fig. comm
+def fig_comm_bytes(paper_scale: bool, out: dict):
+    """Accuracy vs bytes on the wire: Fed-Sophia on the MNIST-synthetic
+    CNN under each uplink compressor at a matched round count.
+
+    Columns: per-round uplink, reduction vs fp32 identity, and the
+    bytes-to-target-accuracy x-axis (methodology: benchmarks/README.md).
+    """
+    clients = 32 if paper_scale else 6
+    rounds = 16
+    comms = {
+        "identity": CommConfig(),
+        "int8": CommConfig(compressor="int8"),
+        "int4": CommConfig(compressor="int4"),
+        "topk": CommConfig(compressor="topk", topk_ratio=0.05),
+        "signsgd": CommConfig(compressor="signsgd"),
+    }
+    base_up = None
+    for name, comm in comms.items():
+        res = common.run_federated("cnn", "mnist", "fed_sophia",
+                                   clients=clients, rounds=rounds,
+                                   local_iters=10, comm=comm)
+        if base_up is None:
+            base_up = res.uplink_bytes_per_round
+        ratio = base_up / res.uplink_bytes_per_round
+        _row(f"comm/cnn/mnist/{name}", res.seconds_per_round * 1e6,
+             f"uplink_B_per_round={res.uplink_bytes_per_round}"
+             f";reduction_x={ratio:.2f}"
+             f";bytes_to_75={res.bytes_to_target}"
+             f";final_acc={res.accs[-1]:.3f}")
+        out[f"comm/cnn/mnist/{name}"] = {
+            "uplink_bytes_per_round": res.uplink_bytes_per_round,
+            "reduction_x": ratio,
+            "bytes_to_75": res.bytes_to_target,
+            "accs": res.accs,
+        }
+
+
 # ----------------------------------------------------- kernel micro-bench
 def bench_sophia_kernel(out: dict):
     """Fused Pallas Sophia step (interpret) vs pure-JAX reference."""
@@ -154,13 +193,14 @@ ALL = {
     "fig3": fig3_total_iterations,
     "table1": table1_hyperparams,
     "table2": table2_energy,
+    "comm": fig_comm_bytes,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="fig2|fig3|table1|table2|kernel|all")
+                    help="fig2|fig3|table1|table2|comm|kernel|all")
     ap.add_argument("--paper", action="store_true",
                     help="paper scale: 32 clients (slow on CPU)")
     ap.add_argument("--out", default="experiments/bench_results.json")

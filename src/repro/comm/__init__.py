@@ -1,0 +1,19 @@
+"""repro.comm — client<->server communication layer.
+
+Models the uplink/downlink of a federated round as an explicit pipeline:
+pack the client param-delta into a flat wire buffer, compress it
+(optionally with per-client error feedback), aggregate the decoded
+deltas over the sampled participants, and account for every byte that
+would cross the wire.  See `repro.core.fed.FedEngine._round_comm` for
+the integration point and `benchmarks/README.md` for the accounting
+methodology.
+"""
+from repro.comm.accounting import round_bytes, wire_bits, wire_bytes
+from repro.comm.compressors import make_compressor, participation_mask
+from repro.comm.flat import FlatSpec, flat_spec, pack, unpack
+
+__all__ = [
+    "FlatSpec", "flat_spec", "pack", "unpack",
+    "make_compressor", "participation_mask",
+    "wire_bits", "wire_bytes", "round_bytes",
+]

@@ -1,0 +1,60 @@
+"""Exact bytes-on-the-wire accounting for a federated round.
+
+Single source of truth for what each compressor would actually transmit
+(payload bits, not simulation container sizes — int4 codes count 4 bits
+even though the simulation stores them in an int8 array).  Methodology
+is documented in `benchmarks/README.md`.
+
+All functions are pure Python over static config — call them outside
+jit and feed the results to reports; `FedEngine.round` mirrors them as
+float32 metrics for convenience.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs.base import CommConfig
+
+FP32_BITS = 32
+
+
+def _num_groups(comm: CommConfig, n_params: int) -> int:
+    return -(-n_params // comm.quant_block)
+
+
+def topk_k(comm: CommConfig, n_params: int) -> int:
+    return min(n_params, max(1, math.ceil(comm.topk_ratio * n_params)))
+
+
+def wire_bits(comm: CommConfig, n_params: int) -> int:
+    """Uplink payload bits for ONE client's compressed delta."""
+    c = comm.compressor
+    if c == "identity":
+        return FP32_BITS * n_params
+    if c == "int8":
+        return 8 * n_params + FP32_BITS * _num_groups(comm, n_params)
+    if c == "int4":
+        return 4 * n_params + FP32_BITS * _num_groups(comm, n_params)
+    if c == "topk":
+        # (int32 index, fp32 value) per surviving coordinate
+        return topk_k(comm, n_params) * (32 + FP32_BITS)
+    if c == "signsgd":
+        return n_params + FP32_BITS          # 1 bit/coord + one scale
+    raise ValueError(f"unknown compressor {c!r}")
+
+
+def wire_bytes(comm: CommConfig, n_params: int) -> int:
+    return -(-wire_bits(comm, n_params) // 8)
+
+
+def round_bytes(comm: CommConfig, n_params: int,
+                num_clients: int) -> Dict[str, int]:
+    """Per-round totals: S participants upload compressed deltas, and the
+    server broadcasts the fp32 global model back to the same S clients."""
+    s = comm.num_participants(num_clients)
+    return {
+        "participants": s,
+        "uplink_bytes": s * wire_bytes(comm, n_params),
+        "downlink_bytes": s * 4 * n_params,
+    }

@@ -1,0 +1,226 @@
+"""Uplink compressors over the packed (rows, cols) fp32 wire buffer.
+
+Each compressor is a pure function pair ``encode -> payload`` /
+``decode -> reconstruction`` (the wire format tests inspect payloads
+directly), plus a fused ``roundtrip`` used by the engine — the pure-JAX
+encode/decode composition by default, or the fused Pallas kernel from
+`repro.kernels.quantize` when ``CommConfig.use_pallas`` is set.  Both
+paths consume the same `jax.random` noise, so they agree to float
+rounding.
+
+Everything here is vmap/scan-compatible: the engine calls ``roundtrip``
+once per client under either execution strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import accounting
+from repro.comm.flat import FlatSpec
+from repro.configs.base import CommConfig
+
+from repro.kernels import INTERPRET as _INTERPRET
+
+Payload = Dict[str, jnp.ndarray]
+
+# compressors whose reconstruction is a biased estimator of the input —
+# these need error feedback to converge; the unbiased quantizers do not
+BIASED = frozenset({"topk", "signsgd"})
+
+
+def wants_error_feedback(comm: CommConfig) -> bool:
+    """Whether the engine should materialise per-client EF residuals.
+
+    ``error_feedback="auto"`` (the default) enables EF exactly for the
+    biased compressors — unbiased int8/int4 would otherwise pay C full
+    fp32 model copies of HBM for a variance reduction they don't need.
+    """
+    if comm.lossless:
+        return False
+    if comm.error_feedback == "auto":
+        return comm.compressor in BIASED
+    return bool(comm.error_feedback)
+
+
+def participation_mask(key, num_clients: int,
+                       num_participants: int) -> jnp.ndarray:
+    """Seeded, jit-compatible uniform sample of S of C clients.
+
+    permutation(arange(C)) assigns each client a distinct uniform rank;
+    rank < S selects exactly S clients. Returns a float32 0/1 mask (C,).
+    """
+    ranks = jax.random.permutation(key, num_clients)
+    return (ranks < num_participants).astype(jnp.float32)
+
+
+def participation_indices(key, num_clients: int,
+                          num_participants: int) -> jnp.ndarray:
+    """The same sample as `participation_mask`, as S sorted client ids —
+    the gather form, so the engine trains only the participants."""
+    ranks = jax.random.permutation(key, num_clients)
+    return jnp.sort(jnp.argsort(ranks)[:num_participants])
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base: lossless identity (the wire carries the raw fp32 delta)."""
+    cfg: CommConfig
+    spec: FlatSpec
+
+    # -- wire format ----------------------------------------------------
+    def encode(self, key, flat) -> Payload:
+        del key
+        return {"x": flat}
+
+    def decode(self, payload: Payload) -> jnp.ndarray:
+        return payload["x"]
+
+    def stat(self, payload: Payload) -> jnp.ndarray:
+        """Scalar the server aggregates alongside the decoded delta
+        (signsgd majority vote needs the mean client scale)."""
+        del payload
+        return jnp.zeros((), jnp.float32)
+
+    # -- engine entry points --------------------------------------------
+    def roundtrip(self, key, flat) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """decode(encode(flat)) plus the aggregation stat, fused where a
+        Pallas kernel exists."""
+        payload = self.encode(key, flat)
+        return self.decode(payload), self.stat(payload)
+
+    def server_combine(self, agg, wstat):
+        """Hook applied to the participation-weighted mean of decoded
+        deltas (wstat = weighted mean of per-client stats)."""
+        del wstat
+        return agg
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuant(Compressor):
+    """int8/int4 stochastic quantization, one fp32 scale per packed row.
+
+    scale = max|row| / qmax, q = floor(x/scale + u), u ~ U[0,1):
+    E[q * scale] = x, so the compressor is unbiased (up to the clip of
+    the single max-magnitude coordinate).  int4 codes are simulated in
+    an int8 container; byte accounting charges 4 bits (see
+    repro.comm.accounting).
+    """
+    bits: int = 8
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    def _scales(self, flat):
+        return jnp.max(jnp.abs(flat), axis=1, keepdims=True) / self.qmax
+
+    def encode(self, key, flat) -> Payload:
+        scale = self._scales(flat)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        u = jax.random.uniform(key, flat.shape)
+        q = jnp.clip(jnp.floor(flat / safe + u), -self.qmax, self.qmax)
+        return {"q": q.astype(jnp.int8), "scale": scale}
+
+    def decode(self, payload: Payload) -> jnp.ndarray:
+        return payload["q"].astype(jnp.float32) * payload["scale"]
+
+    def roundtrip(self, key, flat):
+        if not self.cfg.use_pallas:
+            return super().roundtrip(key, flat)
+        from repro.kernels.quantize import quant_roundtrip_flat
+        u = jax.random.uniform(key, flat.shape)
+        xhat = quant_roundtrip_flat(flat, u, self._scales(flat),
+                                    qmax=self.qmax, interpret=_INTERPRET)
+        return xhat, jnp.zeros((), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Magnitude top-k sparsification (biased -> wants error feedback).
+
+    Wire format: (int32 index, fp32 value) per surviving coordinate,
+    k = ceil(topk_ratio * n_params).  The zero pad tail can never win a
+    slot against any nonzero coordinate, but k is capped to the true
+    element count anyway.
+    """
+
+    @property
+    def k(self) -> int:
+        return min(accounting.topk_k(self.cfg, self.spec.total),
+                   self.spec.total)
+
+    def encode(self, key, flat) -> Payload:
+        del key
+        v = flat.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(v), self.k)
+        return {"idx": idx.astype(jnp.int32), "val": v[idx]}
+
+    def decode(self, payload: Payload) -> jnp.ndarray:
+        n = self.spec.padded
+        flat = jnp.zeros((n,), jnp.float32).at[payload["idx"]].set(
+            payload["val"])
+        return flat.reshape(self.spec.rows, self.spec.cols)
+
+    def roundtrip(self, key, flat):
+        if not self.cfg.use_pallas:
+            return super().roundtrip(key, flat)
+        from repro.kernels.quantize import topk_threshold_flat
+        vals = jax.lax.top_k(jnp.abs(flat.reshape(-1)), self.k)[0]
+        xhat = topk_threshold_flat(flat, vals[-1], interpret=_INTERPRET)
+        return xhat, jnp.zeros((), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignSGD(Compressor):
+    """1-bit sign compression with a single fp32 magnitude scale.
+
+    decode = scale * sign(x) with scale = mean|x| (EF-signSGD).  With
+    ``sign_majority`` the server additionally takes the sign of the
+    scale-weighted client vote and rescales by the mean client scale —
+    the majority-vote rule of Bernstein et al., weighted by magnitude.
+    """
+
+    def _scale(self, flat):
+        return jnp.sum(jnp.abs(flat)) / self.spec.total
+
+    def encode(self, key, flat) -> Payload:
+        del key
+        return {"sign": jnp.sign(flat).astype(jnp.int8),
+                "scale": self._scale(flat)}
+
+    def decode(self, payload: Payload) -> jnp.ndarray:
+        return (payload["sign"].astype(jnp.float32)
+                * payload["scale"].astype(jnp.float32))
+
+    def stat(self, payload: Payload) -> jnp.ndarray:
+        return jnp.asarray(payload["scale"], jnp.float32)
+
+    def roundtrip(self, key, flat):
+        if not self.cfg.use_pallas:
+            return super().roundtrip(key, flat)
+        from repro.kernels.quantize import sign_roundtrip_flat
+        scale = self._scale(flat)
+        xhat = sign_roundtrip_flat(flat, scale, interpret=_INTERPRET)
+        return xhat, scale
+
+    def server_combine(self, agg, wstat):
+        if not self.cfg.sign_majority:
+            return agg
+        return wstat * jnp.sign(agg)
+
+
+def make_compressor(comm: CommConfig, spec: FlatSpec) -> Compressor:
+    c = comm.compressor
+    if c == "identity":
+        return Compressor(comm, spec)
+    if c in ("int8", "int4"):
+        return StochasticQuant(comm, spec, bits=int(c[3:]))
+    if c == "topk":
+        return TopK(comm, spec)
+    if c == "signsgd":
+        return SignSGD(comm, spec)
+    raise ValueError(f"unknown compressor {c!r}")

@@ -1,0 +1,61 @@
+"""Flat wire-buffer layout for compressors.
+
+Same packed idiom as `repro.kernels.ops._pack`: every leaf of the param
+(delta) pytree is flattened to fp32, concatenated, zero-padded and
+reshaped to a (rows, cols) buffer.  Rows double as the quantization
+scale groups, so one packed layout serves every compressor and the
+Pallas kernels tile it directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    """Static description of the packed layout (trace-time only)."""
+    treedef: Any
+    sizes: Tuple[int, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    total: int                 # true element count (pre-padding)
+    rows: int
+    cols: int
+
+    @property
+    def padded(self) -> int:
+        return self.rows * self.cols
+
+
+def flat_spec(tree, cols: int = 1024) -> FlatSpec:
+    """Build the layout spec from a (concrete or ShapeDtypeStruct) pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = tuple(int(l.size) for l in leaves)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    total = sum(sizes)
+    rows = -(-total // cols)
+    return FlatSpec(treedef, sizes, shapes, dtypes, total, rows, cols)
+
+
+def pack(tree, spec: FlatSpec) -> jnp.ndarray:
+    """pytree -> (rows, cols) fp32 wire buffer (zero pad at the tail)."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    v = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return jnp.pad(v, (0, spec.padded - spec.total)).reshape(
+        spec.rows, spec.cols)
+
+
+def unpack(flat: jnp.ndarray, spec: FlatSpec):
+    """(rows, cols) buffer -> pytree with the original shapes/dtypes."""
+    v = flat.reshape(-1)[:spec.total]
+    out: List[jnp.ndarray] = []
+    off = 0
+    for sz, shp, dt in zip(spec.sizes, spec.shapes, spec.dtypes):
+        out.append(v[off:off + sz].reshape(shp).astype(dt))
+        off += sz
+    return jax.tree_util.tree_unflatten(spec.treedef, out)

@@ -137,6 +137,39 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class CommConfig:
+    """Client<->server communication model (repro.comm).
+
+    Compression applies to the client *param-delta* uplink
+    (theta_i - theta_server after local training). The default —
+    lossless identity at full participation — makes the round
+    bit-identical to the direct client-mean path, so existing runs are
+    untouched; any other setting routes the round through the
+    delta-space encode/aggregate/apply pipeline in `FedEngine`.
+    """
+    compressor: str = "identity"      # identity | int8 | int4 | topk | signsgd
+    # Per-client error-feedback residual (EF-SGD). "auto" materialises
+    # it exactly for the biased compressors (topk, signsgd) that need it
+    # to converge; True forces it for any lossy compressor (C full fp32
+    # model copies of HBM); False disables it.
+    error_feedback: object = "auto"   # "auto" | True | False
+    participation: float = 1.0        # fraction S/C of clients sampled/round
+    topk_ratio: float = 0.01          # k = ceil(ratio * n_params)
+    sign_majority: bool = False       # signsgd: server majority vote on signs
+    quant_block: int = 1024           # elements per quantization scale group
+    use_pallas: bool = False          # fused quantize/dequantize kernels
+    seed: int = 0                     # participation-sampling salt
+
+    @property
+    def lossless(self) -> bool:
+        return self.compressor == "identity"
+
+    def num_participants(self, num_clients: int) -> int:
+        s = int(round(self.participation * num_clients))
+        return max(1, min(num_clients, s))
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """Federated runtime configuration (Alg. 1 hyper-parameters)."""
     num_clients: int = 32
@@ -163,7 +196,6 @@ class FedConfig:
     server_eps: float = 1e-3
     # DONE baseline
     done_richardson_iters: int = 20
-    done_alpha: float = 0.05
     done_damping: float = 10.0
     # gradient accumulation: split each local batch into N micro-batches
     # and average the grads (mathematically exact; bounds activation
@@ -175,6 +207,9 @@ class FedConfig:
     total_rounds: int = 100
     decay_frac: float = 0.1           # WSD decay tail fraction
     use_pallas: bool = False          # fused Sophia kernel (interpret on CPU)
+    # client<->server communication model (compression, participation,
+    # bytes-on-the-wire accounting) — see repro.comm
+    comm: CommConfig = field(default_factory=CommConfig)
 
 
 @dataclass(frozen=True)

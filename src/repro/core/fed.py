@@ -9,6 +9,18 @@ Two execution strategies (DESIGN.md §4):
                  mesh (FSDP); memory O(1) in the number of clients.
 
 Optimizers: fed_sophia (the paper), fedavg, done, fedadam, fedyogi.
+
+Communication model (repro.comm): with the default CommConfig (lossless
+identity, full participation) the round aggregates client params
+directly — bit-identical to the original engine.  Any compression or
+partial participation routes through the delta-space pipeline:
+
+    local-train -> delta = theta_i - theta  (+ error-feedback residual)
+    -> encode/decode over the packed wire buffer
+    -> participation-weighted mean of reconstructions
+    -> server applies the aggregated delta (or FedOpt on it).
+
+Round metrics always include exact uplink/downlink byte counts.
 """
 from __future__ import annotations
 
@@ -18,11 +30,15 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import accounting, flat as cflat
+from repro.comm.compressors import (make_compressor, participation_indices,
+                                    wants_error_feedback)
 from repro.configs.base import FedConfig
 from repro.core import sophia
 from repro.core.gnb import gnb_estimate
 from repro.core.schedules import lr_at_round
-from repro.utils.tree import tree_mean_axis0, tree_sq_norm, tree_zeros_like
+from repro.utils.tree import (tree_count_params, tree_mean_axis0,
+                              tree_sq_norm, tree_sub, tree_zeros_like)
 
 
 class FedEngine:
@@ -78,6 +94,12 @@ class FedEngine:
         if self.fed.optimizer in ("fedadam", "fedyogi"):
             state["server_opt"] = {"m": tree_zeros_like(params),
                                    "v": tree_zeros_like(params)}
+        comm = self.fed.comm
+        if wants_error_feedback(comm):
+            # per-client error-feedback residual, stored in wire layout
+            spec = cflat.flat_spec(params, cols=comm.quant_block)
+            state["comm_ef"] = jnp.zeros(
+                (self.fed.num_clients, spec.rows, spec.cols), jnp.float32)
         return state
 
     # ------------------------------------------------- local client training
@@ -187,92 +209,175 @@ class FedEngine:
                            params, d)
         return new, loss
 
+    # ------------------------------------------------- one client, dispatch
+    def _local_update(self, params, opt, batch, crng, round_idx, lr):
+        """One client's local training for the configured optimizer.
+
+        Returns (new_params, new_opt_or_None, mean_loss); new_opt is None
+        for optimizers without persistent per-client state.
+        """
+        fed = self.fed
+        if fed.optimizer == "fed_sophia":
+            if opt is None:   # stateless: fresh EMAs each round
+                opt = sophia.init_state(params)
+            p, o, loss = self._local_sophia(params, opt, batch, round_idx,
+                                            crng, lr)
+            return p, (o if fed.persistent_client_state else None), loss
+        if fed.optimizer in ("fedavg", "fedadam", "fedyogi"):
+            p, loss = self._local_sgd(params, batch, crng, lr)
+            return p, None, loss
+        if fed.optimizer == "done":
+            p, loss = self._local_done(params, batch, crng, lr)
+            return p, None, loss
+        raise ValueError(fed.optimizer)
+
+    def _apply_aggregate(self, state, agg):
+        """Server step on the aggregated params-space model `agg`."""
+        if self.fed.optimizer in ("fedadam", "fedyogi"):
+            return self._server_opt_update(state, agg)
+        return {**state, "params": agg}
+
     # ------------------------------------------------------------- the round
     def round(self, state, batches, rng):
         """batches: pytree with leading client axis C. Returns (state, metrics)."""
         fed = self.fed
+        comm = fed.comm
         round_idx = state["round"]
         lr = lr_at_round(fed, round_idx)
-        params = state["params"]
         C = fed.num_clients
+        S = comm.num_participants(C)
         client_rngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
             jnp.arange(C))
 
-        if fed.optimizer == "fed_sophia":
-            stateful = fed.persistent_client_state
-
-            def one(opt, batch, crng):
-                if opt is None:   # stateless: fresh EMAs each round
-                    opt = sophia.init_state(params)
-                return self._local_sophia(params, opt, batch, round_idx,
-                                          crng, lr)
-            if fed.strategy == "parallel":
-                if stateful:
-                    new_p, new_opt, losses = jax.vmap(one)(
-                        state["client_opt"], batches, client_rngs)
-                else:
-                    new_p, _, losses = jax.vmap(
-                        lambda b, r: one(None, b, r))(batches, client_rngs)
-                agg = tree_mean_axis0(new_p)
-            else:
-                def scan_body(acc, xs):
-                    if stateful:
-                        opt, batch, crng = xs
-                    else:
-                        batch, crng = xs
-                        opt = None
-                    p_i, opt_i, loss = one(opt, batch, crng)
-                    acc = jax.tree.map(lambda a, x: a + x / C, acc, p_i)
-                    return acc, ((opt_i, loss) if stateful else loss)
-                xs = ((state["client_opt"], batches, client_rngs)
-                      if stateful else (batches, client_rngs))
-                agg, ys = jax.lax.scan(scan_body, tree_zeros_like(params), xs)
-                new_opt, losses = ys if stateful else (None, ys)
-                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
-            state = {**state, "params": agg}
-            if stateful:
-                state["client_opt"] = new_opt
-
-        elif fed.optimizer in ("fedavg", "fedadam", "fedyogi"):
-            def one(batch, crng):
-                return self._local_sgd(params, batch, crng, lr)
-            if fed.strategy == "parallel":
-                new_p, losses = jax.vmap(one)(batches, client_rngs)
-                agg = tree_mean_axis0(new_p)
-            else:
-                def scan_body(acc, xs):
-                    batch, crng = xs
-                    p_i, loss = one(batch, crng)
-                    return jax.tree.map(lambda a, x: a + x / C, acc, p_i), loss
-                agg, losses = jax.lax.scan(
-                    scan_body, tree_zeros_like(params), (batches, client_rngs))
-                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
-            if fed.optimizer == "fedavg":
-                state = {**state, "params": agg}
-            else:
-                state = self._server_opt_update(state, agg)
-
-        elif fed.optimizer == "done":
-            def one(batch, crng):
-                return self._local_done(params, batch, crng, lr)
-            if fed.strategy == "parallel":
-                new_p, losses = jax.vmap(one)(batches, client_rngs)
-                agg = tree_mean_axis0(new_p)
-            else:
-                def scan_body(acc, xs):
-                    batch, crng = xs
-                    p_i, loss = one(batch, crng)
-                    return jax.tree.map(lambda a, x: a + x / C, acc, p_i), loss
-                agg, losses = jax.lax.scan(
-                    scan_body, tree_zeros_like(params), (batches, client_rngs))
-                agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
-            state = {**state, "params": agg}
+        if comm.lossless and S == C:
+            # lossless identity at full participation: aggregate client
+            # params directly — bit-identical to the pre-comm engine
+            state, loss = self._round_direct(state, batches, client_rngs,
+                                             round_idx, lr)
         else:
-            raise ValueError(fed.optimizer)
+            state, loss = self._round_comm(state, batches, client_rngs,
+                                           round_idx, lr, rng)
 
-        state["round"] = round_idx + 1
-        metrics = {"loss": jnp.mean(losses), "lr": lr}
+        state = {**state, "round": round_idx + 1}
+        n = tree_count_params(state["params"])
+        wire = accounting.round_bytes(comm, n, C)
+        metrics = {"loss": loss, "lr": lr,
+                   "participants": jnp.asarray(S, jnp.float32),
+                   "uplink_bytes": jnp.asarray(
+                       wire["uplink_bytes"], jnp.float32),
+                   "downlink_bytes": jnp.asarray(
+                       wire["downlink_bytes"], jnp.float32)}
         return state, metrics
+
+    def _round_direct(self, state, batches, client_rngs, round_idx, lr):
+        """Original aggregation: server model <- mean of client params."""
+        fed = self.fed
+        params = state["params"]
+        C = fed.num_clients
+        stateful = (fed.optimizer == "fed_sophia"
+                    and fed.persistent_client_state)
+        opts = state.get("client_opt") if stateful else None
+
+        if fed.strategy == "parallel":
+            if stateful:
+                new_p, new_opt, losses = jax.vmap(
+                    lambda o, b, r: self._local_update(
+                        params, o, b, r, round_idx, lr)
+                )(opts, batches, client_rngs)
+            else:
+                new_p, new_opt, losses = jax.vmap(
+                    lambda b, r: self._local_update(
+                        params, None, b, r, round_idx, lr)
+                )(batches, client_rngs)
+            agg = tree_mean_axis0(new_p)
+        else:
+            def scan_body(acc, xs):
+                opt, batch, crng = xs
+                p_i, opt_i, loss = self._local_update(
+                    params, opt, batch, crng, round_idx, lr)
+                acc = jax.tree.map(lambda a, x: a + x / C, acc, p_i)
+                return acc, (opt_i, loss)
+            agg, (new_opt, losses) = jax.lax.scan(
+                scan_body, tree_zeros_like(params),
+                (opts, batches, client_rngs))
+            agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
+
+        state = self._apply_aggregate(state, agg)
+        if stateful:
+            state = {**state, "client_opt": new_opt}
+        return state, jnp.mean(losses)
+
+    def _round_comm(self, state, batches, client_rngs, round_idx, lr, rng):
+        """Delta-space round: compress each participating client's model
+        delta (with optional error feedback), aggregate the decoded wire
+        payloads weighted by participation, apply on the server.
+
+        Participation is a gather: only the S sampled clients run local
+        training (their rows are gathered up front and their state rows
+        scattered back), so partial participation saves real compute in
+        both strategies instead of masking discarded work.
+        """
+        fed = self.fed
+        comm = fed.comm
+        params = state["params"]
+        C = fed.num_clients
+        S = comm.num_participants(C)
+        spec = cflat.flat_spec(params, cols=comm.quant_block)
+        comp = make_compressor(comm, spec)
+        idx = participation_indices(
+            jax.random.fold_in(rng, 0x9A70 + comm.seed), C, S)
+        stateful = (fed.optimizer == "fed_sophia"
+                    and fed.persistent_client_state)
+        opts = state.get("client_opt") if stateful else None
+        ef = state.get("comm_ef")
+
+        def take(tree):
+            return (None if tree is None
+                    else jax.tree.map(lambda x: x[idx], tree))
+
+        opts_g, ef_g = take(opts), take(ef)
+        batches_g, rngs_g = take(batches), client_rngs[idx]
+
+        def client(opt, ef_i, batch, crng):
+            p_i, opt_i, loss = self._local_update(
+                params, opt, batch, crng, round_idx, lr)
+            delta = cflat.pack(tree_sub(p_i, params), spec)
+            if ef_i is not None:
+                delta = delta + ef_i
+            xhat, stat = comp.roundtrip(jax.random.fold_in(crng, 0xC0),
+                                        delta)
+            ef_new = None if ef_i is None else delta - xhat
+            return xhat, stat, ef_new, opt_i, loss
+
+        if fed.strategy == "parallel":
+            wires, stats, ef_new_g, opt_new_g, losses = jax.vmap(client)(
+                opts_g, ef_g, batches_g, rngs_g)
+            agg_flat = jnp.sum(wires, axis=0) / S
+            wstat = jnp.sum(stats) / S
+        else:
+            def scan_body(acc, xs):
+                opt, ef_i, batch, crng = xs
+                wire, stat, ef_i_new, opt_i, loss = client(
+                    opt, ef_i, batch, crng)
+                acc = (acc[0] + wire / S, acc[1] + stat / S)
+                return acc, (ef_i_new, opt_i, loss)
+            (agg_flat, wstat), (ef_new_g, opt_new_g, losses) = jax.lax.scan(
+                scan_body,
+                (jnp.zeros((spec.rows, spec.cols), jnp.float32),
+                 jnp.zeros((), jnp.float32)),
+                (opts_g, ef_g, batches_g, rngs_g))
+
+        agg_delta = cflat.unpack(comp.server_combine(agg_flat, wstat), spec)
+        agg = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
+                           params, agg_delta)
+        state = self._apply_aggregate(state, agg)
+        if stateful:
+            # scatter the participants' optimizer state rows back
+            state = {**state, "client_opt": jax.tree.map(
+                lambda full, g: full.at[idx].set(g), opts, opt_new_g)}
+        if ef is not None:
+            state = {**state, "comm_ef": ef.at[idx].set(ef_new_g)}
+        return state, jnp.mean(losses)
 
     # ------------------------------------------------ server-side optimizers
     def _server_opt_update(self, state, agg):

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import jax
+
+# Pallas kernels execute in interpret mode everywhere but real TPUs
+# (this container is CPU-only); shared by ops.py and repro.comm.
+INTERPRET = jax.default_backend() != "tpu"

@@ -11,39 +11,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.comm.flat import flat_spec, pack, unpack
+from repro.kernels import INTERPRET as _INTERPRET
 from repro.kernels.sophia_update import BLOCK_C, sophia_update_flat
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 def _pack(trees):
-    """Flatten+concat each tree along leaves -> (flat_2d list, meta)."""
-    leaves0, treedef = jax.tree_util.tree_flatten(trees[0])
-    sizes = [l.size for l in leaves0]
-    shapes = [l.shape for l in leaves0]
-    dtypes = [l.dtype for l in leaves0]
-    total = sum(sizes)
-    C = BLOCK_C
-    R = -(-total // C)
-    pad = R * C - total
-
-    def flat(tree):
-        ls = jax.tree_util.tree_flatten(tree)[0]
-        v = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in ls])
-        return jnp.pad(v, (0, pad)).reshape(R, C)
-
-    meta = (treedef, sizes, shapes, dtypes, total)
-    return [flat(t) for t in trees], meta
+    """Pack each tree into the shared wire layout -> (flat_2d list, spec)."""
+    spec = flat_spec(trees[0], cols=BLOCK_C)
+    return [pack(t, spec) for t in trees], spec
 
 
-def _unpack(flat2d, meta):
-    treedef, sizes, shapes, dtypes, total = meta
-    v = flat2d.reshape(-1)[:total]
-    out, off = [], 0
-    for sz, shp, dt in zip(sizes, shapes, dtypes):
-        out.append(v[off:off + sz].reshape(shp).astype(dt))
-        off += sz
-    return jax.tree_util.tree_unflatten(treedef, out)
+def _unpack(flat2d, spec):
+    return unpack(flat2d, spec)
 
 
 def sophia_fused_step(params, m, h, grads, h_hat, do_h, *, lr, beta1, beta2,

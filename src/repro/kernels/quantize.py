@@ -1,0 +1,110 @@
+"""Fused compress->decompress ("wire round-trip") Pallas TPU kernels.
+
+The comm layer simulates the uplink in-graph: quantize the packed
+(rows, cols) delta buffer and immediately dequantize it, because the
+server-side aggregation consumes the *reconstruction*.  Left to XLA the
+round-trip is ~5 HBM-bound elementwise ops (scale-div, add-noise, floor,
+clip, scale-mul); fusing them reads each input stream once and writes
+the reconstruction once — the same HBM-roofline argument as
+`sophia_update`.
+
+Layout matches `repro.comm.flat`: fp32 (rows, cols) tiles, one
+quantization scale per row.  Stochastic-rounding noise is generated
+outside the kernel with `jax.random` and streamed in, so the reference
+path (`repro.kernels.ref`) sees the identical noise and the
+Pallas-vs-ref equivalence is exact; `interpret=True` runs the kernel
+body on CPU (this container), pass False on a real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 1024
+
+
+def _grid_specs(R, C):
+    br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
+    grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
+    tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    rowcol = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return grid, tile, rowcol, scalar
+
+
+# ------------------------------------------------- stochastic quantization
+def _quant_kernel(x_ref, u_ref, s_ref, out_ref, *, qmax):
+    """q = clip(floor(x/scale + u), ±qmax); out = q * scale (one pass)."""
+    s = s_ref[...]                                   # (br, 1) row scales
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.floor(x_ref[...] / safe + u_ref[...])
+    q = jnp.clip(q, -qmax, qmax)
+    out_ref[...] = q * s
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "interpret"))
+def quant_roundtrip_flat(x, noise, scale, *, qmax: int,
+                         interpret: bool = True):
+    """Fused stochastic quantize->dequantize over a (R, C) fp32 buffer.
+
+    noise: U[0,1) array of x.shape; scale: (R, 1) per-row scales.
+    Returns the dequantized reconstruction (R, C) fp32.
+    """
+    R, C = x.shape
+    grid, tile, rowcol, _ = _grid_specs(R, C)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[tile, tile, rowcol],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, noise, scale)
+
+
+# --------------------------------------------------------------- sign sgd
+def _sign_kernel(x_ref, f_ref, out_ref):
+    out_ref[...] = f_ref[0, 0] * jnp.sign(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sign_roundtrip_flat(x, scale, *, interpret: bool = True):
+    """out = scale * sign(x); scale is a traced scalar."""
+    R, C = x.shape
+    grid, tile, _, scalar = _grid_specs(R, C)
+    flags = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _sign_kernel,
+        grid=grid,
+        in_specs=[tile, scalar],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, flags)
+
+
+# ------------------------------------------------------ top-k sparsify
+def _thresh_kernel(x_ref, f_ref, out_ref):
+    x = x_ref[...]
+    out_ref[...] = jnp.where(jnp.abs(x) >= f_ref[0, 0], x, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_threshold_flat(x, thr, *, interpret: bool = True):
+    """Magnitude sparsifier: keep x where |x| >= thr (the k-th largest
+    magnitude, computed outside), zero elsewhere."""
+    R, C = x.shape
+    grid, tile, _, scalar = _grid_specs(R, C)
+    flags = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _thresh_kernel,
+        grid=grid,
+        in_specs=[tile, scalar],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, flags)

@@ -14,3 +14,21 @@ def sophia_update_ref(theta, m, h, g, h_hat, do_h, *, lr, beta1, beta2,
     theta = theta - lr * weight_decay * theta
     step = jnp.clip(m / jnp.maximum(h, eps), -rho, rho)
     return theta - lr * step, m, h
+
+
+def quant_roundtrip_ref(x, noise, scale, *, qmax):
+    """Reference for kernels.quantize.quant_roundtrip_flat: per-row-scale
+    stochastic quantize then dequantize."""
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.floor(x / safe + noise), -qmax, qmax)
+    return q * scale
+
+
+def sign_roundtrip_ref(x, scale):
+    """Reference for kernels.quantize.sign_roundtrip_flat."""
+    return jnp.asarray(scale, jnp.float32) * jnp.sign(x)
+
+
+def topk_threshold_ref(x, thr):
+    """Reference for kernels.quantize.topk_threshold_flat."""
+    return jnp.where(jnp.abs(x) >= thr, x, 0.0)

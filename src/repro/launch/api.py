@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.configs.base import FedConfig, INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import (CommConfig, FedConfig, INPUT_SHAPES,
+                                ModelConfig, ShapeConfig)
 from repro.core.fed import FedEngine
 from repro.launch.mesh import client_axes, data_axes
 from repro.models import transformer as T
@@ -116,7 +117,8 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
                 local_iters: int = 10, optimizer: str = "fed_sophia",
                 use_pallas: bool = False, fsdp_gather: bool = True,
                 cfg_overrides: Optional[dict] = None,
-                fed_overrides: Optional[dict] = None) -> Bundle:
+                fed_overrides: Optional[dict] = None,
+                comm: Optional[CommConfig] = None) -> Bundle:
     cfg = _apply_overrides(configs.get_model_config(arch_id), cfg_overrides)
     shape = INPUT_SHAPES["train_4k"]
     seq, gbatch = shape.seq_len, shape.global_batch
@@ -134,6 +136,8 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
         fed = dataclasses.replace(fed, **typed)
     if use_pallas:
         fed = dataclasses.replace(fed, use_pallas=True)
+    if comm is not None:
+        fed = dataclasses.replace(fed, comm=comm)
     task = T.LMTask(cfg)
     seq_fed0 = fed.strategy == "sequential"
     gather_sh = None
@@ -169,6 +173,11 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
             S.param_shardings(cfg, mesh, state["params"],
                               fsdp_axes=daxes if seq_fed else None))
         st_sh["client_opt"] = SophiaState(m=inner, h=inner)
+    if "comm_ef" in state:
+        # error-feedback residuals live in wire layout (C, rows, cols):
+        # shard the client axis alongside the batches in parallel mode
+        st_sh["comm_ef"] = NamedSharding(
+            mesh, P(caxes if not seq_fed else None, None, None))
 
     batch = _batch_struct(cfg, (C, b), seq)
     batch["labels"] = jnp.zeros((C, b, seq), jnp.int32)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import ckpt
-from repro.configs.base import FedConfig
+from repro.comm import round_bytes
+from repro.configs.base import CommConfig, FedConfig
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
 from repro.models import transformer as T
@@ -37,6 +38,21 @@ def main():
                     help="reduced model dims (CPU-feasible)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="fused Sophia kernel (interpret mode on CPU)")
+    # communication layer (repro.comm)
+    ap.add_argument("--compressor", default="identity",
+                    choices=("identity", "int8", "int4", "topk", "signsgd"),
+                    help="uplink delta compressor")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per round")
+    ap.add_argument("--topk-ratio", type=float, default=0.01)
+    ap.add_argument("--error-feedback", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="per-client EF residuals (auto: biased "
+                         "compressors only)")
+    ap.add_argument("--sign-majority", action="store_true",
+                    help="signsgd: server-side majority vote")
+    ap.add_argument("--comm-pallas", action="store_true",
+                    help="fused quantize/dequantize kernels (interpret on CPU)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -45,20 +61,32 @@ def main():
     if args.reduced:
         cfg = cfg.reduced(d_model=128)
     over = configs.get_fed_overrides(args.arch)
+    ef = {"auto": "auto", "on": True, "off": False}[args.error_feedback]
+    comm = CommConfig(compressor=args.compressor,
+                      participation=args.participation,
+                      topk_ratio=args.topk_ratio,
+                      error_feedback=ef,
+                      sign_majority=args.sign_majority,
+                      use_pallas=args.comm_pallas)
     fed = FedConfig(num_clients=args.clients, local_iters=args.local_iters,
                     optimizer=args.optimizer, lr=args.lr, tau=args.tau,
                     total_rounds=args.rounds, use_pallas=args.use_pallas,
-                    schedule=over.get("schedule", "const"))
+                    schedule=over.get("schedule", "const"), comm=comm)
     task = T.LMTask(cfg)
     engine = FedEngine(task, fed)
     key = jax.random.PRNGKey(args.seed)
     state = engine.init(key)
     round_fn = jax.jit(engine.round)
 
-    print(f"arch={cfg.name} params="
-          f"{sum(x.size for x in jax.tree.leaves(state['params'])):,}"
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    # exact integers from the accounting model (the in-metrics float32
+    # mirror loses precision above ~16M params)
+    uplink_round = round_bytes(comm, n_params, fed.num_clients)[
+        "uplink_bytes"]
+    print(f"arch={cfg.name} params={n_params:,}"
           f" clients={fed.num_clients} J={fed.local_iters}"
-          f" opt={fed.optimizer}")
+          f" opt={fed.optimizer} compressor={comm.compressor}"
+          f" participation={comm.participation:g}")
     for r in range(args.rounds):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,
@@ -72,7 +100,10 @@ def main():
         state, metrics = round_fn(state, batches,
                                   jax.random.fold_in(key, r))
         print(f"round {r:3d} loss={float(metrics['loss']):.4f} "
-              f"lr={float(metrics['lr']):.2e} ({time.time() - t0:.1f}s)",
+              f"lr={float(metrics['lr']):.2e} "
+              f"uplink={uplink_round / 2**20:.2f}MiB "
+              f"(cum {(r + 1) * uplink_round / 2**20:.2f}MiB) "
+              f"({time.time() - t0:.1f}s)",
               flush=True)
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, state["params"], step=args.rounds,

@@ -14,6 +14,10 @@ from repro.configs.base import FedConfig
 from repro.core.fed import FedEngine
 from repro.models import transformer as T
 
+# full 12-arch sweep x (forward, fed round, decode) — the single
+# largest tier-1 cost; run explicitly with `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 ARCHS = configs.ARCH_IDS
 
 

@@ -1,0 +1,322 @@
+"""repro.comm tests: compressor round-trip invariants, error-feedback
+accumulation, partial-participation weighting, Pallas-vs-reference
+kernel equivalence, engine bit-exactness and byte accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import accounting, flat as cflat
+from repro.comm.compressors import make_compressor, participation_mask
+from repro.configs.base import CommConfig, FedConfig
+from repro.core.fed import FedEngine
+from repro.data import synthetic as syn
+from repro.models.small import MLPTask
+from repro.utils.tree import tree_sub
+
+
+def _cfg(**kw) -> CommConfig:
+    return CommConfig(**kw)
+
+
+def _spec_and_buf(key, total=3000, cols=128):
+    tree = {"a": jax.random.normal(key, (50, 30)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (1500,))}
+    spec = cflat.flat_spec(tree, cols=cols)
+    assert spec.total == total
+    return tree, spec, cflat.pack(tree, spec)
+
+
+# ------------------------------------------------------------ flat layout
+def test_pack_unpack_roundtrip_exact():
+    tree, spec, flat = _spec_and_buf(jax.random.PRNGKey(0))
+    out = cflat.unpack(flat, spec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # pad tail is zero
+    assert float(jnp.sum(jnp.abs(flat.reshape(-1)[spec.total:]))) == 0.0
+
+
+# ------------------------------------------------------------ compressors
+def test_identity_roundtrip_exact():
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(1))
+    comp = make_compressor(_cfg(), spec)
+    xhat, _ = comp.roundtrip(jax.random.PRNGKey(2), flat)
+    np.testing.assert_array_equal(np.asarray(xhat), np.asarray(flat))
+
+
+def test_int8_unbiased_over_seeds():
+    """E[decode(encode(x))] == x for stochastic rounding (Eq. of QSGD)."""
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(3))
+    comp = make_compressor(_cfg(compressor="int8"), spec)
+    n_seeds = 200
+    acc = jnp.zeros_like(flat)
+    for s in range(n_seeds):
+        xhat, _ = comp.roundtrip(jax.random.PRNGKey(1000 + s), flat)
+        acc = acc + xhat
+    mean = np.asarray(acc / n_seeds)
+    # per-row quantization step = max|row|/127; mean error shrinks ~1/sqrt(N)
+    step = np.asarray(jnp.max(jnp.abs(flat), axis=1, keepdims=True)) / 127.0
+    err = np.abs(mean - np.asarray(flat))
+    assert np.all(err <= 5.0 * step / np.sqrt(n_seeds) + 1e-7)
+
+
+@pytest.mark.parametrize("bits,name", [(8, "int8"), (4, "int4")])
+def test_quant_error_bounded_by_step(bits, name):
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(4))
+    comp = make_compressor(_cfg(compressor=name), spec)
+    payload = comp.encode(jax.random.PRNGKey(5), flat)
+    assert payload["q"].dtype == jnp.int8
+    qmax = 2 ** (bits - 1) - 1
+    assert int(jnp.max(jnp.abs(payload["q"]))) <= qmax
+    xhat = comp.decode(payload)
+    step = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / qmax
+    assert np.all(np.abs(np.asarray(xhat - flat))
+                  <= np.asarray(step) * (1 + 1e-5) + 1e-7)
+
+
+def test_topk_support_size_and_values():
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(6))
+    comm = _cfg(compressor="topk", topk_ratio=0.01)
+    comp = make_compressor(comm, spec)
+    k = accounting.topk_k(comm, spec.total)
+    payload = comp.encode(None, flat)
+    assert payload["idx"].shape == (k,) and payload["val"].shape == (k,)
+    xhat = comp.decode(payload)
+    nnz = int(jnp.sum(xhat != 0))
+    assert nnz == k     # random floats: no ties, no zero survivors
+    # the surviving coordinates are exactly the k largest magnitudes
+    v = np.abs(np.asarray(flat).reshape(-1))
+    thr = np.sort(v)[-k]
+    kept = np.abs(np.asarray(xhat).reshape(-1)[: spec.total])
+    assert np.all(kept[kept > 0] >= thr - 1e-7)
+
+
+def test_signsgd_decode_is_scaled_sign():
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(7))
+    comp = make_compressor(_cfg(compressor="signsgd"), spec)
+    payload = comp.encode(None, flat)
+    scale = float(jnp.sum(jnp.abs(flat)) / spec.total)
+    assert np.isclose(float(payload["scale"]), scale, rtol=1e-6)
+    xhat = comp.decode(payload)
+    np.testing.assert_allclose(np.asarray(xhat),
+                               scale * np.sign(np.asarray(flat)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_signsgd_majority_vote_combine():
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(8))
+    comp = make_compressor(
+        _cfg(compressor="signsgd", sign_majority=True), spec)
+    agg = jnp.asarray([[0.3, -0.1, 0.0, 2.0]], jnp.float32)
+    out = comp.server_combine(agg, jnp.asarray(0.5))
+    np.testing.assert_allclose(np.asarray(out),
+                               [[0.5, -0.5, 0.0, 0.5]], rtol=1e-6)
+
+
+def test_error_feedback_identity_accumulation():
+    """wire + residual == input: what the EF update stores is exactly the
+    part of the (EF-corrected) delta that did not make it onto the wire."""
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(9))
+    comp = make_compressor(_cfg(compressor="topk", topk_ratio=0.01), spec)
+    ef = jnp.zeros_like(flat)
+    for r in range(3):
+        corrected = flat + ef
+        xhat, _ = comp.roundtrip(jax.random.PRNGKey(50 + r), corrected)
+        ef = corrected - xhat
+        np.testing.assert_allclose(np.asarray(xhat + ef),
+                                   np.asarray(corrected),
+                                   rtol=1e-6, atol=1e-7)
+    # EF keeps total mass: residual norm is bounded by the input norm
+    assert float(jnp.linalg.norm(ef)) < float(jnp.linalg.norm(flat)) * 3
+
+
+# ----------------------------------------------- Pallas kernel equivalence
+@pytest.mark.parametrize("name", ["int8", "int4", "topk", "signsgd"])
+def test_pallas_roundtrip_matches_reference(name):
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(10))
+    kw = {"topk_ratio": 0.02} if name == "topk" else {}
+    ref = make_compressor(_cfg(compressor=name, **kw), spec)
+    pal = make_compressor(
+        _cfg(compressor=name, use_pallas=True, **kw), spec)
+    key = jax.random.PRNGKey(11)
+    a, _ = ref.roundtrip(key, flat)
+    b, _ = pal.roundtrip(key, flat)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------- partial participation
+def test_participation_mask_exact_count_and_seeded():
+    key = jax.random.PRNGKey(12)
+    m1 = participation_mask(key, 16, 5)
+    m2 = participation_mask(key, 16, 5)
+    assert int(jnp.sum(m1)) == 5
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    m3 = participation_mask(jax.random.PRNGKey(13), 16, 5)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m3))
+
+
+# --------------------------------------------------------- byte accounting
+def test_wire_bytes_formulas():
+    n = 100_000
+    cc = _cfg()
+    assert accounting.wire_bytes(cc, n) == 4 * n
+    groups = -(-n // cc.quant_block)
+    assert accounting.wire_bytes(_cfg(compressor="int8"), n) == \
+        (8 * n + 32 * groups + 7) // 8
+    assert accounting.wire_bytes(_cfg(compressor="int4"), n) == \
+        (4 * n + 32 * groups + 7) // 8
+    k = accounting.topk_k(_cfg(compressor="topk"), n)
+    assert accounting.wire_bytes(_cfg(compressor="topk"), n) == 8 * k
+    assert accounting.wire_bytes(_cfg(compressor="signsgd"), n) == \
+        (n + 32 + 7) // 8
+    # int8 uplink reduction vs fp32 identity (acceptance: >= 3.5x)
+    ratio = accounting.wire_bytes(cc, n) / accounting.wire_bytes(
+        _cfg(compressor="int8"), n)
+    assert ratio >= 3.5
+    rb = accounting.round_bytes(_cfg(participation=0.5), n, 8)
+    assert rb["participants"] == 4
+    assert rb["uplink_bytes"] == 4 * 4 * n
+    assert rb["downlink_bytes"] == 4 * 4 * n
+
+
+# ------------------------------------------------------- engine integration
+@pytest.fixture(scope="module")
+def fed_setup():
+    key = jax.random.PRNGKey(0)
+    x, y = syn.make_image_data(key, 1024, "mnist", noise=1.0)
+    part = syn.dirichlet_partition(jax.random.PRNGKey(1), y, 4, alpha=0.5)
+    tr, _ = syn.train_test_split(part)
+    task = MLPTask(hidden=32)
+    batches = syn.client_batches(key, x, y, tr, 32)
+    return task, batches
+
+
+def _run(task, fed, batches, rounds=2):
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    rf = jax.jit(eng.round)
+    for r in range(rounds):
+        state, metrics = rf(state, batches, jax.random.PRNGKey(100 + r))
+    return state, metrics
+
+
+@pytest.mark.parametrize("strategy", ["parallel", "sequential"])
+@pytest.mark.parametrize("optimizer", ["fed_sophia", "fedavg"])
+def test_identity_full_participation_bit_exact(fed_setup, strategy,
+                                               optimizer):
+    """Acceptance: identity at full participation == pre-comm round,
+    bitwise, for fed_sophia and fedavg under both strategies."""
+    task, batches = fed_setup
+    base = FedConfig(num_clients=4, local_iters=2, optimizer=optimizer,
+                     strategy=strategy, lr=0.01, tau=2)
+    with_comm = dataclasses.replace(
+        base, comm=CommConfig(compressor="identity", participation=1.0))
+    s0, m0 = _run(task, base, batches)
+    s1, _ = _run(task, with_comm, batches)
+    for a, b in zip(jax.tree.leaves(s0["params"]),
+                    jax.tree.leaves(s1["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # identity uplink: C clients x 4 bytes x n params
+    n = sum(p.size for p in jax.tree.leaves(s0["params"]))
+    assert float(m0["uplink_bytes"]) == 4 * 4 * n
+
+
+def test_strategies_agree_under_compression(fed_setup):
+    """parallel and sequential produce the same compressed round."""
+    task, batches = fed_setup
+    outs = {}
+    for strat in ("parallel", "sequential"):
+        fed = FedConfig(num_clients=4, local_iters=2,
+                        optimizer="fed_sophia", strategy=strat, lr=0.01,
+                        tau=2, comm=CommConfig(compressor="int8",
+                                               participation=0.5))
+        outs[strat], _ = _run(task, fed, batches)
+    for a, b in zip(jax.tree.leaves(outs["parallel"]["params"]),
+                    jax.tree.leaves(outs["sequential"]["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_partial_participation_weighting(fed_setup):
+    """With identity compression and S<C the server update equals the
+    plain mean over exactly the sampled clients' deltas."""
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fedavg",
+                    lr=0.05, comm=CommConfig(participation=0.5))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    params = state["params"]
+    rng = jax.random.PRNGKey(100)
+    new, metrics = jax.jit(eng.round)(state, batches, rng)
+    assert float(metrics["participants"]) == 2.0
+    mask = np.asarray(participation_mask(
+        jax.random.fold_in(rng, 0x9A70 + fed.comm.seed), 4, 2))
+    # manual: mean of participating clients' local-trained params deltas
+    deltas = []
+    for i in np.nonzero(mask)[0]:
+        b = jax.tree.map(lambda a, i=i: a[i], batches)
+        crng = jax.random.fold_in(rng, int(i))
+        p_i, _ = eng._local_sgd(params, b, crng, jnp.asarray(0.05))
+        deltas.append(tree_sub(p_i, params))
+    manual = jax.tree.map(
+        lambda p, *ds: p + sum(np.asarray(d) for d in ds) / len(deltas),
+        params, *deltas)
+    for a, b in zip(jax.tree.leaves(new["params"]),
+                    jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_error_feedback_auto_gating(fed_setup):
+    """'auto' materialises EF only for biased compressors; True forces
+    it for any lossy one; identity never allocates."""
+    task, _ = fed_setup
+    def ef_alloc(**kw):
+        fed = FedConfig(num_clients=4, local_iters=1,
+                        comm=CommConfig(**kw))
+        return "comm_ef" in FedEngine(task, fed).init(jax.random.PRNGKey(0))
+    assert not ef_alloc(compressor="identity")
+    assert not ef_alloc(compressor="int8")
+    assert ef_alloc(compressor="topk")
+    assert ef_alloc(compressor="signsgd")
+    assert ef_alloc(compressor="int8", error_feedback=True)
+    assert not ef_alloc(compressor="topk", error_feedback=False)
+
+
+def test_error_feedback_state_in_engine(fed_setup):
+    """Lossy compressor allocates per-client EF; participants' residuals
+    move, non-participants' stay frozen; training stays finite."""
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                    lr=0.01, tau=2,
+                    comm=CommConfig(compressor="topk", topk_ratio=0.05,
+                                    participation=0.5))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    assert "comm_ef" in state and state["comm_ef"].shape[0] == 4
+    rng = jax.random.PRNGKey(100)
+    new, metrics = jax.jit(eng.round)(state, batches, rng)
+    mask = np.asarray(participation_mask(
+        jax.random.fold_in(rng, 0x9A70 + fed.comm.seed), 4, 2))
+    ef = np.asarray(new["comm_ef"])
+    for i in range(4):
+        moved = np.abs(ef[i]).sum() > 0
+        assert moved == bool(mask[i] > 0), (i, mask)
+    assert np.isfinite(float(metrics["loss"]))
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(new["params"]))
+
+
+@pytest.mark.parametrize("name", ["int8", "int4", "topk", "signsgd"])
+def test_all_compressors_train_finite(fed_setup, name):
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                    lr=0.01, tau=2, comm=CommConfig(compressor=name))
+    state, metrics = _run(task, fed, batches, rounds=3)
+    assert np.isfinite(float(metrics["loss"])), name
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(state["params"])), name

@@ -8,6 +8,9 @@ import sys
 
 import pytest
 
+# subprocess mesh lower+compile per arch: heavy; run with `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -14,6 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import FedConfig, ModelConfig
 from repro.core.fed import FedEngine
@@ -80,6 +81,7 @@ def test_pad_attn_heads_forward_exact():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_pad_attn_heads_zeros_stay_zero_under_training():
     """One federated Sophia round leaves the padded wq/wo regions at 0."""
     key = jax.random.PRNGKey(1)
@@ -169,6 +171,7 @@ def test_attn_threshold_dense_matches_chunked_forward():
 
 
 # --------------------------------------------------- GNB round-mode hoist
+@pytest.mark.slow
 def test_hessian_round_mode_matches_step_mode():
     """tau_round=1 with J local iters == tau_step=J (same refresh cadence,
     same estimate params: the round-start theta), up to the estimator's
