@@ -3,10 +3,15 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm example-comm
+.PHONY: test-fast test-slow test-all collect bench-comm example-comm docs-check
 
 test-fast:
 	$(PY) -m pytest -q
+
+# fail if README.md / docs/ / benchmarks/README.md reference flags,
+# modules, paths or make targets that no longer exist (stdlib-only)
+docs-check:
+	python tools/check_docs.py
 
 test-slow:
 	$(PY) -m pytest -q -m slow

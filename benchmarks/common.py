@@ -44,9 +44,15 @@ class RunResult:
     seconds_per_round: float
     local_iters: int
     uplink_bytes_per_round: int = 0
-    # exact cumulative uplink bytes when the target accuracy was reached
-    # (None if never reached) — the Fig. 3-style x-axis
+    # exact cumulative bytes on the wire (ALL streams, both directions)
+    # when the target accuracy was reached (None if never reached) —
+    # the Fig. 3-style x-axis
     bytes_to_target: Optional[int] = None
+    # per-stream per-round totals from repro.comm.accounting.round_bytes
+    # (downlink + hessian streams; total_bytes sums every stream)
+    downlink_bytes_per_round: int = 0
+    hessian_bytes_per_round: int = 0
+    total_bytes_per_round: int = 0
 
 
 def run_federated(model: str, dataset: str, optimizer: str, *,
@@ -71,11 +77,11 @@ def run_federated(model: str, dataset: str, optimizer: str, *,
     teb = syn.client_batches(jax.random.fold_in(key, 3), x, y, te, 128)
     acc_fn = jax.jit(lambda p: jnp.mean(jax.vmap(
         lambda b: task.accuracy(p, b))(teb)))
-    # exact per-round uplink from the accounting model (the in-metrics
-    # float32 mirror loses precision above ~16M params)
+    # exact per-round per-stream bytes from the accounting model (the
+    # in-metrics float32 mirror loses precision above ~16M params)
     n_params = num_params(model)
-    per_round_up = comm_accounting.round_bytes(
-        fed.comm, n_params, clients)["uplink_bytes"]
+    wire = comm_accounting.round_bytes(fed.comm, n_params, clients)
+    per_round_up = wire["uplink_bytes"]
 
     accs, losses = [], []
     rounds_to_target = None
@@ -92,13 +98,18 @@ def run_federated(model: str, dataset: str, optimizer: str, *,
             accs.append(acc)
             if rounds_to_target is None and acc >= target_acc:
                 rounds_to_target = r + 1
-                bytes_to_target = per_round_up * (r + 1)
+                bytes_to_target = wire["total_bytes"] * (r + 1)
     dt = (time.time() - t0) / rounds
     return RunResult(accs=accs, losses=losses,
                      rounds_to_target=rounds_to_target,
                      seconds_per_round=dt, local_iters=local_iters,
                      uplink_bytes_per_round=per_round_up,
-                     bytes_to_target=bytes_to_target)
+                     bytes_to_target=bytes_to_target,
+                     downlink_bytes_per_round=wire["downlink_bytes"],
+                     hessian_bytes_per_round=(
+                         wire["hessian_uplink_bytes"]
+                         + wire["hessian_downlink_bytes"]),
+                     total_bytes_per_round=wire["total_bytes"])
 
 
 def flops_per_local_iter(model: str, batch: int = 64) -> float:

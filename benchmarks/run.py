@@ -126,10 +126,13 @@ def table2_energy(paper_scale: bool, out: dict):
 # ------------------------------------------------------------- Fig. comm
 def fig_comm_bytes(paper_scale: bool, out: dict):
     """Accuracy vs bytes on the wire: Fed-Sophia on the MNIST-synthetic
-    CNN under each uplink compressor at a matched round count.
+    CNN under each compression regime at a matched round count.
 
-    Columns: per-round uplink, reduction vs fp32 identity, and the
+    Reports every stream (uplink + downlink + curvature) per round and
+    the TOTAL reduction vs the uncompressed baseline, plus the
     bytes-to-target-accuracy x-axis (methodology: benchmarks/README.md).
+    The `bidir-*` regimes compress all three streams; acceptance for
+    the bidirectional layer is >= 3x total reduction at matched rounds.
     """
     clients = 32 if paper_scale else 6
     rounds = 16
@@ -139,23 +142,36 @@ def fig_comm_bytes(paper_scale: bool, out: dict):
         "int4": CommConfig(compressor="int4"),
         "topk": CommConfig(compressor="topk", topk_ratio=0.05),
         "signsgd": CommConfig(compressor="signsgd"),
+        # bidirectional: compressed broadcast + hessian-EMA stream
+        "bidir-int8": CommConfig(compressor="int8",
+                                 downlink_compressor="int8",
+                                 hessian_compressor="int4"),
+        "bidir-int4": CommConfig(compressor="int4",
+                                 downlink_compressor="int8",
+                                 hessian_compressor="int4"),
     }
-    base_up = None
+    base_total = None
     for name, comm in comms.items():
         res = common.run_federated("cnn", "mnist", "fed_sophia",
                                    clients=clients, rounds=rounds,
                                    local_iters=10, comm=comm)
-        if base_up is None:
-            base_up = res.uplink_bytes_per_round
-        ratio = base_up / res.uplink_bytes_per_round
+        if base_total is None:
+            base_total = res.total_bytes_per_round
+        ratio = base_total / res.total_bytes_per_round
         _row(f"comm/cnn/mnist/{name}", res.seconds_per_round * 1e6,
              f"uplink_B_per_round={res.uplink_bytes_per_round}"
-             f";reduction_x={ratio:.2f}"
+             f";downlink_B_per_round={res.downlink_bytes_per_round}"
+             f";hessian_B_per_round={res.hessian_bytes_per_round}"
+             f";total_B_per_round={res.total_bytes_per_round}"
+             f";total_reduction_x={ratio:.2f}"
              f";bytes_to_75={res.bytes_to_target}"
              f";final_acc={res.accs[-1]:.3f}")
         out[f"comm/cnn/mnist/{name}"] = {
             "uplink_bytes_per_round": res.uplink_bytes_per_round,
-            "reduction_x": ratio,
+            "downlink_bytes_per_round": res.downlink_bytes_per_round,
+            "hessian_bytes_per_round": res.hessian_bytes_per_round,
+            "total_bytes_per_round": res.total_bytes_per_round,
+            "total_reduction_x": ratio,
             "bytes_to_75": res.bytes_to_target,
             "accs": res.accs,
         }

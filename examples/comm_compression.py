@@ -1,10 +1,12 @@
-"""Compressed uplinks: the paper's communication-efficiency axis made
-explicit.
+"""Compressed federated communication: the paper's efficiency axis
+made explicit.
 
-Trains the same federated MLP under three uplink regimes — lossless
-fp32 (identity), unbiased int8 stochastic quantization, and top-k
-sparsification with error feedback — and reports test accuracy next to
-the exact cumulative uplink bytes each regime put on the wire.
+Trains the same federated MLP under four regimes — lossless fp32
+(identity), unbiased int8 stochastic quantization, top-k
+sparsification with error feedback, and the fully bidirectional stack
+(int8 uplink + int8 delta-coded broadcast + int4 Hessian-EMA stream) —
+and reports test accuracy next to the exact cumulative bytes each
+regime put on the wire, all streams, both directions.
 
     PYTHONPATH=src python examples/comm_compression.py
 """
@@ -32,9 +34,12 @@ REGIMES = {
     "identity (fp32)": CommConfig(),
     "int8 stochastic": CommConfig(compressor="int8"),
     "top-k 5% + EF": CommConfig(compressor="topk", topk_ratio=0.05),
+    "bidir int8/int8/int4": CommConfig(compressor="int8",
+                                       downlink_compressor="int8",
+                                       hessian_compressor="int4"),
 }
 
-base_uplink = None
+base_total = None
 for name, comm in REGIMES.items():
     fed = FedConfig(num_clients=CLIENTS, local_iters=10,
                     optimizer="fed_sophia", lr=0.02, tau=5,
@@ -43,11 +48,15 @@ for name, comm in REGIMES.items():
     state = engine.init(jax.random.fold_in(key, 3))
     round_fn = jax.jit(engine.round)
     n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
-    per_round = round_bytes(comm, n_params, CLIENTS)["uplink_bytes"]
-    if base_uplink is None:
-        base_uplink = per_round
-    print(f"\n== {name}: {per_round / 2**20:.3f} MiB/round uplink "
-          f"({base_uplink / per_round:.1f}x reduction) ==")
+    wire = round_bytes(comm, n_params, CLIENTS)
+    per_round = wire["total_bytes"]
+    if base_total is None:
+        base_total = per_round
+    print(f"\n== {name}: {per_round / 2**20:.3f} MiB/round total "
+          f"(up {wire['uplink_bytes'] / 2**20:.3f}"
+          f" + down {wire['downlink_bytes'] / 2**20:.3f}"
+          f" + curv {(wire['hessian_uplink_bytes'] + wire['hessian_downlink_bytes']) / 2**20:.3f};"
+          f" {base_total / per_round:.1f}x reduction) ==")
     for r in range(ROUNDS):
         batches = syn.client_batches(jax.random.fold_in(key, 100 + r),
                                      x, y, train_idx, 64)
@@ -58,4 +67,4 @@ for name, comm in REGIMES.items():
                 lambda b: task.accuracy(state["params"], b))(test_batches))
             print(f"round {r:3d}  loss={float(metrics['loss']):.4f}"
                   f"  test-acc={float(acc):.3f}"
-                  f"  cum-uplink={(r + 1) * per_round / 2**20:.2f}MiB")
+                  f"  cum-wire={(r + 1) * per_round / 2**20:.2f}MiB")

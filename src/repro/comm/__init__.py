@@ -1,19 +1,34 @@
 """repro.comm — client<->server communication layer.
 
-Models the uplink/downlink of a federated round as an explicit pipeline:
-pack the client param-delta into a flat wire buffer, compress it
-(optionally with per-client error feedback), aggregate the decoded
-deltas over the sampled participants, and account for every byte that
-would cross the wire.  See `repro.core.fed.FedEngine._round_comm` for
-the integration point and `benchmarks/README.md` for the accounting
-methodology.
+Models a federated round as three named wire streams over one packed
+(rows, cols) fp32 buffer layout (`repro.configs.base.COMM_STREAMS`):
+
+* ``uplink`` — each participant's model delta, compressed with optional
+  per-client error feedback (`compressors`).
+* ``downlink`` — the server broadcast, delta-coded against each
+  client's last-received model replica with server-side per-client
+  error feedback (`downlink`).
+* ``hessian`` — optional Sophia h-EMA uplink + ONE common
+  averaged-curvature broadcast back (curvature averaging).
+
+Each stream resolves its own compressor through
+``CommConfig.stream(name)``, so one compressor family (identity / int8
+/ int4 stochastic quant / top-k / signsgd) serves all of them, backed
+by the same fused Pallas kernels.  `accounting` prices every stream's
+exact bytes on the wire; `Compressor.serialize` renders payloads to
+the canonical byte layout specified in docs/wire-format.md and frozen
+by the wire-format golden tests.  See `repro.core.fed.FedEngine.
+_round_comm` for the integration point and `benchmarks/README.md` for
+the accounting methodology.
 """
-from repro.comm.accounting import round_bytes, wire_bits, wire_bytes
-from repro.comm.compressors import make_compressor, participation_mask
+from repro.comm.accounting import (round_bytes, stream_bytes, wire_bits,
+                                   wire_bytes)
+from repro.comm.compressors import (make_compressor, make_stream_compressor,
+                                    participation_mask)
 from repro.comm.flat import FlatSpec, flat_spec, pack, unpack
 
 __all__ = [
     "FlatSpec", "flat_spec", "pack", "unpack",
-    "make_compressor", "participation_mask",
-    "wire_bits", "wire_bytes", "round_bytes",
+    "make_compressor", "make_stream_compressor", "participation_mask",
+    "wire_bits", "wire_bytes", "stream_bytes", "round_bytes",
 ]

@@ -1,9 +1,15 @@
 """Exact bytes-on-the-wire accounting for a federated round.
 
-Single source of truth for what each compressor would actually transmit
-(payload bits, not simulation container sizes — int4 codes count 4 bits
-even though the simulation stores them in an int8 array).  Methodology
-is documented in `benchmarks/README.md`.
+Single source of truth for what each of the round's named streams
+(``uplink`` / ``downlink`` / ``hessian`` — see `repro.configs.base.
+COMM_STREAMS` and docs/wire-format.md) would actually transmit:
+payload bits, not simulation container sizes — int4 codes count 4 bits
+even though the simulation stores them in an int8 array.  Per-payload
+formulas live in `wire_bits`; `round_bytes` composes them into
+per-round, per-stream totals (the uplink and downlink payloads are
+per-participant, the averaged-curvature broadcast is one common
+payload).  Methodology is documented in `benchmarks/README.md`; the
+wire-format golden tests pin these numbers against serialized payloads.
 
 All functions are pure Python over static config — call them outside
 jit and feed the results to reports; `FedEngine.round` mirrors them as
@@ -14,7 +20,7 @@ from __future__ import annotations
 import math
 from typing import Dict
 
-from repro.configs.base import CommConfig
+from repro.configs.base import COMM_STREAMS, CommConfig
 
 FP32_BITS = 32
 
@@ -28,7 +34,9 @@ def topk_k(comm: CommConfig, n_params: int) -> int:
 
 
 def wire_bits(comm: CommConfig, n_params: int) -> int:
-    """Uplink payload bits for ONE client's compressed delta."""
+    """Payload bits for ONE compressed (rows, cols) wire buffer under
+    ``comm.compressor`` — pass a `CommConfig.stream(name)` view to price
+    a specific stream's payload."""
     c = comm.compressor
     if c == "identity":
         return FP32_BITS * n_params
@@ -48,13 +56,39 @@ def wire_bytes(comm: CommConfig, n_params: int) -> int:
     return -(-wire_bits(comm, n_params) // 8)
 
 
+def stream_bytes(comm: CommConfig, stream: str, n_params: int) -> int:
+    """Bytes of ONE payload on the named stream (0 when disabled)."""
+    if stream not in COMM_STREAMS:
+        raise ValueError(f"unknown stream {stream!r} (want {COMM_STREAMS})")
+    if stream == "hessian" and not comm.hessian_enabled:
+        return 0
+    return wire_bytes(comm.stream(stream), n_params)
+
+
 def round_bytes(comm: CommConfig, n_params: int,
                 num_clients: int) -> Dict[str, int]:
-    """Per-round totals: S participants upload compressed deltas, and the
-    server broadcasts the fp32 global model back to the same S clients."""
+    """Per-round, per-stream totals.
+
+    S participants each upload a compressed model delta
+    (``uplink_bytes``) and receive a per-client delta-coded broadcast
+    (``downlink_bytes``; exact fp32 when the downlink stream is
+    disabled).  With the hessian stream enabled, each participant also
+    uploads its compressed Hessian-EMA (``hessian_uplink_bytes``) and
+    the server broadcasts ONE common averaged-curvature payload
+    (``hessian_downlink_bytes`` — a true broadcast, charged once, not
+    per client, because unlike the model downlink it carries no
+    per-client delta reference).  ``total_bytes`` sums every stream.
+    """
     s = comm.num_participants(num_clients)
+    up = s * stream_bytes(comm, "uplink", n_params)
+    down = s * stream_bytes(comm, "downlink", n_params)
+    h_up = s * stream_bytes(comm, "hessian", n_params)
+    h_down = stream_bytes(comm, "hessian", n_params)
     return {
         "participants": s,
-        "uplink_bytes": s * wire_bytes(comm, n_params),
-        "downlink_bytes": s * 4 * n_params,
+        "uplink_bytes": up,
+        "downlink_bytes": down,
+        "hessian_uplink_bytes": h_up,
+        "hessian_downlink_bytes": h_down,
+        "total_bytes": up + down + h_up + h_down,
     }

@@ -1,15 +1,22 @@
-"""Uplink compressors over the packed (rows, cols) fp32 wire buffer.
+"""Stream compressors over the packed (rows, cols) fp32 wire buffer.
+
+One compressor family serves every named stream of the round (uplink
+model delta, downlink broadcast delta, hessian-EMA — `repro.configs.
+base.COMM_STREAMS`): build one with `make_stream_compressor(comm,
+stream, spec)`, which resolves the per-stream compressor choice via
+``CommConfig.stream(name)``.
 
 Each compressor is a pure function pair ``encode -> payload`` /
-``decode -> reconstruction`` (the wire format tests inspect payloads
-directly), plus a fused ``roundtrip`` used by the engine — the pure-JAX
-encode/decode composition by default, or the fused Pallas kernel from
-`repro.kernels.quantize` when ``CommConfig.use_pallas`` is set.  Both
-paths consume the same `jax.random` noise, so they agree to float
-rounding.
+``decode -> reconstruction``, plus a fused ``roundtrip`` used by the
+engine — the pure-JAX encode/decode composition by default, or the
+fused Pallas kernel from `repro.kernels.quantize` when
+``CommConfig.use_pallas`` is set.  Both paths consume the same
+`jax.random` noise, so they agree to float rounding.  ``serialize``
+renders a payload to its canonical little-endian wire bytes (the
+normative layout in docs/wire-format.md, frozen by the golden tests).
 
-Everything here is vmap/scan-compatible: the engine calls ``roundtrip``
-once per client under either execution strategy.
+Everything but ``serialize`` is vmap/scan-compatible: the engine calls
+``roundtrip`` once per client under either execution strategy.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm import accounting
 from repro.comm.flat import FlatSpec
@@ -79,6 +87,14 @@ class Compressor:
     def decode(self, payload: Payload) -> jnp.ndarray:
         return payload["x"]
 
+    def serialize(self, payload: Payload) -> bytes:
+        """Canonical little-endian wire bytes of ONE payload (host-side,
+        normative layout: docs/wire-format.md).  The zero pad tail of
+        the packed buffer is never transmitted; ``len(serialize(p))``
+        must equal `accounting.wire_bytes` for this compressor."""
+        x = np.asarray(payload["x"], dtype="<f4").reshape(-1)
+        return x[: self.spec.total].tobytes()
+
     def stat(self, payload: Payload) -> jnp.ndarray:
         """Scalar the server aggregates alongside the decoded delta
         (signsgd majority vote needs the mean client scale)."""
@@ -128,6 +144,20 @@ class StochasticQuant(Compressor):
     def decode(self, payload: Payload) -> jnp.ndarray:
         return payload["q"].astype(jnp.float32) * payload["scale"]
 
+    def serialize(self, payload: Payload) -> bytes:
+        # [codes][group scales]; int4 packs two two's-complement
+        # nibbles per byte (even coordinate in the low nibble)
+        q = np.asarray(payload["q"], np.int8).reshape(-1)[: self.spec.total]
+        scales = np.asarray(payload["scale"], dtype="<f4").reshape(-1)
+        if self.bits == 8:
+            codes = q.tobytes()
+        else:
+            nib = (q.astype(np.uint8) & 0xF)
+            if nib.size % 2:
+                nib = np.append(nib, np.uint8(0))
+            codes = (nib[0::2] | (nib[1::2] << 4)).tobytes()
+        return codes + scales.tobytes()
+
     def roundtrip(self, key, flat):
         if not self.cfg.use_pallas:
             return super().roundtrip(key, flat)
@@ -165,6 +195,11 @@ class TopK(Compressor):
             payload["val"])
         return flat.reshape(self.spec.rows, self.spec.cols)
 
+    def serialize(self, payload: Payload) -> bytes:
+        idx = np.asarray(payload["idx"], dtype="<i4")
+        val = np.asarray(payload["val"], dtype="<f4")
+        return idx.tobytes() + val.tobytes()
+
     def roundtrip(self, key, flat):
         if not self.cfg.use_pallas:
             return super().roundtrip(key, flat)
@@ -199,6 +234,16 @@ class SignSGD(Compressor):
     def stat(self, payload: Payload) -> jnp.ndarray:
         return jnp.asarray(payload["scale"], jnp.float32)
 
+    def serialize(self, payload: Payload) -> bytes:
+        # [packbits(x > 0), MSB-first][fp32 scale]; the wire bit cannot
+        # carry sign(0) = 0, so exact zeros decode as -scale on a real
+        # link (measure-zero for float deltas; the in-graph simulation
+        # keeps them at 0 — see docs/wire-format.md)
+        s = np.asarray(payload["sign"], np.int8).reshape(-1)[: self.spec.total]
+        bits = np.packbits(s > 0).tobytes()
+        scale = np.asarray(payload["scale"], dtype="<f4").reshape(1)
+        return bits + scale.tobytes()
+
     def roundtrip(self, key, flat):
         if not self.cfg.use_pallas:
             return super().roundtrip(key, flat)
@@ -224,3 +269,9 @@ def make_compressor(comm: CommConfig, spec: FlatSpec) -> Compressor:
     if c == "signsgd":
         return SignSGD(comm, spec)
     raise ValueError(f"unknown compressor {c!r}")
+
+
+def make_stream_compressor(comm: CommConfig, stream: str,
+                           spec: FlatSpec) -> Compressor:
+    """Compressor for one named stream of the round (`COMM_STREAMS`)."""
+    return make_compressor(comm.stream(stream), spec)

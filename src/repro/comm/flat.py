@@ -1,10 +1,15 @@
-"""Flat wire-buffer layout for compressors.
+"""Flat wire-buffer layout shared by every comm stream.
 
-Same packed idiom as `repro.kernels.ops._pack`: every leaf of the param
-(delta) pytree is flattened to fp32, concatenated, zero-padded and
-reshaped to a (rows, cols) buffer.  Rows double as the quantization
-scale groups, so one packed layout serves every compressor and the
-Pallas kernels tile it directly.
+Same packed idiom as `repro.kernels.ops._pack`: every leaf of the
+pytree is flattened to fp32, concatenated, zero-padded and reshaped to
+a (rows, cols) buffer.  Rows double as the quantization scale groups,
+so one packed layout serves every compressor and the Pallas kernels
+tile it directly.  All three named streams of a round — the uplink
+model delta, the downlink broadcast delta, and the hessian-EMA — share
+ONE spec (the model and its Sophia ``h`` state have identical pytree
+structure), so the engine packs/unpacks every stream through the same
+layout; only the true ``total`` coordinates ever count as wire bytes
+(the pad tail is a simulation artifact — see docs/wire-format.md).
 """
 from __future__ import annotations
 

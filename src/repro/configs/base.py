@@ -136,16 +136,35 @@ class ModelConfig:
         return dataclasses.replace(self, **changes)
 
 
+#: The named wire streams of a federated round (see docs/wire-format.md).
+#: Every stream shares the packed (rows, cols) layout of `repro.comm.flat`
+#: and gets its own compressor + error-feedback policy via
+#: `CommConfig.stream(name)`.
+COMM_STREAMS = ("uplink", "downlink", "hessian")
+
+
 @dataclass(frozen=True)
 class CommConfig:
     """Client<->server communication model (repro.comm).
 
-    Compression applies to the client *param-delta* uplink
-    (theta_i - theta_server after local training). The default —
-    lossless identity at full participation — makes the round
-    bit-identical to the direct client-mean path, so existing runs are
-    untouched; any other setting routes the round through the
-    delta-space encode/aggregate/apply pipeline in `FedEngine`.
+    The round is modelled as three named wire streams, each with an
+    independent compressor (``COMM_STREAMS``):
+
+    * ``uplink`` — the client *param-delta* (theta_i - theta_i^rx after
+      local training), compressed per participant with optional
+      client-side error feedback.
+    * ``downlink`` — the server broadcast, as a per-client delta
+      against each client's last-received model, with server-side
+      per-client error feedback (``downlink_*`` fields).
+    * ``hessian`` — the Hessian-EMA (Sophia ``h``) uplink plus the
+      common averaged-curvature broadcast back (``hessian_*`` fields;
+      ``"off"`` disables the stream entirely).
+
+    The default — lossless identity uplink/downlink, hessian off, full
+    participation — makes the round bit-identical to the direct
+    client-mean path, so existing runs are untouched; any other setting
+    routes the round through the delta-space
+    encode/aggregate/broadcast pipeline in `FedEngine`.
     """
     compressor: str = "identity"      # identity | int8 | int4 | topk | signsgd
     # Per-client error-feedback residual (EF-SGD). "auto" materialises
@@ -159,10 +178,54 @@ class CommConfig:
     quant_block: int = 1024           # elements per quantization scale group
     use_pallas: bool = False          # fused quantize/dequantize kernels
     seed: int = 0                     # participation-sampling salt
+    # ---- downlink stream (server -> client broadcast) -----------------
+    # "identity" keeps the PR-1 exact fp32 broadcast (no per-client
+    # model replicas allocated); any other value compresses the
+    # broadcast as a delta vs each client's last-received model, with
+    # server-side per-client error feedback.
+    downlink_compressor: str = "identity"
+    downlink_error_feedback: object = "auto"   # "auto" | True | False
+    # ---- hessian stream (Sophia h-EMA uplink + averaged broadcast) ----
+    # "off" disables the stream (no curvature crosses the wire). Any
+    # compressor name enables curvature averaging: participants upload
+    # their compressed h-EMA, the server averages and broadcasts ONE
+    # common payload back. Second-order state is smoother than
+    # gradients, so the intended default when enabled is "int4".
+    hessian_compressor: str = "off"
 
     @property
     def lossless(self) -> bool:
         return self.compressor == "identity"
+
+    @property
+    def downlink_enabled(self) -> bool:
+        return self.downlink_compressor != "identity"
+
+    @property
+    def hessian_enabled(self) -> bool:
+        return self.hessian_compressor != "off"
+
+    @property
+    def multi_stream(self) -> bool:
+        """Any stream beyond the PR-1 uplink is active."""
+        return self.downlink_enabled or self.hessian_enabled
+
+    def stream(self, name: str) -> "CommConfig":
+        """Per-stream view: this config with ``compressor`` /
+        ``error_feedback`` resolved for the named stream, so the same
+        compressor factory and accounting serve every stream."""
+        if name == "uplink":
+            return self
+        if name == "downlink":
+            return dataclasses.replace(
+                self, compressor=self.downlink_compressor,
+                error_feedback=self.downlink_error_feedback)
+        if name == "hessian":
+            c = self.hessian_compressor
+            return dataclasses.replace(
+                self, compressor="identity" if c == "off" else c,
+                error_feedback=False)
+        raise ValueError(f"unknown stream {name!r} (want {COMM_STREAMS})")
 
     def num_participants(self, num_clients: int) -> int:
         s = int(round(self.participation * num_clients))

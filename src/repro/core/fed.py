@@ -11,16 +11,22 @@ Two execution strategies (DESIGN.md §4):
 Optimizers: fed_sophia (the paper), fedavg, done, fedadam, fedyogi.
 
 Communication model (repro.comm): with the default CommConfig (lossless
-identity, full participation) the round aggregates client params
-directly — bit-identical to the original engine.  Any compression or
-partial participation routes through the delta-space pipeline:
+identity uplink/downlink, hessian stream off, full participation) the
+round aggregates client params directly — bit-identical to the original
+engine.  Any compression, partial participation, or extra stream routes
+through the multi-stream delta-space pipeline:
 
-    local-train -> delta = theta_i - theta  (+ error-feedback residual)
-    -> encode/decode over the packed wire buffer
-    -> participation-weighted mean of reconstructions
-    -> server applies the aggregated delta (or FedOpt on it).
+    [downlink]  broadcast delta theta - theta_i^rx (+ server EF)
+                -> encode/decode -> client model replica updated
+    local-train from theta_i^rx
+    [uplink]    delta = theta_i - theta_i^rx (+ client EF residual)
+                -> encode/decode over the packed wire buffer
+    [hessian]   (optional) compressed Sophia h-EMA uplink
+    server: participation-weighted mean of reconstructions; applies the
+    aggregated model delta (or FedOpt on it) and broadcasts ONE common
+    averaged-curvature payload back to the participants.
 
-Round metrics always include exact uplink/downlink byte counts.
+Round metrics always include exact per-stream byte counts.
 """
 from __future__ import annotations
 
@@ -30,8 +36,9 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm import accounting, flat as cflat
-from repro.comm.compressors import (make_compressor, participation_indices,
+from repro.comm import accounting, downlink as cdown, flat as cflat
+from repro.comm.compressors import (make_compressor, make_stream_compressor,
+                                    participation_indices,
                                     wants_error_feedback)
 from repro.configs.base import FedConfig
 from repro.core import sophia
@@ -45,6 +52,13 @@ class FedEngine:
     def __init__(self, task, fed: FedConfig, gather_shardings=None):
         self.task = task
         self.fed = fed
+        if fed.comm.hessian_enabled and not (
+                fed.optimizer == "fed_sophia"
+                and fed.persistent_client_state):
+            raise ValueError(
+                "the hessian comm stream aggregates the Sophia h-EMA: it "
+                "requires optimizer='fed_sophia' with "
+                "persistent_client_state=True")
         # FSDP (sequential strategy): params are STORED sharded over the
         # data axes; each use must see them model-only-sharded, otherwise
         # GSPMD resolves the data-axis contraction by replicating the
@@ -95,11 +109,16 @@ class FedEngine:
             state["server_opt"] = {"m": tree_zeros_like(params),
                                    "v": tree_zeros_like(params)}
         comm = self.fed.comm
+        if wants_error_feedback(comm) or comm.downlink_enabled:
+            spec = cflat.flat_spec(params, cols=comm.quant_block)
         if wants_error_feedback(comm):
             # per-client error-feedback residual, stored in wire layout
-            spec = cflat.flat_spec(params, cols=comm.quant_block)
             state["comm_ef"] = jnp.zeros(
                 (self.fed.num_clients, spec.rows, spec.cols), jnp.float32)
+        if comm.downlink_enabled:
+            # per-client last-received model replicas (+ server-side EF)
+            state.update(cdown.init_state(
+                comm, spec, cflat.pack(params, spec), self.fed.num_clients))
         return state
 
     # ------------------------------------------------- local client training
@@ -249,9 +268,10 @@ class FedEngine:
         client_rngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
             jnp.arange(C))
 
-        if comm.lossless and S == C:
-            # lossless identity at full participation: aggregate client
-            # params directly — bit-identical to the pre-comm engine
+        if comm.lossless and S == C and not comm.multi_stream:
+            # lossless identity at full participation, no extra streams:
+            # aggregate client params directly — bit-identical to the
+            # pre-comm engine
             state, loss = self._round_direct(state, batches, client_rngs,
                                              round_idx, lr)
         else:
@@ -262,11 +282,10 @@ class FedEngine:
         n = tree_count_params(state["params"])
         wire = accounting.round_bytes(comm, n, C)
         metrics = {"loss": loss, "lr": lr,
-                   "participants": jnp.asarray(S, jnp.float32),
-                   "uplink_bytes": jnp.asarray(
-                       wire["uplink_bytes"], jnp.float32),
-                   "downlink_bytes": jnp.asarray(
-                       wire["downlink_bytes"], jnp.float32)}
+                   "participants": jnp.asarray(S, jnp.float32)}
+        for k in ("uplink_bytes", "downlink_bytes", "hessian_uplink_bytes",
+                  "hessian_downlink_bytes", "total_bytes"):
+            metrics[k] = jnp.asarray(wire[k], jnp.float32)
         return state, metrics
 
     def _round_direct(self, state, batches, client_rngs, round_idx, lr):
@@ -308,14 +327,25 @@ class FedEngine:
         return state, jnp.mean(losses)
 
     def _round_comm(self, state, batches, client_rngs, round_idx, lr, rng):
-        """Delta-space round: compress each participating client's model
-        delta (with optional error feedback), aggregate the decoded wire
-        payloads weighted by participation, apply on the server.
+        """Multi-stream delta-space round (docs/architecture.md):
 
-        Participation is a gather: only the S sampled clients run local
-        training (their rows are gathered up front and their state rows
-        scattered back), so partial participation saves real compute in
-        both strategies instead of masking discarded work.
+        1. [downlink] each participant receives the compressed delta of
+           the server model vs its own last-received replica (server-side
+           per-client EF) and trains from what it actually received;
+        2. [uplink] its model delta vs that replica is compressed (with
+           optional client EF), decoded server-side, and the decoded wire
+           payloads are aggregated weighted by participation;
+        3. [hessian] optionally, its Sophia h-EMA is compressed and
+           uploaded; the server averages the curvature and broadcasts
+           one common payload back, re-syncing the participants' h.
+
+        With the downlink/hessian streams disabled, steps 1 and 3
+        vanish from the traced graph and the round is the PR-1 uplink
+        pipeline unchanged.  Participation is a gather: only the S
+        sampled clients run local training (their rows are gathered up
+        front and their state rows scattered back), so partial
+        participation saves real compute in both strategies instead of
+        masking discarded work.
         """
         fed = self.fed
         comm = fed.comm
@@ -324,59 +354,129 @@ class FedEngine:
         S = comm.num_participants(C)
         spec = cflat.flat_spec(params, cols=comm.quant_block)
         comp = make_compressor(comm, spec)
+        dn_on, h_on = comm.downlink_enabled, comm.hessian_enabled
+        comp_dn = (make_stream_compressor(comm, "downlink", spec)
+                   if dn_on else None)
+        comp_h = (make_stream_compressor(comm, "hessian", spec)
+                  if h_on else None)
+        packed_theta = cflat.pack(params, spec) if dn_on else None
         idx = participation_indices(
             jax.random.fold_in(rng, 0x9A70 + comm.seed), C, S)
         stateful = (fed.optimizer == "fed_sophia"
                     and fed.persistent_client_state)
         opts = state.get("client_opt") if stateful else None
         ef = state.get("comm_ef")
+        dn_model = state.get(cdown.MODEL_KEY)
+        dn_ef = state.get(cdown.EF_KEY)
 
         def take(tree):
             return (None if tree is None
                     else jax.tree.map(lambda x: x[idx], tree))
 
         opts_g, ef_g = take(opts), take(ef)
+        dnm_g, dnef_g = take(dn_model), take(dn_ef)
         batches_g, rngs_g = take(batches), client_rngs[idx]
 
-        def client(opt, ef_i, batch, crng):
+        def client(opt, ef_i, dnm_i, dnef_i, batch, crng):
+            if dn_on:
+                dnm_i, dnef_i = cdown.broadcast(
+                    comp_dn, jax.random.fold_in(crng, 0xD0),
+                    packed_theta, dnm_i, dnef_i)
+                p_start = cflat.unpack(dnm_i, spec)
+            else:
+                p_start = params
             p_i, opt_i, loss = self._local_update(
-                params, opt, batch, crng, round_idx, lr)
-            delta = cflat.pack(tree_sub(p_i, params), spec)
+                p_start, opt, batch, crng, round_idx, lr)
+            delta = cflat.pack(tree_sub(p_i, p_start), spec)
             if ef_i is not None:
                 delta = delta + ef_i
             xhat, stat = comp.roundtrip(jax.random.fold_in(crng, 0xC0),
                                         delta)
             ef_new = None if ef_i is None else delta - xhat
-            return xhat, stat, ef_new, opt_i, loss
+            h_hat = h_stat = None
+            if h_on:
+                h_hat, h_stat = comp_h.roundtrip(
+                    jax.random.fold_in(crng, 0x4E),
+                    cflat.pack(opt_i.h, spec))
+            return (xhat, stat, ef_new, opt_i, loss,
+                    dnm_i if dn_on else None, dnef_i, h_hat, h_stat)
 
         if fed.strategy == "parallel":
-            wires, stats, ef_new_g, opt_new_g, losses = jax.vmap(client)(
-                opts_g, ef_g, batches_g, rngs_g)
+            (wires, stats, ef_new_g, opt_new_g, losses, dnm_new_g,
+             dnef_new_g, h_hat_g, h_stat_g) = jax.vmap(client)(
+                opts_g, ef_g, dnm_g, dnef_g, batches_g, rngs_g)
             agg_flat = jnp.sum(wires, axis=0) / S
             wstat = jnp.sum(stats) / S
+            if dn_on:
+                dn_mean = jnp.sum(dnm_new_g, axis=0) / S
+            if h_on:
+                h_agg = jnp.sum(h_hat_g, axis=0) / S
+                h_wstat = jnp.sum(h_stat_g) / S
         else:
             def scan_body(acc, xs):
-                opt, ef_i, batch, crng = xs
-                wire, stat, ef_i_new, opt_i, loss = client(
-                    opt, ef_i, batch, crng)
-                acc = (acc[0] + wire / S, acc[1] + stat / S)
-                return acc, (ef_i_new, opt_i, loss)
-            (agg_flat, wstat), (ef_new_g, opt_new_g, losses) = jax.lax.scan(
-                scan_body,
-                (jnp.zeros((spec.rows, spec.cols), jnp.float32),
-                 jnp.zeros((), jnp.float32)),
-                (opts_g, ef_g, batches_g, rngs_g))
+                opt, ef_i, dnm_i, dnef_i, batch, crng = xs
+                (wire, stat, ef_i_new, opt_i, loss, dnm_new, dnef_new,
+                 h_hat, h_stat) = client(opt, ef_i, dnm_i, dnef_i,
+                                         batch, crng)
+                acc = {**acc, "w": acc["w"] + wire / S,
+                       "s": acc["s"] + stat / S}
+                if dn_on:
+                    acc = {**acc, "dn": acc["dn"] + dnm_new / S}
+                if h_on:
+                    acc = {**acc, "h": acc["h"] + h_hat / S,
+                           "hs": acc["hs"] + h_stat / S}
+                return acc, (ef_i_new, opt_i, loss, dnm_new, dnef_new)
+            zero_buf = jnp.zeros((spec.rows, spec.cols), jnp.float32)
+            acc0 = {"w": zero_buf, "s": jnp.zeros((), jnp.float32)}
+            if dn_on:
+                acc0["dn"] = zero_buf
+            if h_on:
+                acc0["h"] = zero_buf
+                acc0["hs"] = jnp.zeros((), jnp.float32)
+            acc, (ef_new_g, opt_new_g, losses, dnm_new_g, dnef_new_g) = \
+                jax.lax.scan(scan_body, acc0,
+                             (opts_g, ef_g, dnm_g, dnef_g,
+                              batches_g, rngs_g))
+            agg_flat, wstat = acc["w"], acc["s"]
+            if dn_on:
+                dn_mean = acc["dn"]
+            if h_on:
+                h_agg, h_wstat = acc["h"], acc["hs"]
 
-        agg_delta = cflat.unpack(comp.server_combine(agg_flat, wstat), spec)
+        agg_flat = comp.server_combine(agg_flat, wstat)
+        if dn_on:
+            # clients trained from their OWN received replicas: the
+            # aggregated model is mean_S(replica + decoded uplink delta),
+            # expressed as a server-side delta vs the true model
+            agg_flat = agg_flat + (dn_mean - packed_theta)
+        agg_delta = cflat.unpack(agg_flat, spec)
         agg = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
                            params, agg_delta)
         state = self._apply_aggregate(state, agg)
         if stateful:
             # scatter the participants' optimizer state rows back
-            state = {**state, "client_opt": jax.tree.map(
-                lambda full, g: full.at[idx].set(g), opts, opt_new_g)}
+            new_opts = jax.tree.map(
+                lambda full, g: full.at[idx].set(g), opts, opt_new_g)
+            if h_on:
+                # curvature averaging: every participant's h re-synced
+                # to the (re-quantized) common averaged broadcast
+                h_down, _ = comp_h.roundtrip(
+                    jax.random.fold_in(rng, 0x4D),
+                    comp_h.server_combine(h_agg, h_wstat))
+                h_avg = cflat.unpack(h_down, spec)
+                new_h = jax.tree.map(
+                    lambda full, v: full.at[idx].set(jnp.broadcast_to(
+                        v[None], (S,) + v.shape).astype(full.dtype)),
+                    new_opts.h, h_avg)
+                new_opts = new_opts._replace(h=new_h)
+            state = {**state, "client_opt": new_opts}
         if ef is not None:
             state = {**state, "comm_ef": ef.at[idx].set(ef_new_g)}
+        if dn_model is not None:
+            state = {**state, cdown.MODEL_KEY:
+                     dn_model.at[idx].set(dnm_new_g)}
+        if dn_ef is not None:
+            state = {**state, cdown.EF_KEY: dn_ef.at[idx].set(dnef_new_g)}
         return state, jnp.mean(losses)
 
     # ------------------------------------------------ server-side optimizers

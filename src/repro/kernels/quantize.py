@@ -66,6 +66,46 @@ def quant_roundtrip_flat(x, noise, scale, *, qmax: int,
     )(x, noise, scale)
 
 
+# ---------------------------------------------- fused downlink broadcast
+def _broadcast_kernel(t_ref, r_ref, e_ref, u_ref, s_ref, m_ref, d_ref,
+                      *, qmax):
+    """Delta-code + stochastic quant round-trip + apply + residual:
+    d = (theta - ref) + ef; xhat = clip(floor(d/s + u)) * s;
+    model' = ref + xhat; resid' = d - xhat — one pass over 4 streams
+    instead of the ~8 HBM-bound elementwise ops XLA would emit."""
+    s = s_ref[...]
+    safe = jnp.where(s > 0, s, 1.0)
+    d = (t_ref[...] - r_ref[...]) + e_ref[...]
+    q = jnp.clip(jnp.floor(d / safe + u_ref[...]), -qmax, qmax)
+    xhat = q * s
+    m_ref[...] = r_ref[...] + xhat
+    d_ref[...] = d - xhat
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "interpret"))
+def broadcast_roundtrip_flat(theta, ref, ef, noise, scale, *, qmax: int,
+                             interpret: bool = True):
+    """Fused downlink step over (R, C) fp32 buffers (see
+    `repro.comm.downlink.broadcast`).
+
+    theta: packed server model; ref: the client's last-received model;
+    ef: server-side EF residual (zeros when EF is off); noise: U[0,1)
+    of theta.shape; scale: (R, 1) per-row scales of the corrected
+    delta.  Returns (new client model, new EF residual).
+    """
+    R, C = theta.shape
+    grid, tile, rowcol, _ = _grid_specs(R, C)
+    return pl.pallas_call(
+        functools.partial(_broadcast_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, rowcol],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((R, C), theta.dtype),
+                   jax.ShapeDtypeStruct((R, C), theta.dtype)],
+        interpret=interpret,
+    )(theta, ref, ef, noise, scale)
+
+
 # --------------------------------------------------------------- sign sgd
 def _sign_kernel(x_ref, f_ref, out_ref):
     out_ref[...] = f_ref[0, 0] * jnp.sign(x_ref[...])

@@ -173,11 +173,15 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
             S.param_shardings(cfg, mesh, state["params"],
                               fsdp_axes=daxes if seq_fed else None))
         st_sh["client_opt"] = SophiaState(m=inner, h=inner)
-    if "comm_ef" in state:
-        # error-feedback residuals live in wire layout (C, rows, cols):
-        # shard the client axis alongside the batches in parallel mode
-        st_sh["comm_ef"] = NamedSharding(
-            mesh, P(caxes if not seq_fed else None, None, None))
+    # comm-stream state all lives in wire layout (C, rows, cols): the
+    # uplink EF residuals, the per-client downlink model replicas, and
+    # the server-side downlink EF — shard the client axis alongside the
+    # batches in parallel mode
+    from repro.comm.downlink import EF_KEY, MODEL_KEY
+    for k in ("comm_ef", MODEL_KEY, EF_KEY):
+        if k in state:
+            st_sh[k] = NamedSharding(
+                mesh, P(caxes if not seq_fed else None, None, None))
 
     batch = _batch_struct(cfg, (C, b), seq)
     batch["labels"] = jnp.zeros((C, b, seq), jnp.int32)

@@ -51,6 +51,15 @@ def main():
                          "compressors only)")
     ap.add_argument("--sign-majority", action="store_true",
                     help="signsgd: server-side majority vote")
+    ap.add_argument("--downlink-compressor", default="identity",
+                    choices=("identity", "int8", "int4", "topk", "signsgd"),
+                    help="server broadcast compressor (delta vs each "
+                         "client's last-received model, server-side EF)")
+    ap.add_argument("--hessian-compressor", default="off",
+                    choices=("off", "identity", "int8", "int4", "topk",
+                             "signsgd"),
+                    help="Sophia h-EMA uplink compressor (curvature "
+                         "averaging; 'off' keeps curvature local)")
     ap.add_argument("--comm-pallas", action="store_true",
                     help="fused quantize/dequantize kernels (interpret on CPU)")
     ap.add_argument("--ckpt-dir", default="")
@@ -67,6 +76,8 @@ def main():
                       topk_ratio=args.topk_ratio,
                       error_feedback=ef,
                       sign_majority=args.sign_majority,
+                      downlink_compressor=args.downlink_compressor,
+                      hessian_compressor=args.hessian_compressor,
                       use_pallas=args.comm_pallas)
     fed = FedConfig(num_clients=args.clients, local_iters=args.local_iters,
                     optimizer=args.optimizer, lr=args.lr, tau=args.tau,
@@ -81,12 +92,20 @@ def main():
     n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
     # exact integers from the accounting model (the in-metrics float32
     # mirror loses precision above ~16M params)
-    uplink_round = round_bytes(comm, n_params, fed.num_clients)[
-        "uplink_bytes"]
+    wire = round_bytes(comm, n_params, fed.num_clients)
+    uplink_round = wire["uplink_bytes"]
+    total_round = wire["total_bytes"]
     print(f"arch={cfg.name} params={n_params:,}"
           f" clients={fed.num_clients} J={fed.local_iters}"
           f" opt={fed.optimizer} compressor={comm.compressor}"
+          f" downlink={comm.downlink_compressor}"
+          f" hessian={comm.hessian_compressor}"
           f" participation={comm.participation:g}")
+    print("per-round wire bytes: "
+          + " ".join(f"{k}={wire[k]:,}" for k in
+                     ("uplink_bytes", "downlink_bytes",
+                      "hessian_uplink_bytes", "hessian_downlink_bytes",
+                      "total_bytes")))
     for r in range(args.rounds):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,
@@ -102,7 +121,8 @@ def main():
         print(f"round {r:3d} loss={float(metrics['loss']):.4f} "
               f"lr={float(metrics['lr']):.2e} "
               f"uplink={uplink_round / 2**20:.2f}MiB "
-              f"(cum {(r + 1) * uplink_round / 2**20:.2f}MiB) "
+              f"total={total_round / 2**20:.2f}MiB "
+              f"(cum {(r + 1) * total_round / 2**20:.2f}MiB) "
               f"({time.time() - t0:.1f}s)",
               flush=True)
     if args.ckpt_dir:

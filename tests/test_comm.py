@@ -1,6 +1,7 @@
 """repro.comm tests: compressor round-trip invariants, error-feedback
 accumulation, partial-participation weighting, Pallas-vs-reference
-kernel equivalence, engine bit-exactness and byte accounting."""
+kernel equivalence, engine bit-exactness and byte accounting — for all
+three wire streams (uplink / downlink / hessian)."""
 import dataclasses
 
 import jax
@@ -8,8 +9,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import accounting, flat as cflat
-from repro.comm.compressors import make_compressor, participation_mask
+from repro.comm import accounting, downlink as cdown, flat as cflat
+from repro.comm.compressors import (make_compressor,
+                                    make_stream_compressor,
+                                    participation_mask)
 from repro.configs.base import CommConfig, FedConfig
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
@@ -320,3 +323,235 @@ def test_all_compressors_train_finite(fed_setup, name):
     assert np.isfinite(float(metrics["loss"])), name
     assert all(np.all(np.isfinite(np.asarray(l)))
                for l in jax.tree.leaves(state["params"])), name
+
+
+# ------------------------------------------------------- downlink stream
+def test_stream_views_resolve_per_stream_compressors():
+    comm = CommConfig(compressor="topk", downlink_compressor="int8",
+                      hessian_compressor="int4")
+    assert comm.stream("uplink").compressor == "topk"
+    assert comm.stream("downlink").compressor == "int8"
+    assert comm.stream("hessian").compressor == "int4"
+    assert comm.multi_stream and comm.downlink_enabled
+    assert not CommConfig().multi_stream
+    with pytest.raises(ValueError):
+        comm.stream("sideband")
+
+
+def test_uplink_only_round_matches_manual_pr1_pipeline(fed_setup):
+    """With downlink='identity' and hessian off, the round is exactly
+    the PR-1 uplink pipeline — pinned against a manual recomputation
+    (local train -> pack delta -> roundtrip -> mean -> apply), so a
+    regression that lets the extra streams leak ops into the disabled
+    path fails loudly."""
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fedavg",
+                    lr=0.05, comm=CommConfig(compressor="int8"))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    assert cdown.MODEL_KEY not in state and cdown.EF_KEY not in state
+    params = state["params"]
+    rng = jax.random.PRNGKey(100)
+    new, _ = jax.jit(eng.round)(state, batches, rng)
+    spec = cflat.flat_spec(params, cols=fed.comm.quant_block)
+    comp = make_compressor(fed.comm, spec)
+    wires = []
+    for i in range(4):
+        b = jax.tree.map(lambda a, i=i: a[i], batches)
+        crng = jax.random.fold_in(rng, i)
+        p_i, _ = eng._local_sgd(params, b, crng, jnp.asarray(0.05))
+        delta = cflat.pack(tree_sub(p_i, params), spec)
+        xhat, _ = comp.roundtrip(jax.random.fold_in(crng, 0xC0), delta)
+        wires.append(xhat)
+    agg = cflat.unpack(jnp.sum(jnp.stack(wires), axis=0) / 4, spec)
+    manual = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
+                          params, agg)
+    for a, b in zip(jax.tree.leaves(new["params"]),
+                    jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_downlink_ef_auto_gating(fed_setup):
+    """Downlink replicas allocate whenever the stream is on; server-side
+    EF only for biased downlink compressors (or when forced)."""
+    task, _ = fed_setup
+    def keys(**kw):
+        fed = FedConfig(num_clients=4, comm=CommConfig(**kw))
+        st = FedEngine(task, fed).init(jax.random.PRNGKey(0))
+        return cdown.MODEL_KEY in st, cdown.EF_KEY in st
+    assert keys() == (False, False)
+    assert keys(downlink_compressor="int8") == (True, False)
+    assert keys(downlink_compressor="topk") == (True, True)
+    assert keys(downlink_compressor="signsgd") == (True, True)
+    assert keys(downlink_compressor="int8",
+                downlink_error_feedback=True) == (True, True)
+
+
+def test_downlink_replicas_track_server_model(fed_setup):
+    """Participants' replicas equal their broadcast reconstruction
+    (within one quant step of the pre-update server model); frozen for
+    non-participants."""
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fedavg",
+                    lr=0.05,
+                    comm=CommConfig(downlink_compressor="int8",
+                                    participation=0.5))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    packed0 = np.asarray(cflat.pack(
+        state["params"],
+        cflat.flat_spec(state["params"], cols=fed.comm.quant_block)))
+    rng = jax.random.PRNGKey(100)
+    new, _ = jax.jit(eng.round)(state, batches, rng)
+    mask = np.asarray(participation_mask(
+        jax.random.fold_in(rng, 0x9A70 + fed.comm.seed), 4, 2))
+    rep = np.asarray(new[cdown.MODEL_KEY])
+    for i in range(4):
+        if mask[i]:
+            # round-1 broadcast delta is 0 (replicas start in sync), so
+            # the replica stays at the initial model up to quantization
+            step = np.abs(packed0).max(axis=1, keepdims=True) / 127 + 1e-7
+            assert np.all(np.abs(rep[i] - packed0) <= step * (1 + 1e-5))
+        else:
+            np.testing.assert_array_equal(rep[i], packed0)
+
+
+def test_bidirectional_strategies_agree(fed_setup):
+    """parallel and sequential produce the same round under full
+    three-stream compression with partial participation."""
+    task, batches = fed_setup
+    outs = {}
+    for strat in ("parallel", "sequential"):
+        fed = FedConfig(num_clients=4, local_iters=2,
+                        optimizer="fed_sophia", strategy=strat, lr=0.01,
+                        tau=2,
+                        comm=CommConfig(compressor="int8",
+                                        downlink_compressor="int8",
+                                        hessian_compressor="int4",
+                                        participation=0.5))
+        outs[strat], _ = _run(task, fed, batches)
+    for a, b in zip(jax.tree.leaves(outs["parallel"]),
+                    jax.tree.leaves(outs["sequential"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dn", ["int8", "int4", "topk", "signsgd"])
+def test_bidirectional_trains_finite(fed_setup, dn):
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                    lr=0.01, tau=2,
+                    comm=CommConfig(compressor="int8",
+                                    downlink_compressor=dn,
+                                    topk_ratio=0.05,
+                                    hessian_compressor="int4"))
+    state, metrics = _run(task, fed, batches, rounds=3)
+    assert np.isfinite(float(metrics["loss"])), dn
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(state["params"])), dn
+
+
+def test_downlink_broadcast_pallas_matches_reference():
+    """Fused delta+quant+apply+residual kernel == pure-JAX broadcast."""
+    _, spec, theta = _spec_and_buf(jax.random.PRNGKey(20))
+    key = jax.random.PRNGKey(21)
+    ref_model = theta + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 0), theta.shape)
+    ef = 0.01 * jax.random.normal(jax.random.fold_in(key, 1), theta.shape)
+    for name in ("int8", "int4"):
+        for ef_row in (None, ef):
+            a = cdown.broadcast(
+                make_stream_compressor(
+                    CommConfig(downlink_compressor=name,
+                               downlink_error_feedback=ef_row is not None),
+                    "downlink", spec),
+                key, theta, ref_model, ef_row)
+            b = cdown.broadcast(
+                make_stream_compressor(
+                    CommConfig(downlink_compressor=name, use_pallas=True,
+                               downlink_error_feedback=ef_row is not None),
+                    "downlink", spec),
+                key, theta, ref_model, ef_row)
+            np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                                       rtol=1e-6, atol=1e-7)
+            if ef_row is not None:
+                np.testing.assert_allclose(np.asarray(a[1]),
+                                           np.asarray(b[1]),
+                                           rtol=1e-6, atol=1e-7)
+
+
+# -------------------------------------------------------- hessian stream
+def test_hessian_stream_requires_persistent_sophia(fed_setup):
+    task, _ = fed_setup
+    comm = CommConfig(hessian_compressor="int4")
+    with pytest.raises(ValueError):
+        FedEngine(task, FedConfig(optimizer="fedavg", comm=comm))
+    with pytest.raises(ValueError):
+        FedEngine(task, FedConfig(optimizer="fed_sophia",
+                                  persistent_client_state=False, comm=comm))
+    FedEngine(task, FedConfig(optimizer="fed_sophia", comm=comm))  # ok
+
+
+def test_hessian_curvature_averaging(fed_setup):
+    """Participants leave the round with identical (averaged) h-EMAs;
+    non-participants keep theirs."""
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                    lr=0.01, tau=1,
+                    comm=CommConfig(hessian_compressor="identity",
+                                    participation=0.5))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    rng = jax.random.PRNGKey(100)
+    new, _ = jax.jit(eng.round)(state, batches, rng)
+    mask = np.asarray(participation_mask(
+        jax.random.fold_in(rng, 0x9A70 + fed.comm.seed), 4, 2))
+    part = [int(i) for i in np.nonzero(mask)[0]]
+    out_ = [int(i) for i in np.nonzero(mask == 0)[0]]
+    for h in jax.tree.leaves(new["client_opt"].h):
+        h = np.asarray(h)
+        np.testing.assert_allclose(h[part[0]], h[part[1]],
+                                   rtol=1e-6, atol=1e-7)
+    for h0, h1 in zip(jax.tree.leaves(state["client_opt"].h),
+                      jax.tree.leaves(new["client_opt"].h)):
+        for i in out_:
+            np.testing.assert_array_equal(np.asarray(h0)[i],
+                                          np.asarray(h1)[i])
+
+
+# ------------------------------------------- multi-stream byte accounting
+def test_round_bytes_multi_stream():
+    n, C = 100_000, 8
+    comm = CommConfig(compressor="int8", downlink_compressor="int8",
+                      hessian_compressor="int4", participation=0.5)
+    rb = accounting.round_bytes(comm, n, C)
+    s = rb["participants"]
+    assert s == 4
+    int8_b = accounting.wire_bytes(CommConfig(compressor="int8"), n)
+    int4_b = accounting.wire_bytes(CommConfig(compressor="int4"), n)
+    assert rb["uplink_bytes"] == s * int8_b
+    assert rb["downlink_bytes"] == s * int8_b
+    assert rb["hessian_uplink_bytes"] == s * int4_b
+    # the averaged-curvature broadcast is ONE common payload
+    assert rb["hessian_downlink_bytes"] == int4_b
+    assert rb["total_bytes"] == sum(
+        rb[k] for k in ("uplink_bytes", "downlink_bytes",
+                        "hessian_uplink_bytes", "hessian_downlink_bytes"))
+    # hessian off -> zero curvature bytes, identical legacy totals
+    legacy = accounting.round_bytes(CommConfig(participation=0.5), n, C)
+    assert legacy["hessian_uplink_bytes"] == 0
+    assert legacy["hessian_downlink_bytes"] == 0
+    assert legacy["uplink_bytes"] == legacy["downlink_bytes"] == 4 * 4 * n
+
+
+def test_bidirectional_total_reduction_at_least_3x():
+    """Acceptance: the bidirectional int4/int8/int4 regime moves >= 3x
+    fewer total bytes than the uncompressed baseline at matched
+    rounds (pure accounting — the benchmark reports the same numbers)."""
+    n, C = 19_000, 6     # ~the benchmark CNN scale
+    base = accounting.round_bytes(CommConfig(), n, C)["total_bytes"]
+    bidir = accounting.round_bytes(
+        CommConfig(compressor="int4", downlink_compressor="int8",
+                   hessian_compressor="int4"), n, C)["total_bytes"]
+    assert base / bidir >= 3.0

@@ -1,0 +1,164 @@
+"""Wire-format golden tests.
+
+Freeze every stream's serialized payload layout and exact byte counts
+against the committed fixture (`tests/golden/wire_format.json`), so
+byte accounting stays honest as compressors evolve.  The normative
+spec is docs/wire-format.md — change spec, fixture, and serializers
+together or not at all.
+
+Regenerate (only on a deliberate spec change):
+
+    PYTHONPATH=src python tests/test_wire_golden.py --regen
+"""
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.comm import accounting, flat as cflat
+from repro.comm.compressors import make_stream_compressor
+from repro.configs.base import CommConfig
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "wire_format.json")
+QUANT_BLOCK = 128
+ENCODE_KEY = 99
+
+
+def _input_tree():
+    """Deterministic fixed input (threefry is stable across platforms)."""
+    key = jax.random.PRNGKey(1234)
+    return {"b": jax.random.normal(jax.random.fold_in(key, 1), (300,)),
+            "w": jax.random.normal(key, (48, 25))}
+
+
+def _cases():
+    """(case-name, stream, CommConfig, input transform) per pinned payload.
+
+    Every compressor is pinned on the uplink; the downlink and hessian
+    streams are pinned through their own config fields to prove the
+    per-stream resolution (`CommConfig.stream`) reaches the same
+    layouts.  The hessian input is squared — curvature is nonnegative.
+    """
+    cases = []
+    for name in ("identity", "int8", "int4", "topk", "signsgd"):
+        cases.append((f"uplink/{name}", "uplink",
+                      CommConfig(compressor=name, topk_ratio=0.02,
+                                 quant_block=QUANT_BLOCK),
+                      lambda x: x))
+    cases.append(("downlink/int8", "downlink",
+                  CommConfig(downlink_compressor="int8",
+                             quant_block=QUANT_BLOCK), lambda x: x))
+    cases.append(("downlink/topk", "downlink",
+                  CommConfig(downlink_compressor="topk", topk_ratio=0.02,
+                             quant_block=QUANT_BLOCK), lambda x: x))
+    cases.append(("hessian/int4", "hessian",
+                  CommConfig(hessian_compressor="int4",
+                             quant_block=QUANT_BLOCK),
+                  lambda x: x * x))
+    cases.append(("hessian/int8", "hessian",
+                  CommConfig(hessian_compressor="int8",
+                             quant_block=QUANT_BLOCK),
+                  lambda x: x * x))
+    return cases
+
+
+def _payload_record(stream, comm, transform):
+    tree = _input_tree()
+    spec = cflat.flat_spec(tree, cols=comm.quant_block)
+    flat = transform(cflat.pack(tree, spec))
+    comp = make_stream_compressor(comm, stream, spec)
+    raw = comp.serialize(comp.encode(jax.random.PRNGKey(ENCODE_KEY), flat))
+    return {
+        "stream": stream,
+        "compressor": comm.stream(stream).compressor,
+        "total": spec.total,
+        "quant_block": comm.quant_block,
+        "bytes": len(raw),
+        "sha256": hashlib.sha256(raw).hexdigest(),
+        "head_hex": raw[:24].hex(),
+    }
+
+
+def _round_totals_record():
+    """Exact per-round per-stream integers for the bidirectional regime
+    (the numbers `benchmarks/run.py --only comm` is built on)."""
+    comm = CommConfig(compressor="int8", downlink_compressor="int8",
+                      hessian_compressor="int4", participation=0.5)
+    return {"n_params": 100_000, "num_clients": 8,
+            **accounting.round_bytes(comm, 100_000, 8)}
+
+
+def _generate():
+    return {
+        "spec": "docs/wire-format.md",
+        "payloads": {name: _payload_record(stream, comm, tf)
+                     for name, stream, comm, tf in _cases()},
+        "round_totals/bidir": _round_totals_record(),
+    }
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name,stream,comm,tf",
+                         _cases(), ids=[c[0] for c in _cases()])
+def test_payload_matches_golden(golden, name, stream, comm, tf):
+    got = _payload_record(stream, comm, tf)
+    assert got == golden["payloads"][name], (
+        f"{name}: serialized payload diverged from the committed wire "
+        f"format — if docs/wire-format.md changed on purpose, "
+        f"regenerate with `python tests/test_wire_golden.py --regen`")
+
+
+@pytest.mark.parametrize("name,stream,comm,tf",
+                         _cases(), ids=[c[0] for c in _cases()])
+def test_serialized_length_equals_accounting(name, stream, comm, tf):
+    """len(serialize(...)) == accounting.wire_bytes, every stream."""
+    got = _payload_record(stream, comm, tf)
+    assert got["bytes"] == accounting.wire_bytes(
+        comm.stream(stream), got["total"])
+
+
+def test_round_totals_match_golden(golden):
+    assert _round_totals_record() == golden["round_totals/bidir"]
+
+
+def test_round_totals_consistency():
+    """round_bytes composes stream_bytes exactly (S uplinks/downlinks,
+    ONE common curvature broadcast) and total sums every stream."""
+    comm = CommConfig(compressor="int4", downlink_compressor="int8",
+                      hessian_compressor="int4", participation=0.5)
+    n, C = 54_321, 10
+    rb = accounting.round_bytes(comm, n, C)
+    s = rb["participants"]
+    assert rb["uplink_bytes"] == s * accounting.stream_bytes(
+        comm, "uplink", n)
+    assert rb["downlink_bytes"] == s * accounting.stream_bytes(
+        comm, "downlink", n)
+    assert rb["hessian_uplink_bytes"] == s * accounting.stream_bytes(
+        comm, "hessian", n)
+    assert rb["hessian_downlink_bytes"] == accounting.stream_bytes(
+        comm, "hessian", n)
+    assert rb["total_bytes"] == (rb["uplink_bytes"] + rb["downlink_bytes"]
+                                 + rb["hessian_uplink_bytes"]
+                                 + rb["hessian_downlink_bytes"])
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the committed golden fixture")
+    if ap.parse_args().regen:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(_generate(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN}")

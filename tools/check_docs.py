@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Docs-consistency check (CI: `make docs-check`).
+
+Fails when README.md / docs/ / benchmarks/README.md reference things
+that no longer exist, so the docs cannot silently drift from the code:
+
+* file/path references (``docs/wire-format.md``, ``examples/*.py``) must
+  exist on disk;
+* ``repro.*`` dotted module references must resolve to a module file or
+  package under src/ (trailing attribute components are allowed);
+* ``--flags`` inside fenced command blocks that invoke
+  ``repro.launch.train`` or ``benchmarks.run`` must appear verbatim in
+  that entry point's source;
+* ``CommConfig.field`` / ``FedConfig.field`` references must name real
+  dataclass fields;
+* ``make target`` references must name real Makefile targets.
+
+Pure stdlib + text matching — no imports of the package, so it runs in
+seconds on a bare checkout.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(
+    [ROOT / "README.md", ROOT / "benchmarks" / "README.md"]
+    + list((ROOT / "docs").glob("*.md")))
+
+CLI_SOURCES = {
+    "repro.launch.train": ROOT / "src" / "repro" / "launch" / "train.py",
+    "benchmarks.run": ROOT / "benchmarks" / "run.py",
+}
+CONFIG_SOURCE = ROOT / "src" / "repro" / "configs" / "base.py"
+
+PATH_RE = re.compile(r"[\w./-]+/[\w.-]+\.(?:py|md|json|yml|ini)\b")
+MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
+FIELD_RE = re.compile(r"\b(CommConfig|FedConfig|ModelConfig)\.(\w+)")
+MAKE_RE = re.compile(r"\bmake ([\w-]+)")
+FLAG_RE = re.compile(r"(?<!-)--([\w-]+)")
+
+
+def module_resolves(dotted: str) -> bool:
+    """Longest prefix of the dotted path must be a module file/package
+    (trailing components may be attributes like FedEngine.round)."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        base = ROOT / "src" / Path(*parts[:end])
+        if base.with_suffix(".py").is_file() or base.is_dir():
+            return True
+    return False
+
+
+def fenced_commands(text: str):
+    """Command lines inside ``` blocks, with backslash continuations
+    joined."""
+    for block in re.findall(r"```(?:\w*)\n(.*?)```", text, re.S):
+        joined = block.replace("\\\n", " ")
+        for line in joined.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                yield line
+
+
+def check_file(doc: Path, make_targets, errors):
+    text = doc.read_text()
+    rel = doc.relative_to(ROOT)
+
+    for m in PATH_RE.finditer(text):
+        p = m.group(0).lstrip("./")
+        if not (ROOT / p).exists():
+            errors.append(f"{rel}: references missing path `{m.group(0)}`")
+
+    for m in MODULE_RE.finditer(text):
+        if not module_resolves(m.group(0)):
+            errors.append(f"{rel}: references missing module `{m.group(0)}`")
+
+    cfg_src = CONFIG_SOURCE.read_text()
+    for m in FIELD_RE.finditer(text):
+        cls, field = m.groups()
+        if not re.search(rf"\b{field}\b", cfg_src):
+            errors.append(f"{rel}: `{cls}.{field}` is not a config field")
+
+    # `make target` only counts inside code spans/blocks — prose like
+    # "references make every payload distinct" is not a target
+    code_text = "\n".join(re.findall(r"`([^`\n]+)`", text)
+                          + list(fenced_commands(text)))
+    for m in MAKE_RE.finditer(code_text):
+        if m.group(1) not in make_targets:
+            errors.append(f"{rel}: `make {m.group(1)}` is not a Makefile "
+                          f"target")
+
+    for cmd in fenced_commands(text):
+        for entry, src_path in CLI_SOURCES.items():
+            if entry in cmd:
+                src = src_path.read_text()
+                for flag in FLAG_RE.findall(cmd):
+                    if f'"--{flag}"' not in src:
+                        errors.append(
+                            f"{rel}: flag `--{flag}` not defined in "
+                            f"{src_path.relative_to(ROOT)}")
+
+
+def main() -> int:
+    make_targets = set(re.findall(r"^([\w-]+):", (ROOT / "Makefile")
+                                  .read_text(), re.M))
+    errors: list = []
+    for doc in DOC_FILES:
+        if doc.exists():
+            check_file(doc, make_targets, errors)
+    if errors:
+        print(f"docs-check: {len(errors)} stale reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs-check: {len(DOC_FILES)} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
