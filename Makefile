@@ -3,7 +3,7 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm example-comm docs-check
+.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke example-comm docs-check
 
 test-fast:
 	$(PY) -m pytest -q
@@ -24,6 +24,11 @@ collect:
 
 bench-comm:
 	$(PY) -m benchmarks.run --only comm
+
+# CI-sized scheduler regime: sync vs semisync vs async on the virtual
+# clock, tiny budgets (same code path as the full `--only sched` run)
+bench-sched-smoke:
+	$(PY) -m benchmarks.run --only sched --smoke --out ""
 
 example-comm:
 	$(PY) examples/comm_compression.py

@@ -1,6 +1,7 @@
 """Shared harness for the paper-reproduction benchmarks."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
@@ -9,10 +10,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import accounting as comm_accounting
-from repro.configs.base import CommConfig, FedConfig
+from repro.configs.base import CommConfig, FedConfig, SchedConfig
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
 from repro.models.small import CNNTask, MLPTask
+from repro.sched import SchedTrace, VirtualScheduler
 
 # CPU-feasible defaults; --paper flips to the paper's 32 clients.
 N_SAMPLES = 8192
@@ -110,6 +112,57 @@ def run_federated(model: str, dataset: str, optimizer: str, *,
                          wire["hessian_uplink_bytes"]
                          + wire["hessian_downlink_bytes"]),
                      total_bytes_per_round=wire["total_bytes"])
+
+
+@dataclass
+class SchedRunResult:
+    trace: SchedTrace          # the full virtual-clock event log
+    final_eval_loss: float
+    seconds_per_event: float   # REAL seconds (compute cost of the sim)
+
+
+def run_scheduled(model: str, dataset: str, optimizer: str, *,
+                  sched: SchedConfig, events: int, clients: int = 6,
+                  local_iters: int = 10, lr: Optional[float] = None,
+                  tau: int = 5, batch: int = 64, seed: int = 0,
+                  comm: Optional[CommConfig] = None,
+                  target_loss: Optional[float] = None,
+                  stop_at_target: bool = False) -> SchedRunResult:
+    """Run one virtual-time scheduled federation (repro.sched) and
+    return its event trace: simulated wall-clock, exact cumulative
+    wire bytes and held-out eval loss per aggregation event."""
+    key = jax.random.PRNGKey(seed)
+    x, y = syn.make_image_data(key, N_SAMPLES, dataset,
+                               noise=NOISE[dataset])
+    part = syn.dirichlet_partition(jax.random.fold_in(key, 1), y, clients,
+                                   alpha=0.5)
+    tr, te = syn.train_test_split(part)
+    task = make_task(model)
+    fed = dataclasses.replace(
+        make_fed(optimizer, clients=clients, local_iters=local_iters,
+                 lr=lr if lr is not None else DEFAULT_LR[optimizer],
+                 tau=tau, rounds=events, comm=comm),
+        sched=sched)
+    engine = FedEngine(task, fed)
+    state = engine.init(jax.random.fold_in(key, 2))
+    teb = syn.client_batches(jax.random.fold_in(key, 3), x, y, te, 128)
+    eval_fn = jax.jit(lambda p: jnp.mean(jax.vmap(
+        lambda b: task.loss(p, b, None))(teb)))
+
+    def batch_fn(v):
+        return syn.client_batches(jax.random.fold_in(key, 100 + v),
+                                  x, y, tr, batch)
+
+    scheduler = VirtualScheduler(engine, batch_fn, eval_fn=eval_fn)
+    t0 = time.time()
+    state, trace = scheduler.run(state, events,
+                                 jax.random.fold_in(key, 1000),
+                                 target_loss=target_loss,
+                                 stop_at_target=stop_at_target)
+    dt = (time.time() - t0) / max(len(trace.events), 1)
+    return SchedRunResult(trace=trace,
+                          final_eval_loss=trace.events[-1].eval_loss,
+                          seconds_per_event=dt)
 
 
 def flops_per_local_iter(model: str, batch: int = 64) -> float:

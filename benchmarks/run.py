@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, SchedConfig
 from repro.metrics import energy
 
 
@@ -177,6 +177,77 @@ def fig_comm_bytes(paper_scale: bool, out: dict):
         }
 
 
+# ------------------------------------------------------------ Fig. sched
+def fig_sched(paper_scale: bool, out: dict, smoke: bool = False):
+    """Simulated wall-clock to a target loss: sync vs semisync vs async
+    (repro.sched) under a straggler latency profile, MLP on the
+    MNIST-synthetic task with int8 uplinks.
+
+    The sync run fixes the target (its eval loss 60% through its round
+    budget — a mid-run loss every discipline can reach); semisync and
+    async get a larger aggregation-event budget but stop at the target
+    — the straggler makes every sync round cost ~slowdown x the base
+    latency, so buffered/async aggregation reaches the same loss in
+    far less simulated time.  Acceptance: semisync or async reaches
+    the sync target with ``speedup_x > 1``, with per-discipline byte
+    totals reported alongside.  ``--smoke`` shrinks everything to a
+    CI-sized run (same code path, no acceptance claim).
+    """
+    clients = 32 if paper_scale else (4 if smoke else 6)
+    events = 2 if smoke else 14
+    comm = CommConfig(compressor="int8")
+    profile = dict(latency_profile="straggler", straggler_frac=0.25,
+                   straggler_slowdown=10.0)
+    runs = {
+        "sync": (SchedConfig(discipline="sync", **profile), events),
+        "semisync": (SchedConfig(discipline="semisync",
+                                 buffer_size=max(1, clients // 2),
+                                 **profile),
+                     2 * events if smoke else 4 * events),
+        "async": (SchedConfig(discipline="async", staleness_power=0.5,
+                              **profile),
+                  2 * clients * events if not smoke else 3 * events),
+    }
+    target = None
+    sync_t = None
+    for name, (sched, budget) in runs.items():
+        res = common.run_scheduled(
+            "mlp", "mnist", "fed_sophia", sched=sched, events=budget,
+            clients=clients, local_iters=5, comm=comm,
+            target_loss=target, stop_at_target=target is not None)
+        trace = res.trace
+        if name == "sync":
+            # target: the loss 60% through the sync budget — a mid-run
+            # loss every discipline can reach within its own budget
+            mid = trace.events[max(0, int(0.6 * len(trace.events)) - 1)]
+            target = mid.eval_loss
+            sync_t = trace.time_to_target(target)
+        t_target = trace.time_to_target(target)
+        b_target = trace.bytes_to_target(target)
+        speedup = (sync_t / t_target) if t_target else None
+        max_stale = max((max(e.staleness) for e in trace.events
+                         if e.staleness), default=0)
+        _row(f"sched/mlp/mnist/straggler/{name}",
+             res.seconds_per_event * 1e6,
+             f"sim_s_to_target={t_target if t_target else None}"
+             f";bytes_to_target={b_target}"
+             f";speedup_x={f'{speedup:.2f}' if speedup else None}"
+             f";events={len(trace.events)}"
+             f";max_staleness={max_stale}"
+             f";final_loss={trace.events[-1].eval_loss:.4f}")
+        out[f"sched/mlp/mnist/straggler/{name}"] = {
+            "target_loss": target,
+            "sim_seconds_to_target": t_target,
+            "bytes_to_target": b_target,
+            "speedup_x": speedup,
+            "events": len(trace.events),
+            "max_staleness": int(max_stale),
+            "times": [e.time for e in trace.events],
+            "eval_losses": [e.eval_loss for e in trace.events],
+            "cum_bytes": [e.cum_bytes for e in trace.events],
+        }
+
+
 # ----------------------------------------------------- kernel micro-bench
 def bench_sophia_kernel(out: dict):
     """Fused Pallas Sophia step (interpret) vs pure-JAX reference."""
@@ -210,15 +281,19 @@ ALL = {
     "table1": table1_hyperparams,
     "table2": table2_energy,
     "comm": fig_comm_bytes,
+    "sched": fig_sched,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="fig2|fig3|table1|table2|comm|kernel|all")
+                    help="fig2|fig3|table1|table2|comm|sched|kernel|all")
     ap.add_argument("--paper", action="store_true",
                     help="paper scale: 32 clients (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fast mode (sched regime only: tiny "
+                         "client/event counts, same code path)")
     ap.add_argument("--out", default="experiments/bench_results.json")
     args = ap.parse_args()
 
@@ -228,7 +303,10 @@ def main() -> None:
         bench_sophia_kernel(out)
     for name, fn in ALL.items():
         if args.only in (name, "all"):
-            fn(args.paper, out)
+            if name == "sched":
+                fn(args.paper, out, smoke=args.smoke)
+            else:
+                fn(args.paper, out)
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:

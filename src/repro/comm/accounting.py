@@ -20,6 +20,7 @@ from __future__ import annotations
 import math
 from typing import Dict
 
+from repro.comm.flat import HEADER_BYTES
 from repro.configs.base import COMM_STREAMS, CommConfig
 
 FP32_BITS = 32
@@ -35,20 +36,25 @@ def topk_k(comm: CommConfig, n_params: int) -> int:
 
 def wire_bits(comm: CommConfig, n_params: int) -> int:
     """Payload bits for ONE compressed (rows, cols) wire buffer under
-    ``comm.compressor`` — pass a `CommConfig.stream(name)` view to price
-    a specific stream's payload."""
+    ``comm.compressor`` — pass a `CommConfig.stream(name)` view to
+    price a specific stream's payload.  Every payload carries the
+    24-byte versioned header of `repro.comm.flat.Header`
+    (docs/wire-format.md) ahead of its body."""
+    header = 8 * HEADER_BYTES
     c = comm.compressor
     if c == "identity":
-        return FP32_BITS * n_params
+        return header + FP32_BITS * n_params
     if c == "int8":
-        return 8 * n_params + FP32_BITS * _num_groups(comm, n_params)
+        return header + 8 * n_params \
+            + FP32_BITS * _num_groups(comm, n_params)
     if c == "int4":
-        return 4 * n_params + FP32_BITS * _num_groups(comm, n_params)
+        return header + 4 * n_params \
+            + FP32_BITS * _num_groups(comm, n_params)
     if c == "topk":
         # (int32 index, fp32 value) per surviving coordinate
-        return topk_k(comm, n_params) * (32 + FP32_BITS)
+        return header + topk_k(comm, n_params) * (32 + FP32_BITS)
     if c == "signsgd":
-        return n_params + FP32_BITS          # 1 bit/coord + one scale
+        return header + n_params + FP32_BITS   # 1 bit/coord + one scale
     raise ValueError(f"unknown compressor {c!r}")
 
 

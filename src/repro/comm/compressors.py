@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import accounting
+from repro.comm import flat as cflat
 from repro.comm.flat import FlatSpec
 from repro.configs.base import CommConfig
 
@@ -87,11 +88,23 @@ class Compressor:
     def decode(self, payload: Payload) -> jnp.ndarray:
         return payload["x"]
 
+    def header(self) -> cflat.Header:
+        """The versioned 24-byte wire header of this stream's payloads
+        (docs/wire-format.md): layout fingerprint a decoder validates
+        before touching the body."""
+        return cflat.Header(compressor=self.cfg.compressor,
+                            total=self.spec.total,
+                            quant_block=self.spec.cols)
+
     def serialize(self, payload: Payload) -> bytes:
         """Canonical little-endian wire bytes of ONE payload (host-side,
-        normative layout: docs/wire-format.md).  The zero pad tail of
-        the packed buffer is never transmitted; ``len(serialize(p))``
-        must equal `accounting.wire_bytes` for this compressor."""
+        normative layout: docs/wire-format.md): the versioned header
+        followed by the body.  The zero pad tail of the packed buffer
+        is never transmitted; ``len(serialize(p))`` must equal
+        `accounting.wire_bytes` for this compressor."""
+        return self.header().pack() + self._body(payload)
+
+    def _body(self, payload: Payload) -> bytes:
         x = np.asarray(payload["x"], dtype="<f4").reshape(-1)
         return x[: self.spec.total].tobytes()
 
@@ -144,7 +157,7 @@ class StochasticQuant(Compressor):
     def decode(self, payload: Payload) -> jnp.ndarray:
         return payload["q"].astype(jnp.float32) * payload["scale"]
 
-    def serialize(self, payload: Payload) -> bytes:
+    def _body(self, payload: Payload) -> bytes:
         # [codes][group scales]; int4 packs two two's-complement
         # nibbles per byte (even coordinate in the low nibble)
         q = np.asarray(payload["q"], np.int8).reshape(-1)[: self.spec.total]
@@ -195,7 +208,12 @@ class TopK(Compressor):
             payload["val"])
         return flat.reshape(self.spec.rows, self.spec.cols)
 
-    def serialize(self, payload: Payload) -> bytes:
+    def header(self) -> cflat.Header:
+        return cflat.Header(compressor=self.cfg.compressor,
+                            total=self.spec.total,
+                            quant_block=self.spec.cols, aux=self.k)
+
+    def _body(self, payload: Payload) -> bytes:
         idx = np.asarray(payload["idx"], dtype="<i4")
         val = np.asarray(payload["val"], dtype="<f4")
         return idx.tobytes() + val.tobytes()
@@ -234,7 +252,7 @@ class SignSGD(Compressor):
     def stat(self, payload: Payload) -> jnp.ndarray:
         return jnp.asarray(payload["scale"], jnp.float32)
 
-    def serialize(self, payload: Payload) -> bytes:
+    def _body(self, payload: Payload) -> bytes:
         # [packbits(x > 0), MSB-first][fp32 scale]; the wire bit cannot
         # carry sign(0) = 0, so exact zeros decode as -scale on a real
         # link (measure-zero for float deltas; the in-graph simulation

@@ -6,18 +6,141 @@ a (rows, cols) buffer.  Rows double as the quantization scale groups,
 so one packed layout serves every compressor and the Pallas kernels
 tile it directly.  All three named streams of a round — the uplink
 model delta, the downlink broadcast delta, and the hessian-EMA — share
-ONE spec (the model and its Sophia ``h`` state have identical pytree
-structure), so the engine packs/unpacks every stream through the same
-layout; only the true ``total`` coordinates ever count as wire bytes
-(the pad tail is a simulation artifact — see docs/wire-format.md).
+the flattened coordinate order (the model and its Sophia ``h`` state
+have identical pytree structure) but may disagree on the (rows, cols)
+geometry: each stream's ``cols`` is its own ``quant_block``
+(`CommConfig.stream`), and `repack` re-lays a buffer between stream
+geometries.  Only the true ``total`` coordinates ever count as wire
+bytes (the pad tail is a simulation artifact — see
+docs/wire-format.md).
+
+This module also owns the versioned wire **header** (`Header`): the
+24-byte preamble every serialized payload carries, and the layout
+fingerprint checkpoints store so comm/EF state written under one
+config is never silently reinterpreted under another
+(`check_headers`).
 """
 from __future__ import annotations
 
+import struct
 from dataclasses import dataclass
-from typing import Any, List, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+
+#: magic + version of the serialized wire-buffer format
+WIRE_MAGIC = b"FSWB"
+WIRE_VERSION = 1
+#: <magic 4s><version u16><compressor u8><flags u8><total u64>
+#: <quant_block u32><aux u32>, little-endian (docs/wire-format.md)
+_HEADER_STRUCT = struct.Struct("<4sHBBQII")
+HEADER_BYTES = _HEADER_STRUCT.size          # 24
+
+#: stable on-the-wire compressor ids (never renumber — append only)
+COMPRESSOR_IDS = {"identity": 0, "int8": 1, "int4": 2, "topk": 3,
+                  "signsgd": 4}
+_ID_COMPRESSORS = {v: k for k, v in COMPRESSOR_IDS.items()}
+
+
+@dataclass(frozen=True)
+class Header:
+    """The versioned 24-byte preamble of every serialized payload.
+
+    Also the checkpoint-manifest fingerprint of wire-layout engine
+    state (uplink EF residuals, downlink replicas): restoring under a
+    different geometry would silently misinterpret the packed rows, so
+    `check_headers` rejects any mismatch with a clear error.
+
+    ``aux`` carries the compressor-specific layout parameter (top-k:
+    ``k``); 0 otherwise.
+    """
+    compressor: str
+    total: int
+    quant_block: int
+    aux: int = 0
+    version: int = WIRE_VERSION
+
+    def pack(self) -> bytes:
+        if self.compressor not in COMPRESSOR_IDS:
+            raise ValueError(f"unknown compressor {self.compressor!r}")
+        return _HEADER_STRUCT.pack(
+            WIRE_MAGIC, self.version, COMPRESSOR_IDS[self.compressor], 0,
+            self.total, self.quant_block, self.aux)
+
+    @classmethod
+    def unpack(cls, buf: bytes) -> "Header":
+        if len(buf) < HEADER_BYTES:
+            raise ValueError(
+                f"wire buffer too short for a header: {len(buf)} < "
+                f"{HEADER_BYTES} bytes")
+        magic, ver, comp_id, _flags, total, qb, aux = \
+            _HEADER_STRUCT.unpack_from(buf)
+        if magic != WIRE_MAGIC:
+            raise ValueError(
+                f"not a Fed-Sophia wire buffer (magic {magic!r}, "
+                f"expected {WIRE_MAGIC!r})")
+        if ver != WIRE_VERSION:
+            raise ValueError(
+                f"unsupported wire-format version {ver} (this build "
+                f"speaks version {WIRE_VERSION}); re-encode the payload "
+                f"or upgrade")
+        if comp_id not in _ID_COMPRESSORS:
+            raise ValueError(f"unknown wire compressor id {comp_id}")
+        return cls(compressor=_ID_COMPRESSORS[comp_id], total=total,
+                   quant_block=qb, aux=aux, version=ver)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"version": self.version, "compressor": self.compressor,
+                "total": self.total, "quant_block": self.quant_block,
+                "aux": self.aux}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Header":
+        return cls(compressor=d["compressor"], total=int(d["total"]),
+                   quant_block=int(d["quant_block"]),
+                   aux=int(d.get("aux", 0)),
+                   version=int(d.get("version", WIRE_VERSION)))
+
+
+def check_headers(saved: Dict[str, Dict[str, Any]],
+                  current: Dict[str, Dict[str, Any]]) -> None:
+    """Validate checkpointed per-stream wire headers against the
+    current engine's (`FedEngine.wire_headers`).  Raises ValueError
+    naming every mismatched stream/field — comm/EF state saved under
+    one layout must never be reinterpreted under another."""
+    if not saved:
+        raise ValueError(
+            "the checkpoint manifest carries no wire headers (it "
+            "predates the versioned wire format, or was saved without "
+            "FedEngine.wire_headers) — cannot prove the comm/EF "
+            "layouts match; re-save the checkpoint with this build")
+    problems = []
+    for stream in sorted(set(saved) | set(current)):
+        if stream not in saved:
+            problems.append(
+                f"stream {stream!r}: active now but the checkpoint has "
+                f"no wire header for it (saved under a config without "
+                f"this stream)")
+            continue
+        if stream not in current:
+            problems.append(
+                f"stream {stream!r}: present in the checkpoint but not "
+                f"active under the current config")
+            continue
+        s, c = saved[stream], current[stream]
+        for field_ in ("version", "compressor", "total", "quant_block",
+                       "aux"):
+            if s.get(field_) != c.get(field_):
+                problems.append(
+                    f"stream {stream!r}: {field_} was "
+                    f"{s.get(field_)!r} at save time but is "
+                    f"{c.get(field_)!r} now")
+    if problems:
+        raise ValueError(
+            "wire-layout mismatch between checkpoint and current comm "
+            "config — restoring would misinterpret packed comm/EF "
+            "state:\n  " + "\n  ".join(problems))
 
 
 @dataclass(frozen=True)
@@ -64,3 +187,17 @@ def unpack(flat: jnp.ndarray, spec: FlatSpec):
         out.append(v[off:off + sz].reshape(shp).astype(dt))
         off += sz
     return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def repack(flat: jnp.ndarray, from_spec: FlatSpec,
+           to_spec: FlatSpec) -> jnp.ndarray:
+    """Re-lay a packed buffer from one stream's (rows, cols) geometry
+    into another's (same flattened coordinates, different quant_block;
+    the pad tail is re-zeroed)."""
+    if from_spec.total != to_spec.total:
+        raise ValueError(
+            f"repack between incompatible specs: total "
+            f"{from_spec.total} vs {to_spec.total}")
+    v = flat.reshape(-1)[:from_spec.total]
+    return jnp.pad(v, (0, to_spec.padded - to_spec.total)).reshape(
+        to_spec.rows, to_spec.cols)

@@ -192,6 +192,17 @@ class CommConfig:
     # common payload back. Second-order state is smoother than
     # gradients, so the intended default when enabled is "int4".
     hessian_compressor: str = "off"
+    # ---- per-stream packing geometry overrides (0/0.0 = inherit) ------
+    # Each stream may override the quantization group size and top-k
+    # sparsity of its packed layout: curvature is much smoother than
+    # gradients, so the hessian stream typically affords coarser groups
+    # (fewer fp32 scales on the wire).  The stream's (rows, cols) wire
+    # layout follows its own quant_block, so streams may disagree on
+    # geometry; they always share the flattened `total` coordinates.
+    downlink_quant_block: int = 0     # 0 -> inherit quant_block
+    downlink_topk_ratio: float = 0.0  # 0.0 -> inherit topk_ratio
+    hessian_quant_block: int = 0      # 0 -> inherit quant_block
+    hessian_topk_ratio: float = 0.0   # 0.0 -> inherit topk_ratio
 
     @property
     def lossless(self) -> bool:
@@ -212,24 +223,68 @@ class CommConfig:
 
     def stream(self, name: str) -> "CommConfig":
         """Per-stream view: this config with ``compressor`` /
-        ``error_feedback`` resolved for the named stream, so the same
+        ``error_feedback`` / packing geometry (``quant_block``,
+        ``topk_ratio``) resolved for the named stream, so the same
         compressor factory and accounting serve every stream."""
         if name == "uplink":
             return self
         if name == "downlink":
             return dataclasses.replace(
                 self, compressor=self.downlink_compressor,
-                error_feedback=self.downlink_error_feedback)
+                error_feedback=self.downlink_error_feedback,
+                quant_block=self.downlink_quant_block or self.quant_block,
+                topk_ratio=self.downlink_topk_ratio or self.topk_ratio)
         if name == "hessian":
             c = self.hessian_compressor
             return dataclasses.replace(
                 self, compressor="identity" if c == "off" else c,
-                error_feedback=False)
+                error_feedback=False,
+                quant_block=self.hessian_quant_block or self.quant_block,
+                topk_ratio=self.hessian_topk_ratio or self.topk_ratio)
         raise ValueError(f"unknown stream {name!r} (want {COMM_STREAMS})")
 
     def num_participants(self, num_clients: int) -> int:
         s = int(round(self.participation * num_clients))
         return max(1, min(num_clients, s))
+
+
+#: Round disciplines of the virtual-time scheduler (repro.sched).
+SCHED_DISCIPLINES = ("sync", "semisync", "async")
+
+#: Latency profiles of the virtual-time scheduler (repro.sched).
+LATENCY_PROFILES = ("uniform", "straggler", "lognormal")
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    """Virtual-time round scheduling (repro.sched).
+
+    A deterministic event simulator assigns every client a latency
+    (compute seconds per local step plus transfer seconds derived from
+    the comm layer's exact per-stream byte counts and ``bandwidth_bps``)
+    and drives one of three round disciplines:
+
+    * ``sync`` — today's engine behaviour, bit-exact: every sampled
+      client trains each round, the round takes as long as its slowest
+      participant.
+    * ``semisync`` — FedBuff-style: the server aggregates the first
+      ``buffer_size`` arrivals of each round (staleness-weighted mean);
+      stragglers keep training and deliver stale deltas into a later
+      buffer.
+    * ``async`` — every arrival is applied immediately with the
+      staleness-decayed weight ``(1 + staleness)^-staleness_power``.
+    """
+    discipline: str = "sync"          # sync | semisync | async
+    buffer_size: int = 0              # semisync: arrivals per aggregation
+    #                                   (0 -> all in-flight participants)
+    staleness_power: float = 0.5      # arrival weight (1+tau)^-p
+    latency_profile: str = "uniform"  # uniform | straggler | lognormal
+    compute_s: float = 1.0            # base seconds per local iteration
+    bandwidth_bps: float = 1e8        # base link speed, bits/second
+    straggler_frac: float = 0.25      # straggler: fraction of slow clients
+    straggler_slowdown: float = 10.0  # straggler: slow-client multiplier
+    lognormal_sigma: float = 0.75     # lognormal: client-speed spread
+    seed: int = 0                     # latency-sampling salt
 
 
 @dataclass(frozen=True)
@@ -273,6 +328,10 @@ class FedConfig:
     # client<->server communication model (compression, participation,
     # bytes-on-the-wire accounting) — see repro.comm
     comm: CommConfig = field(default_factory=CommConfig)
+    # virtual-time round scheduling (latency model, async/semisync
+    # disciplines, staleness weighting) — consumed by repro.sched, not
+    # by the engine itself; the default is today's synchronous rounds
+    sched: SchedConfig = field(default_factory=SchedConfig)
 
 
 @dataclass(frozen=True)

@@ -27,11 +27,18 @@ through the multi-stream delta-space pipeline:
     averaged-curvature payload back to the participants.
 
 Round metrics always include exact per-stream byte counts.
+
+Beyond the synchronous round, `comm_client_step` is the reusable
+per-participant core (broadcast -> local train -> uplink encode): the
+virtual-time scheduler (`repro.sched`) drives it one dispatch at a
+time for asynchronous / semi-synchronous disciplines, with
+`comm_runtime` supplying the per-stream (spec, compressor) handles and
+`wire_headers` fingerprinting the wire layouts for checkpoint restore.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +53,34 @@ from repro.core.gnb import gnb_estimate
 from repro.core.schedules import lr_at_round
 from repro.utils.tree import (tree_count_params, tree_mean_axis0,
                               tree_sq_norm, tree_sub, tree_zeros_like)
+
+
+#: rng salt of the per-round participation sample (shared by
+#: `FedEngine._round_comm` and `FedEngine.round_participants`)
+PARTICIPATION_SALT = 0x9A70
+
+
+class CommRuntime(NamedTuple):
+    """Trace-time comm-path handles: one (spec, compressor) per active
+    stream.  Per-stream packing geometry (``CommConfig.
+    downlink_quant_block`` / ``hessian_quant_block``) means the streams
+    may disagree on (rows, cols); they always share the flattened
+    ``total`` coordinate order, so `repro.comm.flat.repack` moves
+    buffers between geometries."""
+    spec: Any                      # uplink layout
+    comp: Any                      # uplink compressor
+    spec_dn: Any = None
+    comp_dn: Any = None
+    spec_h: Any = None
+    comp_h: Any = None
+
+    @property
+    def dn_on(self) -> bool:
+        return self.comp_dn is not None
+
+    @property
+    def h_on(self) -> bool:
+        return self.comp_h is not None
 
 
 class FedEngine:
@@ -109,17 +144,131 @@ class FedEngine:
             state["server_opt"] = {"m": tree_zeros_like(params),
                                    "v": tree_zeros_like(params)}
         comm = self.fed.comm
-        if wants_error_feedback(comm) or comm.downlink_enabled:
-            spec = cflat.flat_spec(params, cols=comm.quant_block)
         if wants_error_feedback(comm):
-            # per-client error-feedback residual, stored in wire layout
+            # per-client error-feedback residual, stored in uplink
+            # wire layout
+            spec = cflat.flat_spec(params, cols=comm.quant_block)
             state["comm_ef"] = jnp.zeros(
                 (self.fed.num_clients, spec.rows, spec.cols), jnp.float32)
         if comm.downlink_enabled:
-            # per-client last-received model replicas (+ server-side EF)
+            # per-client last-received model replicas (+ server-side
+            # EF), stored in the downlink stream's own layout
+            spec_dn = cflat.flat_spec(
+                params, cols=comm.stream("downlink").quant_block)
             state.update(cdown.init_state(
-                comm, spec, cflat.pack(params, spec), self.fed.num_clients))
+                comm, spec_dn, cflat.pack(params, spec_dn),
+                self.fed.num_clients))
         return state
+
+    def restore_params(self, state, params) -> Dict[str, Any]:
+        """Swap restored params into ``state``, rebuilding the
+        wire-layout client state that references the model: downlink
+        replicas must re-sync to the restored params (a delta-coded
+        broadcast against the old init would be garbage) and EF
+        residuals restart at zero."""
+        state = {**state, "params": params}
+        comm = self.fed.comm
+        if "comm_ef" in state:
+            state["comm_ef"] = tree_zeros_like(state["comm_ef"])
+        if comm.downlink_enabled:
+            spec_dn = cflat.flat_spec(
+                params, cols=comm.stream("downlink").quant_block)
+            state.update(cdown.init_state(
+                comm, spec_dn, cflat.pack(params, spec_dn),
+                self.fed.num_clients))
+        return state
+
+    # ------------------------------------------------------ comm plumbing
+    def uses_direct_path(self) -> bool:
+        """Whether `round` takes the direct client-mean path (lossless
+        identity, full participation, no extra streams) instead of the
+        delta-space comm path."""
+        comm = self.fed.comm
+        C = self.fed.num_clients
+        return (comm.lossless and comm.num_participants(C) == C
+                and not comm.multi_stream)
+
+    def round_participants(self, rng) -> jnp.ndarray:
+        """The client ids `round(state, batches, rng)` trains — the
+        direct path trains everyone; the comm path gathers the
+        participation sample.  The single source of truth for
+        schedulers/reports that need the cohort outside the jit."""
+        C = self.fed.num_clients
+        if self.uses_direct_path():
+            return jnp.arange(C)
+        return participation_indices(
+            jax.random.fold_in(rng, PARTICIPATION_SALT
+                               + self.fed.comm.seed),
+            C, self.fed.comm.num_participants(C))
+
+    def comm_runtime(self, params) -> CommRuntime:
+        """Build the per-stream (spec, compressor) handles for the comm
+        path — trace-time only (specs/compressors hold no arrays)."""
+        comm = self.fed.comm
+        spec = cflat.flat_spec(params, cols=comm.quant_block)
+        kw: Dict[str, Any] = {}
+        if comm.downlink_enabled:
+            s = cflat.flat_spec(
+                params, cols=comm.stream("downlink").quant_block)
+            kw.update(spec_dn=s,
+                      comp_dn=make_stream_compressor(comm, "downlink", s))
+        if comm.hessian_enabled:
+            s = cflat.flat_spec(
+                params, cols=comm.stream("hessian").quant_block)
+            kw.update(spec_h=s,
+                      comp_h=make_stream_compressor(comm, "hessian", s))
+        return CommRuntime(spec=spec, comp=make_compressor(comm, spec),
+                           **kw)
+
+    def wire_headers(self, params) -> Dict[str, Dict[str, Any]]:
+        """Versioned wire-layout headers of every active stream, as
+        plain dicts — store them in checkpoint manifests;
+        `repro.comm.flat.check_headers` rejects a restore whose
+        comm/EF state was written under a different layout."""
+        rt = self.comm_runtime(params)
+        out = {"uplink": rt.comp.header().to_dict()}
+        if rt.dn_on:
+            out["downlink"] = rt.comp_dn.header().to_dict()
+        if rt.h_on:
+            out["hessian"] = rt.comp_h.header().to_dict()
+        return out
+
+    def comm_client_step(self, rt: CommRuntime, params, packed_theta,
+                         round_idx, lr, opt, ef_i, dnm_i, dnef_i, batch,
+                         crng):
+        """One participant's comm-path step — the reusable core of
+        `_round_comm`, also driven one dispatch at a time by the
+        virtual-time scheduler (`repro.sched`):
+
+        downlink broadcast (replica update) -> local training from the
+        received model -> uplink delta encode/decode [-> hessian-EMA
+        encode/decode].
+
+        Returns ``(xhat, stat, ef_new, opt_new, loss, dnm_new,
+        dnef_new, h_hat, h_stat)`` with ``None`` for inactive pieces.
+        """
+        if rt.dn_on:
+            dnm_i, dnef_i = cdown.broadcast(
+                rt.comp_dn, jax.random.fold_in(crng, 0xD0),
+                packed_theta, dnm_i, dnef_i)
+            p_start = cflat.unpack(dnm_i, rt.spec_dn)
+        else:
+            p_start = params
+        p_i, opt_i, loss = self._local_update(
+            p_start, opt, batch, crng, round_idx, lr)
+        delta = cflat.pack(tree_sub(p_i, p_start), rt.spec)
+        if ef_i is not None:
+            delta = delta + ef_i
+        xhat, stat = rt.comp.roundtrip(jax.random.fold_in(crng, 0xC0),
+                                       delta)
+        ef_new = None if ef_i is None else delta - xhat
+        h_hat = h_stat = None
+        if rt.h_on:
+            h_hat, h_stat = rt.comp_h.roundtrip(
+                jax.random.fold_in(crng, 0x4E),
+                cflat.pack(opt_i.h, rt.spec_h))
+        return (xhat, stat, ef_new, opt_i, loss,
+                dnm_i if rt.dn_on else None, dnef_i, h_hat, h_stat)
 
     # ------------------------------------------------- local client training
     def _local_sophia(self, params, opt, batch, round_idx, rng, lr):
@@ -268,7 +417,7 @@ class FedEngine:
         client_rngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
             jnp.arange(C))
 
-        if comm.lossless and S == C and not comm.multi_stream:
+        if self.uses_direct_path():
             # lossless identity at full participation, no extra streams:
             # aggregate client params directly — bit-identical to the
             # pre-comm engine
@@ -352,16 +501,12 @@ class FedEngine:
         params = state["params"]
         C = fed.num_clients
         S = comm.num_participants(C)
-        spec = cflat.flat_spec(params, cols=comm.quant_block)
-        comp = make_compressor(comm, spec)
-        dn_on, h_on = comm.downlink_enabled, comm.hessian_enabled
-        comp_dn = (make_stream_compressor(comm, "downlink", spec)
-                   if dn_on else None)
-        comp_h = (make_stream_compressor(comm, "hessian", spec)
-                  if h_on else None)
-        packed_theta = cflat.pack(params, spec) if dn_on else None
+        rt = self.comm_runtime(params)
+        spec, comp = rt.spec, rt.comp
+        dn_on, h_on = rt.dn_on, rt.h_on
+        packed_theta = cflat.pack(params, rt.spec_dn) if dn_on else None
         idx = participation_indices(
-            jax.random.fold_in(rng, 0x9A70 + comm.seed), C, S)
+            jax.random.fold_in(rng, PARTICIPATION_SALT + comm.seed), C, S)
         stateful = (fed.optimizer == "fed_sophia"
                     and fed.persistent_client_state)
         opts = state.get("client_opt") if stateful else None
@@ -377,29 +522,8 @@ class FedEngine:
         dnm_g, dnef_g = take(dn_model), take(dn_ef)
         batches_g, rngs_g = take(batches), client_rngs[idx]
 
-        def client(opt, ef_i, dnm_i, dnef_i, batch, crng):
-            if dn_on:
-                dnm_i, dnef_i = cdown.broadcast(
-                    comp_dn, jax.random.fold_in(crng, 0xD0),
-                    packed_theta, dnm_i, dnef_i)
-                p_start = cflat.unpack(dnm_i, spec)
-            else:
-                p_start = params
-            p_i, opt_i, loss = self._local_update(
-                p_start, opt, batch, crng, round_idx, lr)
-            delta = cflat.pack(tree_sub(p_i, p_start), spec)
-            if ef_i is not None:
-                delta = delta + ef_i
-            xhat, stat = comp.roundtrip(jax.random.fold_in(crng, 0xC0),
-                                        delta)
-            ef_new = None if ef_i is None else delta - xhat
-            h_hat = h_stat = None
-            if h_on:
-                h_hat, h_stat = comp_h.roundtrip(
-                    jax.random.fold_in(crng, 0x4E),
-                    cflat.pack(opt_i.h, spec))
-            return (xhat, stat, ef_new, opt_i, loss,
-                    dnm_i if dn_on else None, dnef_i, h_hat, h_stat)
+        client = functools.partial(self.comm_client_step, rt, params,
+                                   packed_theta, round_idx, lr)
 
         if fed.strategy == "parallel":
             (wires, stats, ef_new_g, opt_new_g, losses, dnm_new_g,
@@ -426,12 +550,14 @@ class FedEngine:
                     acc = {**acc, "h": acc["h"] + h_hat / S,
                            "hs": acc["hs"] + h_stat / S}
                 return acc, (ef_i_new, opt_i, loss, dnm_new, dnef_new)
-            zero_buf = jnp.zeros((spec.rows, spec.cols), jnp.float32)
-            acc0 = {"w": zero_buf, "s": jnp.zeros((), jnp.float32)}
+            acc0 = {"w": jnp.zeros((spec.rows, spec.cols), jnp.float32),
+                    "s": jnp.zeros((), jnp.float32)}
             if dn_on:
-                acc0["dn"] = zero_buf
+                acc0["dn"] = jnp.zeros(
+                    (rt.spec_dn.rows, rt.spec_dn.cols), jnp.float32)
             if h_on:
-                acc0["h"] = zero_buf
+                acc0["h"] = jnp.zeros(
+                    (rt.spec_h.rows, rt.spec_h.cols), jnp.float32)
                 acc0["hs"] = jnp.zeros((), jnp.float32)
             acc, (ef_new_g, opt_new_g, losses, dnm_new_g, dnef_new_g) = \
                 jax.lax.scan(scan_body, acc0,
@@ -448,7 +574,11 @@ class FedEngine:
             # clients trained from their OWN received replicas: the
             # aggregated model is mean_S(replica + decoded uplink delta),
             # expressed as a server-side delta vs the true model
-            agg_flat = agg_flat + (dn_mean - packed_theta)
+            corr = dn_mean - packed_theta
+            if rt.spec_dn.cols != spec.cols:
+                # downlink stream packs with its own quant_block
+                corr = cflat.repack(corr, rt.spec_dn, spec)
+            agg_flat = agg_flat + corr
         agg_delta = cflat.unpack(agg_flat, spec)
         agg = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
                            params, agg_delta)
@@ -460,10 +590,10 @@ class FedEngine:
             if h_on:
                 # curvature averaging: every participant's h re-synced
                 # to the (re-quantized) common averaged broadcast
-                h_down, _ = comp_h.roundtrip(
+                h_down, _ = rt.comp_h.roundtrip(
                     jax.random.fold_in(rng, 0x4D),
-                    comp_h.server_combine(h_agg, h_wstat))
-                h_avg = cflat.unpack(h_down, spec)
+                    rt.comp_h.server_combine(h_agg, h_wstat))
+                h_avg = cflat.unpack(h_down, rt.spec_h)
                 new_h = jax.tree.map(
                     lambda full, v: full.at[idx].set(jnp.broadcast_to(
                         v[None], (S,) + v.shape).astype(full.dtype)),

@@ -32,3 +32,11 @@ def sign_roundtrip_ref(x, scale):
 def topk_threshold_ref(x, thr):
     """Reference for kernels.quantize.topk_threshold_flat."""
     return jnp.where(jnp.abs(x) >= thr, x, 0.0)
+
+
+def stale_accum_ref(wires, weights, inv_norm):
+    """Reference for kernels.stale_accum.stale_accum_flat: staleness-
+    weighted accumulate of K arrival wires."""
+    w = jnp.asarray(weights, jnp.float32)[:, None, None]
+    return jnp.asarray(inv_norm, jnp.float32) * jnp.sum(
+        wires.astype(jnp.float32) * w, axis=0)

@@ -1,0 +1,73 @@
+"""Fused staleness-weighted delta-accumulate Pallas TPU kernel.
+
+The virtual-time scheduler (`repro.sched`) aggregates a buffer of K
+arrival wires with per-arrival staleness weights:
+
+    agg = inv_norm * sum_k weights[k] * wires[k]
+
+(`inv_norm = 1/sum(weights)` for the semisync weighted mean, 1.0 for
+the async unnormalized apply).  Left to XLA this is a broadcast
+multiply materialising a (K, R, C) temporary plus a reduction — two
+HBM passes over the K wires.  The kernel walks the K axis innermost
+over each (R, C) tile, accumulating in VMEM: every wire is read once
+and the aggregate written once, the same HBM-roofline argument as the
+quantize round-trips in `repro.kernels.quantize`.
+
+Layout matches `repro.comm.flat`: fp32 (rows, cols) tiles.  The
+reference oracle is `repro.kernels.ref.stale_accum_ref`;
+``interpret=True`` runs the kernel body on CPU (this container), pass
+False on a real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 1024
+
+
+def _stale_accum_kernel(x_ref, w_ref, s_ref, out_ref, *, num_wires):
+    """One (br, bc) output tile, revisited across the K grid steps:
+    out = 0; out += w_k * x_k; out *= inv_norm on the last step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += w_ref[0, 0] * x_ref[0, ...]
+
+    @pl.when(k == num_wires - 1)
+    def _scale():
+        out_ref[...] *= s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stale_accum_flat(wires, weights, inv_norm, *, interpret: bool = True):
+    """Fused weighted accumulate over K arrival wires.
+
+    wires: (K, R, C) fp32 packed deltas; weights: (K,) staleness
+    weights; inv_norm: scalar final scale (traced).  Returns the
+    (R, C) fp32 aggregate ``inv_norm * sum_k weights[k] * wires[k]``.
+    """
+    K, R, C = wires.shape
+    br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
+    # K innermost: each output tile is revisited on consecutive grid
+    # steps (the TPU-legal accumulation pattern)
+    grid = (pl.cdiv(R, br), pl.cdiv(C, bc), K)
+    w2 = jnp.asarray(weights, jnp.float32).reshape(K, 1)
+    s2 = jnp.asarray(inv_norm, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_stale_accum_kernel, num_wires=K),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, br, bc), lambda i, j, k: (k, i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j, k: (k, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(wires.astype(jnp.float32), w2, s2)

@@ -9,6 +9,7 @@ reduced configs for end-to-end validation:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -17,10 +18,13 @@ import jax.numpy as jnp
 from repro import configs
 from repro.checkpoint import ckpt
 from repro.comm import round_bytes
-from repro.configs.base import CommConfig, FedConfig
+from repro.comm import flat as cflat
+from repro.configs.base import (LATENCY_PROFILES, SCHED_DISCIPLINES,
+                                CommConfig, FedConfig, SchedConfig)
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
 from repro.models import transformer as T
+from repro.sched import VirtualScheduler
 
 
 def main():
@@ -62,7 +66,25 @@ def main():
                          "averaging; 'off' keeps curvature local)")
     ap.add_argument("--comm-pallas", action="store_true",
                     help="fused quantize/dequantize kernels (interpret on CPU)")
+    # virtual-time round scheduling (repro.sched)
+    ap.add_argument("--schedule", default="sync",
+                    choices=SCHED_DISCIPLINES,
+                    help="round discipline: sync (today's engine), "
+                         "semisync (FedBuff-style buffered rounds) or "
+                         "async (per-arrival staleness-weighted apply)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="semisync: arrivals aggregated per round "
+                         "(0 = all in-flight participants)")
+    ap.add_argument("--staleness-power", type=float, default=0.5,
+                    help="arrival weight (1+staleness)^-p")
+    ap.add_argument("--latency-profile", default="uniform",
+                    choices=LATENCY_PROFILES,
+                    help="per-client latency model of the virtual clock")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params from --ckpt-dir first "
+                         "(validates the checkpoint's wire-layout "
+                         "headers against the current comm config)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -79,14 +101,30 @@ def main():
                       downlink_compressor=args.downlink_compressor,
                       hessian_compressor=args.hessian_compressor,
                       use_pallas=args.comm_pallas)
+    sched = SchedConfig(discipline=args.schedule,
+                        buffer_size=args.buffer_size,
+                        staleness_power=args.staleness_power,
+                        latency_profile=args.latency_profile)
     fed = FedConfig(num_clients=args.clients, local_iters=args.local_iters,
                     optimizer=args.optimizer, lr=args.lr, tau=args.tau,
                     total_rounds=args.rounds, use_pallas=args.use_pallas,
-                    schedule=over.get("schedule", "const"), comm=comm)
+                    schedule=over.get("schedule", "const"), comm=comm,
+                    sched=sched)
     task = T.LMTask(cfg)
     engine = FedEngine(task, fed)
     key = jax.random.PRNGKey(args.seed)
     state = engine.init(key)
+    if args.resume:
+        manifest = ckpt.load_manifest(args.ckpt_dir)
+        cflat.check_headers(manifest.get("extra", {}).get("wire", {}),
+                            engine.wire_headers(state["params"]))
+        # rebuild the wire-layout client state (downlink replicas, EF
+        # residuals) around the restored model — broadcasting deltas
+        # against the discarded random init would be garbage
+        state = engine.restore_params(
+            state, ckpt.restore(args.ckpt_dir, state["params"]))
+        print(f"resumed params from {args.ckpt_dir} "
+              f"(step {manifest['step']}, wire headers OK)")
     round_fn = jax.jit(engine.round)
 
     n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
@@ -106,7 +144,7 @@ def main():
                      ("uplink_bytes", "downlink_bytes",
                       "hessian_uplink_bytes", "hessian_downlink_bytes",
                       "total_bytes")))
-    for r in range(args.rounds):
+    def make_batches(r):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,
                                        args.seq, cfg.vocab_size)
@@ -115,19 +153,39 @@ def main():
             batches = {"embeds": jax.random.normal(
                 ke, (fed.num_clients, args.batch, args.seq, cfg.d_model),
                 dtype=T.param_dtype(cfg)), "labels": batches["labels"]}
-        t0 = time.time()
-        state, metrics = round_fn(state, batches,
-                                  jax.random.fold_in(key, r))
-        print(f"round {r:3d} loss={float(metrics['loss']):.4f} "
-              f"lr={float(metrics['lr']):.2e} "
-              f"uplink={uplink_round / 2**20:.2f}MiB "
-              f"total={total_round / 2**20:.2f}MiB "
-              f"(cum {(r + 1) * total_round / 2**20:.2f}MiB) "
-              f"({time.time() - t0:.1f}s)",
-              flush=True)
+        return batches
+
+    if args.schedule == "sync":
+        # the existing synchronous loop, bit-identical to earlier builds
+        for r in range(args.rounds):
+            t0 = time.time()
+            state, metrics = round_fn(state, make_batches(r),
+                                      jax.random.fold_in(key, r))
+            print(f"round {r:3d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"uplink={uplink_round / 2**20:.2f}MiB "
+                  f"total={total_round / 2**20:.2f}MiB "
+                  f"(cum {(r + 1) * total_round / 2**20:.2f}MiB) "
+                  f"({time.time() - t0:.1f}s)",
+                  flush=True)
+    else:
+        # virtual-time event loop (repro.sched): --rounds counts
+        # aggregation events; the printed time is SIMULATED seconds
+        scheduler = VirtualScheduler(engine, make_batches)
+        state, trace = scheduler.run(state, args.rounds, key)
+        for ev in trace.events:
+            stale = max(ev.staleness) if ev.staleness else 0
+            print(f"event {ev.version:3d} t={ev.time:9.2f}s "
+                  f"loss={ev.loss:.4f} clients={list(ev.clients)} "
+                  f"max_stale={stale} "
+                  f"cum={ev.cum_bytes / 2**20:.2f}MiB", flush=True)
+        print(f"{args.schedule}: {len(trace.events)} events, "
+              f"simulated {trace.final_time:.2f}s, "
+              f"{trace.total_bytes / 2**20:.2f}MiB on the wire")
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, state["params"], step=args.rounds,
-                  extra={"arch": args.arch})
+                  extra={"arch": args.arch,
+                         "wire": engine.wire_headers(state["params"])})
         print(f"saved checkpoint to {args.ckpt_dir}")
 
 

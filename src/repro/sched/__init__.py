@@ -1,0 +1,30 @@
+"""repro.sched — virtual-time asynchronous & semi-synchronous rounds.
+
+The engine (`repro.core.fed.FedEngine`) models idealized synchronous
+rounds; this package puts those rounds on a deterministic virtual
+clock with per-client latencies and drives three round disciplines
+over the same comm-path client step:
+
+* ``sync``     — today's behaviour, bit-exact; a round costs its
+  slowest participant's latency.
+* ``semisync`` — FedBuff-style buffered aggregation (first
+  ``buffer_size`` arrivals per round, staleness-weighted mean;
+  stragglers deliver stale deltas into later buffers).
+* ``async``    — every arrival applied immediately with the
+  staleness-decayed weight ``(1 + tau)^-staleness_power``.
+
+`latency` is the deterministic per-client latency model (compute
+seconds per local step + transfer seconds from the comm layer's exact
+per-stream byte counts); `scheduler.VirtualScheduler` is the event
+loop.  Configuration lives in `repro.configs.base.SchedConfig`; see
+docs/scheduling.md for the data flow and `benchmarks/run.py --only
+sched` for the wall-clock-to-target-loss comparison.
+"""
+from repro.sched.latency import (client_multipliers, dispatch_seconds,
+                                 leg_bytes, stragglers)
+from repro.sched.scheduler import SchedEvent, SchedTrace, VirtualScheduler
+
+__all__ = [
+    "client_multipliers", "dispatch_seconds", "leg_bytes", "stragglers",
+    "SchedEvent", "SchedTrace", "VirtualScheduler",
+]

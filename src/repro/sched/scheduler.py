@@ -1,0 +1,417 @@
+"""Virtual-time event scheduler over `FedEngine` (repro.sched).
+
+A deterministic discrete-event simulator: the *virtual clock* is pure
+host arithmetic over the latency model (`repro.sched.latency`), while
+all model math stays in jitted JAX calls that reuse the engine's own
+comm-path client step (`FedEngine.comm_client_step`) — the same
+downlink-replica / error-feedback / compressor bookkeeping as the
+synchronous round, driven one dispatch at a time.
+
+Disciplines (``SchedConfig.discipline``):
+
+* ``sync``     — delegates each event to ``FedEngine.round`` verbatim
+  (bit-identical to the existing engine); the event takes as long as
+  the round's slowest participant.
+* ``semisync`` — FedBuff-style buffered aggregation: the first
+  ``buffer_size`` arrivals form the round; the server applies their
+  staleness-weighted **mean** and immediately re-dispatches them,
+  while stragglers keep training and deliver stale deltas into a
+  later buffer.  With ``buffer_size == num_clients``, full
+  participation and uniform latencies this is bit-identical to the
+  synchronous comm path (under partial participation the disciplines
+  differ by construction: sync resamples its cohort every round,
+  while the event loop keeps the version-0 cohort in flight).
+* ``async``    — every arrival is applied immediately (buffer of one)
+  with the **unnormalized** staleness-decayed weight
+  ``(1 + staleness)^-staleness_power`` (FedAsync-style mixing).
+
+Staleness ``tau`` of an arrival is the number of server model
+versions applied between its dispatch and its arrival.  Applying an
+aggregate bumps the server version; a client dispatched at version
+``v`` trains with ``round_idx = v`` (LR schedule and Sophia refresh
+timing follow the dispatch-time version).
+
+Execution note: a dispatch's client math runs eagerly at dispatch
+time (the broadcast must see the then-current server model — exactly
+the replica semantics of `repro.comm.downlink`); only its *delivery*
+is deferred to the arrival's virtual timestamp.  Everything the clock
+decides (latencies, arrival order, buffer membership, staleness) is
+deterministic in the configured seeds, so a run replays bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import accounting
+from repro.comm import downlink as cdown
+from repro.comm import flat as cflat
+from repro.configs.base import SCHED_DISCIPLINES
+from repro.core.schedules import lr_at_round
+from repro.kernels import INTERPRET as _INTERPRET
+from repro.sched import latency
+from repro.utils.tree import tree_count_params
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedEvent:
+    """One aggregation event of the virtual clock."""
+    time: float               # virtual seconds at which it was applied
+    version: int              # server model version it produced
+    kind: str                 # "round" (sync) | "aggregate"
+    clients: Tuple[int, ...]  # arrivals folded into this event
+    staleness: Tuple[int, ...]
+    weights: Tuple[float, ...]
+    loss: float               # mean local-training loss of the arrivals
+    cum_bytes: int            # cumulative wire bytes, all streams
+    eval_loss: Optional[float] = None
+
+
+@dataclasses.dataclass
+class SchedTrace:
+    """The full event log of one scheduler run."""
+    discipline: str
+    events: List[SchedEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def final_time(self) -> float:
+        return self.events[-1].time if self.events else 0.0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.events[-1].cum_bytes if self.events else 0
+
+    def _target_event(self, target_loss: float) -> Optional[SchedEvent]:
+        for ev in self.events:
+            loss = ev.eval_loss if ev.eval_loss is not None else ev.loss
+            if loss <= target_loss:
+                return ev
+        return None
+
+    def time_to_target(self, target_loss: float) -> Optional[float]:
+        """Virtual seconds until the (eval) loss first reached target."""
+        ev = self._target_event(target_loss)
+        return None if ev is None else ev.time
+
+    def bytes_to_target(self, target_loss: float) -> Optional[int]:
+        ev = self._target_event(target_loss)
+        return None if ev is None else ev.cum_bytes
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched client's precomputed results awaiting delivery."""
+    arrival: float
+    version: int
+    wire: Any
+    stat: Any
+    loss: float
+    ef: Any = None
+    opt: Any = None
+    dnm: Any = None
+    dnef: Any = None
+
+
+class VirtualScheduler:
+    """Drives `FedEngine` rounds on a virtual clock.
+
+    ``batch_fn(version) -> pytree`` must return a batch pytree with
+    leading client axis ``C`` for the given server version (clients
+    dispatched at version ``v`` train on their row of
+    ``batch_fn(v)``); ``eval_fn(params) -> scalar loss`` is optional
+    and sampled every ``eval_every`` aggregations.
+    """
+
+    def __init__(self, engine, batch_fn: Callable[[int], Any],
+                 eval_fn: Optional[Callable[[Any], Any]] = None,
+                 eval_every: int = 1):
+        fed = engine.fed
+        sched = fed.sched
+        comm = fed.comm
+        if sched.discipline not in SCHED_DISCIPLINES:
+            raise ValueError(
+                f"unknown schedule discipline {sched.discipline!r} "
+                f"(want one of {SCHED_DISCIPLINES})")
+        if comm.hessian_enabled and sched.discipline != "sync":
+            raise ValueError(
+                "the hessian stream's curvature averaging is a round-"
+                "synchronous collective (one common broadcast per "
+                "round); use discipline='sync' or disable "
+                "hessian_compressor")
+        self.engine = engine
+        self.fed = fed
+        self.sched = sched
+        self.comm = comm
+        self.batch_fn = batch_fn
+        self.eval_fn = eval_fn
+        self.eval_every = max(1, eval_every)
+        C = fed.num_clients
+        self.num_clients = C
+        self.cohort = comm.num_participants(C)
+        if sched.discipline == "semisync":
+            k = sched.buffer_size or self.cohort
+            if not 1 <= k <= self.cohort:
+                raise ValueError(
+                    f"buffer_size={sched.buffer_size} must be in "
+                    f"[1, {self.cohort}] (the in-flight cohort)")
+            self.buffer_size = k
+        else:
+            self.buffer_size = 1           # async applies every arrival
+        self._stateful = (fed.optimizer == "fed_sophia"
+                          and fed.persistent_client_state)
+        self._round_fn = jax.jit(engine.round)
+        self._dispatch_fn = jax.jit(self._dispatch_impl)
+        self._apply_fn = jax.jit(self._apply_impl)
+        self._batch_cache: Tuple[int, Any] = (-1, None)
+
+    # ---------------------------------------------------------- jit bodies
+    def _dispatch_impl(self, state, batches, idx, rng_v, round_idx):
+        """Run the comm-path client step for the dispatch group ``idx``
+        against the current server model (vmapped, same math as
+        `_round_comm`)."""
+        engine = self.engine
+        params = state["params"]
+        rt = engine.comm_runtime(params)
+        lr = lr_at_round(self.fed, round_idx)
+        packed_theta = (cflat.pack(params, rt.spec_dn)
+                        if rt.dn_on else None)
+
+        def take(tree):
+            return (None if tree is None
+                    else jax.tree.map(lambda x: x[idx], tree))
+
+        opts_g = take(state.get("client_opt") if self._stateful else None)
+        ef_g = take(state.get("comm_ef"))
+        dnm_g = take(state.get(cdown.MODEL_KEY))
+        dnef_g = take(state.get(cdown.EF_KEY))
+        batches_g = take(batches)
+        rngs_g = jax.vmap(lambda i: jax.random.fold_in(rng_v, i))(idx)
+
+        def client(opt, ef_i, dnm_i, dnef_i, batch, crng):
+            return engine.comm_client_step(
+                rt, params, packed_theta, round_idx, lr,
+                opt, ef_i, dnm_i, dnef_i, batch, crng)
+
+        return jax.vmap(client)(opts_g, ef_g, dnm_g, dnef_g,
+                                batches_g, rngs_g)
+
+    def _apply_impl(self, state, wires, stats, weights, idx,
+                    ef_rows, opt_rows, dnm_rows, dnef_rows):
+        """Apply one staleness-weighted aggregate of K arrivals.
+
+        semisync normalizes (weighted mean, FedBuff); async applies the
+        raw ``(1+tau)^-p``-weighted delta (FedAsync mixing).  Scatters
+        the arrivals' client-state rows back alongside.
+        """
+        engine = self.engine
+        comm = self.comm
+        params = state["params"]
+        rt = engine.comm_runtime(params)
+        normalize = self.sched.discipline == "semisync"
+        wsum = jnp.sum(weights)
+        inv_norm = (1.0 / wsum) if normalize else jnp.float32(1.0)
+        if comm.use_pallas:
+            from repro.kernels.stale_accum import stale_accum_flat
+            agg_flat = stale_accum_flat(wires, weights, inv_norm,
+                                        interpret=_INTERPRET)
+        else:
+            w3 = weights[:, None, None]
+            agg_flat = jnp.sum(wires * w3, axis=0)
+            agg_flat = agg_flat / wsum if normalize else agg_flat
+        wstat = jnp.sum(stats * weights)
+        if normalize:
+            wstat = wstat / wsum
+        agg_flat = rt.comp.server_combine(agg_flat, wstat)
+        if rt.dn_on:
+            # arrivals trained from their OWN received replicas: fold
+            # in each arrival's (replica - current model) reference
+            # shift, weighted like its delta
+            packed_now = cflat.pack(params, rt.spec_dn)
+            dn_acc = jnp.sum(dnm_rows * weights[:, None, None], axis=0)
+            if normalize:
+                corr = dn_acc / wsum - packed_now
+            else:
+                corr = dn_acc - wsum * packed_now
+            if rt.spec_dn.cols != rt.spec.cols:
+                corr = cflat.repack(corr, rt.spec_dn, rt.spec)
+            agg_flat = agg_flat + corr
+        agg_delta = cflat.unpack(agg_flat, rt.spec)
+        agg = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
+                           params, agg_delta)
+        state = engine._apply_aggregate(state, agg)
+        state = {**state, "round": state["round"] + 1}
+        if self._stateful and opt_rows is not None:
+            state = {**state, "client_opt": jax.tree.map(
+                lambda full, g: full.at[idx].set(g),
+                state["client_opt"], opt_rows)}
+        if ef_rows is not None:
+            state = {**state,
+                     "comm_ef": state["comm_ef"].at[idx].set(ef_rows)}
+        if dnm_rows is not None:
+            state = {**state, cdown.MODEL_KEY:
+                     state[cdown.MODEL_KEY].at[idx].set(dnm_rows)}
+        if dnef_rows is not None:
+            state = {**state, cdown.EF_KEY:
+                     state[cdown.EF_KEY].at[idx].set(dnef_rows)}
+        return state
+
+    # ------------------------------------------------------------- helpers
+    def _batches(self, version: int):
+        # dispatches only ever draw the CURRENT version's batches, so a
+        # one-entry cache suffices (async runs see many versions)
+        if self._batch_cache[0] != version:
+            self._batch_cache = (version, self.batch_fn(version))
+        return self._batch_cache[1]
+
+    def _maybe_eval(self, state, version: int,
+                    final: bool) -> Optional[float]:
+        if self.eval_fn is None:
+            return None
+        if final or (version % self.eval_every) == 0:
+            return float(self.eval_fn(state["params"]))
+        return None
+
+    def _weight(self, staleness: int) -> float:
+        return float((1.0 + staleness) ** (-self.sched.staleness_power))
+
+    # ----------------------------------------------------------------- run
+    def run(self, state, num_events: int, rng, *,
+            target_loss: Optional[float] = None,
+            stop_at_target: bool = False):
+        """Advance the virtual clock through ``num_events`` aggregation
+        events (sync: rounds).  Returns ``(state, SchedTrace)``;
+        with ``stop_at_target`` the run ends at the first event whose
+        (eval) loss reaches ``target_loss``.
+        """
+        if self.sched.discipline == "sync":
+            return self._run_sync(state, num_events, rng, target_loss,
+                                  stop_at_target)
+        return self._run_event_loop(state, num_events, rng, target_loss,
+                                    stop_at_target)
+
+    def _run_sync(self, state, num_events, rng, target_loss,
+                  stop_at_target):
+        fed, comm = self.fed, self.comm
+        C = self.num_clients
+        n_params = tree_count_params(state["params"])
+        durations = latency.dispatch_seconds(fed, n_params, C)
+        per_round = accounting.round_bytes(comm, n_params, C)
+        trace = SchedTrace(discipline="sync")
+        now, cum_bytes = 0.0, 0
+        for v in range(num_events):
+            rng_v = jax.random.fold_in(rng, v)
+            state, metrics = self._round_fn(state, self._batches(v),
+                                            rng_v)
+            part = np.asarray(self.engine.round_participants(rng_v))
+            now += float(np.max(durations[part]))
+            cum_bytes += per_round["total_bytes"]
+            final = v == num_events - 1
+            ev = SchedEvent(
+                time=now, version=v + 1, kind="round",
+                clients=tuple(int(i) for i in part),
+                staleness=(0,) * len(part),
+                weights=(1.0,) * len(part),
+                loss=float(metrics["loss"]), cum_bytes=cum_bytes,
+                eval_loss=self._maybe_eval(state, v + 1, final))
+            trace.events.append(ev)
+            if self._hit_target(ev, target_loss, stop_at_target):
+                break
+        return state, trace
+
+    def _run_event_loop(self, state, num_events, rng, target_loss,
+                        stop_at_target):
+        fed, comm = self.fed, self.comm
+        C = self.num_clients
+        n_params = tree_count_params(state["params"])
+        durations = latency.dispatch_seconds(fed, n_params, C)
+        down_bytes, up_bytes = latency.leg_bytes(comm, n_params)
+        trace = SchedTrace(discipline=self.sched.discipline)
+        inflight: Dict[int, _InFlight] = {}
+        buffer: List[Tuple[int, _InFlight]] = []
+        now, version, cum_bytes = 0.0, 0, 0
+
+        def dispatch(group, at_time):
+            nonlocal cum_bytes
+            group = sorted(group)
+            idx = jnp.asarray(group, jnp.int32)
+            rng_v = jax.random.fold_in(rng, version)
+            (wires, stats, ef_new, opt_new, losses, dnm_new, dnef_new,
+             _h, _hs) = self._dispatch_fn(
+                state, self._batches(version), idx, rng_v,
+                jnp.asarray(version, jnp.int32))
+
+            def row(tree, pos):
+                return (None if tree is None
+                        else jax.tree.map(lambda x: x[pos], tree))
+
+            for pos, i in enumerate(group):
+                inflight[i] = _InFlight(
+                    arrival=at_time + float(durations[i]),
+                    version=version,
+                    wire=wires[pos], stat=stats[pos],
+                    loss=float(losses[pos]),
+                    ef=row(ef_new, pos), opt=row(opt_new, pos),
+                    dnm=row(dnm_new, pos), dnef=row(dnef_new, pos))
+                cum_bytes += down_bytes
+
+        # initial cohort: the participation sample of version 0; the
+        # same clients stay in flight for the whole run (delivering
+        # re-dispatches them), so `participation` is the concurrency
+        part0 = np.asarray(self.engine.round_participants(
+            jax.random.fold_in(rng, 0)))
+        dispatch([int(i) for i in part0], now)
+
+        def stack(rows):
+            if rows[0] is None:
+                return None
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+        while version < num_events and inflight:
+            i = min(inflight, key=lambda j: (inflight[j].arrival, j))
+            rec = inflight.pop(i)
+            now = rec.arrival
+            cum_bytes += up_bytes
+            buffer.append((i, rec))
+            if len(buffer) < self.buffer_size:
+                continue
+            ids = [i for i, _ in buffer]
+            recs = [r for _, r in buffer]
+            stale = [version - r.version for r in recs]
+            weights = [self._weight(t) for t in stale]
+            state = self._apply_fn(
+                state,
+                jnp.stack([r.wire for r in recs]),
+                jnp.stack([r.stat for r in recs]),
+                jnp.asarray(weights, jnp.float32),
+                jnp.asarray(ids, jnp.int32),
+                stack([r.ef for r in recs]),
+                stack([r.opt for r in recs]),
+                stack([r.dnm for r in recs]),
+                stack([r.dnef for r in recs]))
+            version += 1
+            final = version == num_events
+            ev = SchedEvent(
+                time=now, version=version, kind="aggregate",
+                clients=tuple(ids), staleness=tuple(stale),
+                weights=tuple(weights),
+                loss=float(np.mean([r.loss for r in recs])),
+                cum_bytes=cum_bytes,
+                eval_loss=self._maybe_eval(state, version, final))
+            trace.events.append(ev)
+            buffer = []
+            if self._hit_target(ev, target_loss, stop_at_target):
+                break
+            if not final:
+                dispatch(ids, now)        # delivered clients go again
+        return state, trace
+
+    @staticmethod
+    def _hit_target(ev: SchedEvent, target_loss, stop_at_target) -> bool:
+        if target_loss is None or not stop_at_target:
+            return False
+        loss = ev.eval_loss if ev.eval_loss is not None else ev.loss
+        return loss <= target_loss

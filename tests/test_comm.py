@@ -163,27 +163,58 @@ def test_participation_mask_exact_count_and_seeded():
 
 
 # --------------------------------------------------------- byte accounting
+HDR = cflat.HEADER_BYTES
+
+
 def test_wire_bytes_formulas():
     n = 100_000
     cc = _cfg()
-    assert accounting.wire_bytes(cc, n) == 4 * n
+    # every payload carries the versioned 24-byte header
+    assert accounting.wire_bytes(cc, n) == HDR + 4 * n
     groups = -(-n // cc.quant_block)
     assert accounting.wire_bytes(_cfg(compressor="int8"), n) == \
-        (8 * n + 32 * groups + 7) // 8
+        HDR + (8 * n + 32 * groups + 7) // 8
     assert accounting.wire_bytes(_cfg(compressor="int4"), n) == \
-        (4 * n + 32 * groups + 7) // 8
+        HDR + (4 * n + 32 * groups + 7) // 8
     k = accounting.topk_k(_cfg(compressor="topk"), n)
-    assert accounting.wire_bytes(_cfg(compressor="topk"), n) == 8 * k
+    assert accounting.wire_bytes(_cfg(compressor="topk"), n) == \
+        HDR + 8 * k
     assert accounting.wire_bytes(_cfg(compressor="signsgd"), n) == \
-        (n + 32 + 7) // 8
+        HDR + (n + 32 + 7) // 8
     # int8 uplink reduction vs fp32 identity (acceptance: >= 3.5x)
     ratio = accounting.wire_bytes(cc, n) / accounting.wire_bytes(
         _cfg(compressor="int8"), n)
     assert ratio >= 3.5
     rb = accounting.round_bytes(_cfg(participation=0.5), n, 8)
     assert rb["participants"] == 4
-    assert rb["uplink_bytes"] == 4 * 4 * n
-    assert rb["downlink_bytes"] == 4 * 4 * n
+    assert rb["uplink_bytes"] == 4 * (HDR + 4 * n)
+    assert rb["downlink_bytes"] == 4 * (HDR + 4 * n)
+
+
+def test_per_stream_quant_block_prices_groups():
+    """The hessian/downlink streams may pack with their own (coarser)
+    quant_block: fewer scale groups on the wire, priced exactly."""
+    n = 100_000
+    comm = _cfg(compressor="int8", downlink_compressor="int8",
+                hessian_compressor="int8",
+                downlink_quant_block=2048, hessian_quant_block=4096)
+    assert comm.stream("uplink").quant_block == 1024
+    assert comm.stream("downlink").quant_block == 2048
+    assert comm.stream("hessian").quant_block == 4096
+
+    def int8_bytes(qb):
+        return HDR + (8 * n + 32 * (-(-n // qb)) + 7) // 8
+
+    assert accounting.stream_bytes(comm, "uplink", n) == int8_bytes(1024)
+    assert accounting.stream_bytes(comm, "downlink", n) == int8_bytes(2048)
+    assert accounting.stream_bytes(comm, "hessian", n) == int8_bytes(4096)
+    # per-stream topk_ratio override reaches topk_k the same way
+    comm_tk = _cfg(compressor="topk", topk_ratio=0.01,
+                   downlink_compressor="topk", downlink_topk_ratio=0.05)
+    assert accounting.topk_k(comm_tk.stream("downlink"), n) == \
+        accounting.topk_k(_cfg(compressor="topk", topk_ratio=0.05), n)
+    assert accounting.topk_k(comm_tk.stream("uplink"), n) == \
+        accounting.topk_k(comm_tk, n)
 
 
 # ------------------------------------------------------- engine integration
@@ -223,9 +254,9 @@ def test_identity_full_participation_bit_exact(fed_setup, strategy,
     for a, b in zip(jax.tree.leaves(s0["params"]),
                     jax.tree.leaves(s1["params"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # identity uplink: C clients x 4 bytes x n params
+    # identity uplink: C clients x (header + 4 bytes x n params)
     n = sum(p.size for p in jax.tree.leaves(s0["params"]))
-    assert float(m0["uplink_bytes"]) == 4 * 4 * n
+    assert float(m0["uplink_bytes"]) == 4 * (cflat.HEADER_BYTES + 4 * n)
 
 
 def test_strategies_agree_under_compression(fed_setup):
@@ -542,7 +573,8 @@ def test_round_bytes_multi_stream():
     legacy = accounting.round_bytes(CommConfig(participation=0.5), n, C)
     assert legacy["hessian_uplink_bytes"] == 0
     assert legacy["hessian_downlink_bytes"] == 0
-    assert legacy["uplink_bytes"] == legacy["downlink_bytes"] == 4 * 4 * n
+    assert legacy["uplink_bytes"] == legacy["downlink_bytes"] \
+        == 4 * (HDR + 4 * n)
 
 
 def test_bidirectional_total_reduction_at_least_3x():
@@ -555,3 +587,161 @@ def test_bidirectional_total_reduction_at_least_3x():
         CommConfig(compressor="int4", downlink_compressor="int8",
                    hessian_compressor="int4"), n, C)["total_bytes"]
     assert base / bidir >= 3.0
+
+
+# ------------------------------------------- per-stream packing geometry
+def test_engine_per_stream_geometry_trains(fed_setup):
+    """Downlink/hessian streams packing with their own quant_block
+    (different rows x cols than the uplink) still train finite, with
+    replicas allocated in the downlink's own layout."""
+    task, batches = fed_setup
+    comm = CommConfig(compressor="int8", downlink_compressor="int8",
+                      hessian_compressor="int4", quant_block=256,
+                      downlink_quant_block=512, hessian_quant_block=1024)
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                    lr=0.01, tau=2, comm=comm)
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    params = state["params"]
+    spec_dn = cflat.flat_spec(params, cols=512)
+    assert state[cdown.MODEL_KEY].shape[1:] == (spec_dn.rows, 512)
+    rt = eng.comm_runtime(params)
+    assert (rt.spec.cols, rt.spec_dn.cols, rt.spec_h.cols) == \
+        (256, 512, 1024)
+    new, metrics = jax.jit(eng.round)(state, batches,
+                                      jax.random.PRNGKey(100))
+    assert np.isfinite(float(metrics["loss"]))
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(new["params"]))
+
+
+def test_repack_relays_geometry():
+    tree, _, _ = _spec_and_buf(jax.random.PRNGKey(30))
+    a = cflat.flat_spec(tree, cols=128)
+    b = cflat.flat_spec(tree, cols=512)
+    buf = cflat.pack(tree, a)
+    out = cflat.repack(buf, a, b)
+    assert out.shape == (b.rows, b.cols)
+    np.testing.assert_array_equal(np.asarray(cflat.pack(tree, b)),
+                                  np.asarray(out))
+    with pytest.raises(ValueError):
+        cflat.repack(buf, a, cflat.flat_spec({"x": jnp.zeros(7)}, cols=4))
+
+
+# ------------------------------------------------- wire headers (v1 spec)
+def test_header_pack_unpack_roundtrip():
+    h = cflat.Header(compressor="int4", total=3000, quant_block=128,
+                     aux=0)
+    raw = h.pack()
+    assert len(raw) == cflat.HEADER_BYTES
+    assert raw[:4] == cflat.WIRE_MAGIC
+    assert cflat.Header.unpack(raw) == h
+    assert cflat.Header.from_dict(h.to_dict()) == h
+
+
+def test_header_rejects_bad_magic_and_version():
+    h = cflat.Header(compressor="int8", total=10, quant_block=4)
+    raw = h.pack()
+    with pytest.raises(ValueError, match="magic"):
+        cflat.Header.unpack(b"XXXX" + raw[4:])
+    future = dataclasses.replace(h, version=cflat.WIRE_VERSION + 1)
+    with pytest.raises(ValueError, match="version"):
+        cflat.Header.unpack(future.pack())
+    with pytest.raises(ValueError, match="too short"):
+        cflat.Header.unpack(raw[:10])
+
+
+@pytest.mark.parametrize("name", ["identity", "int8", "int4", "topk",
+                                  "signsgd"])
+def test_serialize_starts_with_header(name):
+    _, spec, flat = _spec_and_buf(jax.random.PRNGKey(31))
+    comp = make_compressor(_cfg(compressor=name, topk_ratio=0.02,
+                                quant_block=128), spec)
+    raw = comp.serialize(comp.encode(jax.random.PRNGKey(32), flat))
+    h = cflat.Header.unpack(raw)
+    assert h.compressor == name
+    assert h.total == spec.total and h.quant_block == spec.cols
+    if name == "topk":
+        assert h.aux == comp.k
+    assert len(raw) == accounting.wire_bytes(
+        _cfg(compressor=name, topk_ratio=0.02, quant_block=128),
+        spec.total)
+
+
+def test_check_headers_rejects_mismatch(fed_setup):
+    """Restoring comm/EF state under a changed comm config fails with a
+    clear error naming the stream and field."""
+    task, _ = fed_setup
+    def headers(**kw):
+        fed = FedConfig(num_clients=4, comm=CommConfig(**kw))
+        eng = FedEngine(task, fed)
+        state = eng.init(jax.random.PRNGKey(0))
+        return eng.wire_headers(state["params"])
+    saved = headers(compressor="int8", downlink_compressor="int8")
+    cflat.check_headers(saved, saved)         # identical: fine
+    with pytest.raises(ValueError, match="uplink.*quant_block"):
+        cflat.check_headers(saved, headers(compressor="int8",
+                                           downlink_compressor="int8",
+                                           quant_block=512))
+    with pytest.raises(ValueError, match="compressor"):
+        cflat.check_headers(saved, headers(compressor="int4",
+                                           downlink_compressor="int8"))
+    with pytest.raises(ValueError, match="downlink"):
+        cflat.check_headers(saved, headers(compressor="int8"))
+    with pytest.raises(ValueError, match="hessian"):
+        cflat.check_headers(saved, headers(compressor="int8",
+                                           downlink_compressor="int8",
+                                           hessian_compressor="int4"))
+
+
+def test_check_headers_rejects_headerless_manifest():
+    with pytest.raises(ValueError, match="predates"):
+        cflat.check_headers({}, {"uplink": {"version": 1}})
+
+
+def test_restore_params_rebuilds_wire_state(fed_setup):
+    """Restoring params must re-sync the downlink replicas to the
+    restored model and zero the EF residuals — stale wire-layout rows
+    referencing the discarded init would corrupt the delta coding."""
+    task, batches = fed_setup
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fedavg",
+                    lr=0.05,
+                    comm=CommConfig(compressor="topk", topk_ratio=0.05,
+                                    downlink_compressor="int8"))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    # train a round so EF residuals and replicas move off their init
+    state, _ = jax.jit(eng.round)(state, batches, jax.random.PRNGKey(9))
+    restored_params = jax.tree.map(lambda x: x + 1.0, state["params"])
+    new = eng.restore_params(state, restored_params)
+    spec_dn = cflat.flat_spec(restored_params,
+                              cols=fed.comm.quant_block)
+    packed = np.asarray(cflat.pack(restored_params, spec_dn))
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(new[cdown.MODEL_KEY][i]), packed)
+    assert float(np.abs(np.asarray(new["comm_ef"])).sum()) == 0.0
+    for a, b in zip(jax.tree.leaves(new["params"]),
+                    jax.tree.leaves(restored_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_wire_headers_survive_ckpt_manifest(fed_setup, tmp_path):
+    """End to end: headers stored in the checkpoint manifest round-trip
+    through JSON and validate (or reject) on restore."""
+    from repro.checkpoint import ckpt
+    task, _ = fed_setup
+    fed = FedConfig(num_clients=4, comm=CommConfig(compressor="topk",
+                                                   topk_ratio=0.05))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(0))
+    wire = eng.wire_headers(state["params"])
+    ckpt.save(str(tmp_path), state["params"], step=3,
+              extra={"wire": wire})
+    saved = ckpt.load_manifest(str(tmp_path))["extra"]["wire"]
+    cflat.check_headers(saved, wire)
+    fed2 = FedConfig(num_clients=4, comm=CommConfig(compressor="topk",
+                                                    topk_ratio=0.10))
+    eng2 = FedEngine(task, fed2)
+    with pytest.raises(ValueError, match="aux"):
+        cflat.check_headers(saved, eng2.wire_headers(state["params"]))

@@ -1,0 +1,243 @@
+"""repro.sched tests: latency-model determinism, sync delegation,
+semisync degeneracy (bit-identical to the synchronous comm path),
+virtual-clock determinism, async staleness semantics, and the fused
+staleness-weighted accumulate kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CommConfig, FedConfig, SchedConfig
+from repro.core.fed import FedEngine
+from repro.data import synthetic as syn
+from repro.models.small import MLPTask
+from repro.sched import (VirtualScheduler, client_multipliers,
+                         dispatch_seconds)
+
+
+# -------------------------------------------------------- latency model
+def test_latency_multipliers_deterministic_and_profiled():
+    s = SchedConfig(latency_profile="straggler", straggler_frac=0.25,
+                    straggler_slowdown=10.0, seed=3)
+    m1 = client_multipliers(s, 8)
+    m2 = client_multipliers(s, 8)
+    np.testing.assert_array_equal(m1, m2)
+    assert int(np.sum(m1 == 10.0)) == 2 and int(np.sum(m1 == 1.0)) == 6
+    m3 = client_multipliers(dataclasses.replace(s, seed=4), 8)
+    assert not np.array_equal(m1, m3)
+    uni = client_multipliers(SchedConfig(), 8)
+    np.testing.assert_array_equal(uni, np.ones(8))
+    logn = client_multipliers(
+        SchedConfig(latency_profile="lognormal", seed=1), 64)
+    assert logn.std() > 0
+    with pytest.raises(ValueError):
+        client_multipliers(SchedConfig(latency_profile="bogus"), 4)
+
+
+def test_dispatch_seconds_charges_compression():
+    """Compressed uplinks shorten the simulated round, not just the
+    reported bytes."""
+    fed_id = FedConfig(num_clients=4, local_iters=2)
+    fed_int8 = dataclasses.replace(fed_id,
+                                   comm=CommConfig(compressor="int8"))
+    t_id = dispatch_seconds(fed_id, 100_000, 4)
+    t_int8 = dispatch_seconds(fed_int8, 100_000, 4)
+    assert np.all(t_int8 < t_id)
+
+
+# ------------------------------------------------------ engine fixtures
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    x, y = syn.make_image_data(key, 1024, "mnist", noise=1.0)
+    part = syn.dirichlet_partition(jax.random.PRNGKey(1), y, 4, alpha=0.5)
+    tr, _ = syn.train_test_split(part)
+    task = MLPTask(hidden=32)
+
+    def batch_fn(v):
+        return syn.client_batches(jax.random.fold_in(key, 100 + v),
+                                  x, y, tr, 32)
+
+    return task, batch_fn
+
+
+def _fed(**kw):
+    base = dict(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                lr=0.01, tau=2)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+RUN_RNG = jax.random.PRNGKey(7)
+
+
+def _run_sched(task, fed, batch_fn, events, seed=2):
+    eng = FedEngine(task, fed)
+    sched = VirtualScheduler(eng, batch_fn)
+    state = eng.init(jax.random.PRNGKey(seed))
+    return sched.run(state, events, RUN_RNG)
+
+
+# ------------------------------------------------------- sync delegation
+def test_sync_discipline_bit_identical_to_engine(setup):
+    """--schedule sync is the existing engine, bitwise: the scheduler
+    delegates every event to FedEngine.round verbatim."""
+    task, batch_fn = setup
+    fed = _fed(comm=CommConfig(compressor="int8"))
+    eng = FedEngine(task, fed)
+    state = eng.init(jax.random.PRNGKey(2))
+    rf = jax.jit(eng.round)
+    for v in range(3):
+        state, _ = rf(state, batch_fn(v), jax.random.fold_in(RUN_RNG, v))
+    s_sched, trace = _run_sched(task, fed, batch_fn, 3)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(s_sched)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [e.version for e in trace.events] == [1, 2, 3]
+    # uniform latencies: every round costs the same virtual time
+    dts = np.diff([0.0] + [e.time for e in trace.events])
+    np.testing.assert_allclose(dts, dts[0])
+
+
+# ------------------------------------------------- semisync degeneracy
+@pytest.mark.parametrize("comm", [
+    CommConfig(compressor="int8"),
+    CommConfig(compressor="int8", downlink_compressor="int8"),
+    CommConfig(compressor="topk", topk_ratio=0.05),
+], ids=["uplink-int8", "bidir-int8", "topk-ef"])
+def test_semisync_full_buffer_uniform_is_sync(setup, comm):
+    """Degeneracy acceptance: semisync with buffer_size == num_clients
+    and uniform latencies is BIT-IDENTICAL to the synchronous comm
+    path — state dict equal leaf-for-leaf after 3 aggregations."""
+    task, batch_fn = setup
+    fed_sync = _fed(comm=comm)
+    fed_semi = dataclasses.replace(
+        fed_sync, sched=SchedConfig(discipline="semisync", buffer_size=4))
+    s_sync, tr_sync = _run_sched(task, fed_sync, batch_fn, 3)
+    s_semi, tr_semi = _run_sched(task, fed_semi, batch_fn, 3)
+    assert sorted(s_sync.keys()) == sorted(s_semi.keys())
+    for a, b in zip(jax.tree.leaves(s_sync), jax.tree.leaves(s_semi)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # same virtual cost and same bytes on the wire, event for event
+    assert [e.time for e in tr_sync.events] == \
+        [e.time for e in tr_semi.events]
+    assert [e.cum_bytes for e in tr_sync.events] == \
+        [e.cum_bytes for e in tr_semi.events]
+    assert all(e.staleness == (0,) * 4 for e in tr_semi.events)
+
+
+# --------------------------------------------- virtual-clock determinism
+def test_virtual_clock_deterministic(setup):
+    """Two runs under one seed produce the same event log, tick for
+    tick (times, arrival order, staleness, weights, bytes)."""
+    task, batch_fn = setup
+    fed = _fed(comm=CommConfig(compressor="int8"),
+               sched=SchedConfig(discipline="semisync", buffer_size=2,
+                                 latency_profile="lognormal", seed=5))
+    _, t1 = _run_sched(task, fed, batch_fn, 4)
+    _, t2 = _run_sched(task, fed, batch_fn, 4)
+    assert t1.events == t2.events
+    assert all(b.time >= a.time
+               for a, b in zip(t1.events, t1.events[1:]))
+    # a different latency seed reshuffles the arrival order/times
+    fed3 = dataclasses.replace(
+        fed, sched=dataclasses.replace(fed.sched, seed=6))
+    _, t3 = _run_sched(task, fed3, batch_fn, 4)
+    assert [e.time for e in t3.events] != [e.time for e in t1.events]
+
+
+# ------------------------------------------------------- semisync rounds
+def test_semisync_straggler_faster_and_stale(setup):
+    """Under a straggler profile the buffered rounds exclude the slow
+    client early (its delta arrives late, stale); virtual time per
+    aggregation is far below sync's straggler-dominated rounds."""
+    task, batch_fn = setup
+    prof = dict(latency_profile="straggler", straggler_frac=0.25,
+                straggler_slowdown=10.0)
+    fed_sync = _fed(comm=CommConfig(compressor="int8"),
+                    sched=SchedConfig(**prof))
+    fed_semi = dataclasses.replace(
+        fed_sync, sched=SchedConfig(discipline="semisync",
+                                    buffer_size=2, **prof))
+    _, tr_sync = _run_sched(task, fed_sync, batch_fn, 3)
+    s_semi, tr_semi = _run_sched(task, fed_semi, batch_fn, 3)
+    assert tr_semi.final_time < tr_sync.final_time
+    slow = int(np.argmax(client_multipliers(fed_semi.sched, 4)))
+    assert all(slow not in e.clients for e in tr_semi.events[:2])
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(s_semi["params"]))
+
+
+def test_semisync_buffer_validation(setup):
+    task, batch_fn = setup
+    fed = _fed(sched=SchedConfig(discipline="semisync", buffer_size=9))
+    with pytest.raises(ValueError):
+        VirtualScheduler(FedEngine(task, fed), batch_fn)
+    fed = _fed(sched=SchedConfig(discipline="nowait"))
+    with pytest.raises(ValueError):
+        VirtualScheduler(FedEngine(task, fed), batch_fn)
+    fed = _fed(comm=CommConfig(hessian_compressor="int4"),
+               sched=SchedConfig(discipline="async"))
+    with pytest.raises(ValueError):
+        VirtualScheduler(FedEngine(task, fed), batch_fn)
+
+
+# ---------------------------------------------------------------- async
+def test_async_staleness_weights_and_versions(setup):
+    """Async applies one arrival per event; staleness grows with the
+    model versions applied since dispatch and the weight follows
+    (1+tau)^-p exactly."""
+    task, batch_fn = setup
+    fed = _fed(comm=CommConfig(compressor="int8"),
+               sched=SchedConfig(discipline="async", staleness_power=0.5,
+                                 latency_profile="straggler",
+                                 straggler_frac=0.25,
+                                 straggler_slowdown=3.0))
+    s, trace = _run_sched(task, fed, batch_fn, 8)
+    assert [e.version for e in trace.events] == list(range(1, 9))
+    for e in trace.events:
+        assert len(e.clients) == 1
+        tau = e.staleness[0]
+        assert e.weights[0] == pytest.approx((1.0 + tau) ** -0.5)
+    # the straggler eventually delivers a genuinely stale update
+    assert max(e.staleness[0] for e in trace.events) >= 1
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(s["params"]))
+
+
+def test_async_pallas_matches_reference(setup):
+    """The fused staleness-accumulate kernel path produces the same
+    schedule as the pure-JAX aggregation (allclose; same noise)."""
+    task, batch_fn = setup
+    base = _fed(comm=CommConfig(compressor="int8"),
+                sched=SchedConfig(discipline="async",
+                                  latency_profile="lognormal", seed=3))
+    s_ref, t_ref = _run_sched(task, base, batch_fn, 5)
+    fed_pal = dataclasses.replace(
+        base, comm=dataclasses.replace(base.comm, use_pallas=True))
+    s_pal, t_pal = _run_sched(task, fed_pal, batch_fn, 5)
+    assert [e.time for e in t_ref.events] == [e.time for e in t_pal.events]
+    for a, b in zip(jax.tree.leaves(s_ref["params"]),
+                    jax.tree.leaves(s_pal["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------- accumulate kernel
+def test_stale_accum_kernel_matches_ref():
+    from repro.kernels.ref import stale_accum_ref
+    from repro.kernels.stale_accum import stale_accum_flat
+    key = jax.random.PRNGKey(0)
+    wires = jax.random.normal(key, (5, 300, 130))
+    weights = jnp.asarray([1.0, 0.5, 0.25, 1.0, 0.7])
+    for inv in (1.0, float(1.0 / jnp.sum(weights))):
+        a = stale_accum_flat(wires, weights, inv, interpret=True)
+        b = stale_accum_ref(wires, weights, inv)
+        # sequential in-VMEM accumulation vs jnp.sum's pairwise tree:
+        # same math, different fp summation order
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    one = stale_accum_flat(wires[:1], weights[:1], 1.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(wires[0]),
+                               rtol=1e-6, atol=1e-7)

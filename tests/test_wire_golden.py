@@ -41,7 +41,10 @@ def _cases():
     Every compressor is pinned on the uplink; the downlink and hessian
     streams are pinned through their own config fields to prove the
     per-stream resolution (`CommConfig.stream`) reaches the same
-    layouts.  The hessian input is squared — curvature is nonnegative.
+    layouts — including the per-stream packing-geometry overrides
+    (`*-coarse` cases: the stream packs with its own quant_block /
+    topk_ratio).  The hessian input is squared — curvature is
+    nonnegative.
     """
     cases = []
     for name in ("identity", "int8", "int4", "topk", "signsgd"):
@@ -55,6 +58,10 @@ def _cases():
     cases.append(("downlink/topk", "downlink",
                   CommConfig(downlink_compressor="topk", topk_ratio=0.02,
                              quant_block=QUANT_BLOCK), lambda x: x))
+    cases.append(("downlink/topk-coarse", "downlink",
+                  CommConfig(downlink_compressor="topk", topk_ratio=0.02,
+                             downlink_topk_ratio=0.05,
+                             quant_block=QUANT_BLOCK), lambda x: x))
     cases.append(("hessian/int4", "hessian",
                   CommConfig(hessian_compressor="int4",
                              quant_block=QUANT_BLOCK),
@@ -63,23 +70,33 @@ def _cases():
                   CommConfig(hessian_compressor="int8",
                              quant_block=QUANT_BLOCK),
                   lambda x: x * x))
+    cases.append(("hessian/int4-coarse", "hessian",
+                  CommConfig(hessian_compressor="int4",
+                             quant_block=QUANT_BLOCK,
+                             hessian_quant_block=4 * QUANT_BLOCK),
+                  lambda x: x * x))
     return cases
 
 
 def _payload_record(stream, comm, transform):
     tree = _input_tree()
-    spec = cflat.flat_spec(tree, cols=comm.quant_block)
+    view = comm.stream(stream)
+    # each stream packs with its OWN quant_block (geometry overrides)
+    spec = cflat.flat_spec(tree, cols=view.quant_block)
     flat = transform(cflat.pack(tree, spec))
     comp = make_stream_compressor(comm, stream, spec)
     raw = comp.serialize(comp.encode(jax.random.PRNGKey(ENCODE_KEY), flat))
+    header = cflat.Header.unpack(raw)
+    assert header == comp.header()
     return {
         "stream": stream,
-        "compressor": comm.stream(stream).compressor,
+        "compressor": view.compressor,
         "total": spec.total,
-        "quant_block": comm.quant_block,
+        "quant_block": view.quant_block,
         "bytes": len(raw),
         "sha256": hashlib.sha256(raw).hexdigest(),
-        "head_hex": raw[:24].hex(),
+        "header_hex": raw[:cflat.HEADER_BYTES].hex(),
+        "head_hex": raw[cflat.HEADER_BYTES:cflat.HEADER_BYTES + 24].hex(),
     }
 
 

@@ -37,7 +37,8 @@ CONFIG_SOURCE = ROOT / "src" / "repro" / "configs" / "base.py"
 
 PATH_RE = re.compile(r"[\w./-]+/[\w.-]+\.(?:py|md|json|yml|ini)\b")
 MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
-FIELD_RE = re.compile(r"\b(CommConfig|FedConfig|ModelConfig)\.(\w+)")
+FIELD_RE = re.compile(
+    r"\b(CommConfig|FedConfig|ModelConfig|SchedConfig)\.(\w+)")
 MAKE_RE = re.compile(r"\bmake ([\w-]+)")
 FLAG_RE = re.compile(r"(?<!-)--([\w-]+)")
 
