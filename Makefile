@@ -3,7 +3,7 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke example-comm docs-check
+.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check
 
 test-fast:
 	$(PY) -m pytest -q
@@ -29,6 +29,13 @@ bench-comm:
 # clock, tiny budgets (same code path as the full `--only sched` run)
 bench-sched-smoke:
 	$(PY) -m benchmarks.run --only sched --smoke --out ""
+
+# CI gate on the flat-resident round engine: recount the
+# layout-conversion ops in the jitted round jaxpr (no timing, no file
+# write) and FAIL if any gated regime regressed vs the committed
+# trajectory in BENCH_engine.json
+bench-engine-smoke:
+	$(PY) -m benchmarks.run --only engine --smoke --out ""
 
 example-comm:
 	$(PY) examples/comm_compression.py

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows. The paper's quantities
 from __future__ import annotations
 
 import argparse
+import copy
+import dataclasses
 import json
 import os
 import time
@@ -19,6 +21,11 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.configs.base import CommConfig, SchedConfig
 from repro.metrics import energy
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: committed perf trajectory of the engine benchmark (baseline = the
+#: pre-flat-resident tree engine; current = this checkout)
+BENCH_ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 
 
 def _row(name: str, us: float, derived: str):
@@ -248,6 +255,153 @@ def fig_sched(paper_scale: bool, out: dict, smoke: bool = False):
         }
 
 
+# ----------------------------------------------------- engine micro-bench
+#: jaxpr primitives that implement layout conversion between the pytree
+#: and the packed (rows, cols) wire buffer: pack = concatenate (+pad),
+#: unpack = slice-of-flat.  dynamic_slice covers scan-carried variants.
+LAYOUT_PRIMS = frozenset({"concatenate", "slice", "dynamic_slice", "pad"})
+
+
+def _iter_subjaxprs(v):
+    """Yield every Jaxpr nested in an eqn param (scan/cond/pjit/...)."""
+    if hasattr(v, "eqns"):              # Jaxpr
+        yield v
+    elif hasattr(v, "jaxpr"):           # ClosedJaxpr
+        yield v.jaxpr
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _iter_subjaxprs(x)
+
+
+def _count_layout_ops(jaxpr) -> int:
+    """Static count of layout-conversion ops in a jaxpr, recursively
+    (a scan body is counted once — the static-op proxy for per-round
+    conversion traffic; methodology in benchmarks/README.md)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in LAYOUT_PRIMS:
+            n += 1
+        for v in eqn.params.values():
+            for sub in _iter_subjaxprs(v):
+                n += _count_layout_ops(sub)
+    return n
+
+
+def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
+    """Round-engine microbenchmark: per-round wall-clock (jitted,
+    block_until_ready) and the layout-conversion op count of the round
+    jaxpr, per comm regime.
+
+    The `*-pallas` regimes are the production kernel path and the
+    gated metric: the fused kernels consume the packed (rows, cols)
+    buffer, so every pytree<->flat conversion around them is pure HBM
+    churn.  Results append to the committed perf trajectory in
+    BENCH_engine.json ("baseline" = the pre-flat-resident tree engine,
+    frozen; "current" = this checkout) and the run FAILS if a gated
+    regime's op count regresses — `make bench-engine-smoke` runs the
+    same gate in CI (`--smoke`: op counts only, no timing, no file
+    write).
+    """
+    clients = 8 if paper_scale else 4
+    iters = 0 if smoke else (20 if not paper_scale else 5)
+    # (comm config, fed.use_pallas, gated): op-count acceptance applies
+    # to the kernel path; the `-ref` regime tracks the pure-JAX
+    # wall-clock alongside.
+    regimes = {
+        "direct-pallas": (CommConfig(use_pallas=True), True, True),
+        "uplink-int8-pallas": (
+            CommConfig(compressor="int8", use_pallas=True), True, True),
+        "bidir-int8-pallas": (
+            CommConfig(compressor="int8", downlink_compressor="int8",
+                       hessian_compressor="int4", use_pallas=True),
+            True, True),
+        "uplink-int8-ref": (CommConfig(compressor="int8"), False, False),
+    }
+    import jax as _jax
+    from repro.core.fed import FedEngine
+    from repro.data import synthetic as syn
+
+    key = _jax.random.PRNGKey(0)
+    x, y = syn.make_image_data(key, 2048, "mnist", noise=1.3)
+    part = syn.dirichlet_partition(_jax.random.fold_in(key, 1), y,
+                                   clients, alpha=0.5)
+    tr, _ = syn.train_test_split(part)
+    task = common.make_task("mlp")
+    batches = syn.client_batches(_jax.random.fold_in(key, 2), x, y, tr, 32)
+    rng = _jax.random.fold_in(key, 3)
+
+    results = {}
+    for name, (comm, use_pallas, gated) in regimes.items():
+        fed = common.make_fed("fed_sophia", clients=clients, local_iters=3,
+                              lr=0.02, tau=2, rounds=16, comm=comm)
+        fed = dataclasses.replace(fed, use_pallas=use_pallas)
+        engine = FedEngine(task, fed)
+        state = engine.init(_jax.random.fold_in(key, 4))
+        ops = _count_layout_ops(
+            _jax.make_jaxpr(engine.round)(state, batches, rng).jaxpr)
+        us = None
+        if iters:
+            round_fn = _jax.jit(engine.round)
+            s, m = round_fn(state, batches, rng)          # compile
+            _jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                _, m = round_fn(state, batches, rng)
+                _jax.block_until_ready(m["loss"])
+            us = (time.perf_counter() - t0) / iters * 1e6
+        results[name] = {"layout_ops": ops, "us_per_round": us,
+                         "gated": gated}
+
+    hist = {}
+    if os.path.exists(BENCH_ENGINE_JSON):
+        with open(BENCH_ENGINE_JSON) as f:
+            hist = json.load(f)
+    elif smoke:
+        # the smoke run exists to gate against the COMMITTED trajectory;
+        # without it the comparison degenerates to self-vs-self and CI
+        # would report success while gating nothing
+        raise SystemExit(
+            f"engine benchmark --smoke: {BENCH_ENGINE_JSON} is missing — "
+            f"run the full `--only engine` benchmark once and commit the "
+            f"trajectory before enabling the gate")
+    # bootstrap (first-ever full run): this run becomes the frozen
+    # baseline — deep-copied so the per-regime annotations below don't
+    # leak into the stored baseline
+    baseline = hist.get("baseline") or copy.deepcopy(results)
+    committed = hist.get("current") or baseline
+
+    regressions = []
+    for name, r in results.items():
+        base_ops = baseline.get(name, {}).get("layout_ops", r["layout_ops"])
+        gate_ops = committed.get(name, {}).get("layout_ops",
+                                               r["layout_ops"])
+        red = base_ops / r["layout_ops"] if r["layout_ops"] else float("inf")
+        _row(f"engine/mlp/{name}",
+             r["us_per_round"] if r["us_per_round"] else 0.0,
+             f"layout_ops={r['layout_ops']}"
+             f";baseline_ops={base_ops}"
+             f";reduction_x={red:.2f}")
+        r["baseline_layout_ops"] = base_ops
+        r["reduction_x"] = red
+        if r["gated"] and r["layout_ops"] > gate_ops:
+            regressions.append(
+                f"{name}: layout_ops {r['layout_ops']} > committed "
+                f"{gate_ops}")
+    out["engine"] = results
+    if regressions:
+        # do NOT persist the regressed counts: rewriting 'current'
+        # before failing would ratchet the gate down to the regressed
+        # value and the next run would pass silently
+        raise SystemExit(
+            "engine benchmark: layout-conversion op count regressed:\n  "
+            + "\n  ".join(regressions))
+    if not smoke:
+        with open(BENCH_ENGINE_JSON, "w") as f:
+            json.dump({"baseline": baseline, "current": results}, f,
+                      indent=1)
+            f.write("\n")
+
+
 # ----------------------------------------------------- kernel micro-bench
 def bench_sophia_kernel(out: dict):
     """Fused Pallas Sophia step (interpret) vs pure-JAX reference."""
@@ -282,18 +436,24 @@ ALL = {
     "table2": table2_energy,
     "comm": fig_comm_bytes,
     "sched": fig_sched,
+    "engine": fig_engine,
 }
+
+#: regimes that understand --smoke (tiny budgets / no timing, same
+#: code path)
+SMOKE_AWARE = ("sched", "engine")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="fig2|fig3|table1|table2|comm|sched|kernel|all")
+                    help="fig2|fig3|table1|table2|comm|sched|engine|"
+                         "kernel|all")
     ap.add_argument("--paper", action="store_true",
                     help="paper scale: 32 clients (slow on CPU)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized fast mode (sched regime only: tiny "
-                         "client/event counts, same code path)")
+                    help="CI-sized fast mode (sched/engine regimes: tiny "
+                         "budgets / op counts only, same code path)")
     ap.add_argument("--out", default="experiments/bench_results.json")
     args = ap.parse_args()
 
@@ -303,7 +463,7 @@ def main() -> None:
         bench_sophia_kernel(out)
     for name, fn in ALL.items():
         if args.only in (name, "all"):
-            if name == "sched":
+            if name in SMOKE_AWARE:
                 fn(args.paper, out, smoke=args.smoke)
             else:
                 fn(args.paper, out)

@@ -7,10 +7,13 @@ stream, spec)`, which resolves the per-stream compressor choice via
 ``CommConfig.stream(name)``.
 
 Each compressor is a pure function pair ``encode -> payload`` /
-``decode -> reconstruction``, plus a fused ``roundtrip`` used by the
-engine — the pure-JAX encode/decode composition by default, or the
-fused Pallas kernel from `repro.kernels.quantize` when
-``CommConfig.use_pallas`` is set.  Both paths consume the same
+``decode -> reconstruction``, plus two fused engine entry points —
+``roundtrip`` (decode(encode(x)) on an existing buffer) and
+``encode_delta`` (the whole uplink chain over wire-layout state:
+delta-code vs the received model, EF correction, round-trip, new
+residual).  Both lower to the pure-JAX composition by default, or to
+the fused Pallas kernels from `repro.kernels.quantize` when
+``CommConfig.use_pallas`` is set; both paths consume the same
 `jax.random` noise, so they agree to float rounding.  ``serialize``
 renders a payload to its canonical little-endian wire bytes (the
 normative layout in docs/wire-format.md, frozen by the golden tests).
@@ -121,6 +124,22 @@ class Compressor:
         payload = self.encode(key, flat)
         return self.decode(payload), self.stat(payload)
 
+    def encode_delta(self, key, theta, start, ef):
+        """One client's full uplink encode over wire-layout buffers:
+        delta = (theta - start) [+ ef] -> round-trip -> new residual.
+
+        The flat-resident engine's uplink entry point (`FedEngine.
+        comm_client_step`): the delta never exists as a pytree.
+        Returns ``(xhat, stat, new_ef)`` with ``new_ef=None`` when EF
+        is off; `StochasticQuant` fuses the whole chain into one
+        Pallas pass when ``use_pallas`` is set.
+        """
+        delta = theta - start
+        if ef is not None:
+            delta = delta + ef
+        xhat, stat = self.roundtrip(key, delta)
+        return xhat, stat, (None if ef is None else delta - xhat)
+
     def server_combine(self, agg, wstat):
         """Hook applied to the participation-weighted mean of decoded
         deltas (wstat = weighted mean of per-client stats)."""
@@ -179,6 +198,25 @@ class StochasticQuant(Compressor):
         xhat = quant_roundtrip_flat(flat, u, self._scales(flat),
                                     qmax=self.qmax, interpret=_INTERPRET)
         return xhat, jnp.zeros((), jnp.float32)
+
+    def encode_delta(self, key, theta, start, ef):
+        # EF off (the "auto" default for unbiased quantizers): the base
+        # delta + `roundtrip` composition is already optimal — it
+        # dispatches to the fused quant kernel under use_pallas without
+        # streaming a zeros EF buffer or materializing a second delta
+        if not self.cfg.use_pallas or ef is None:
+            return super().encode_delta(key, theta, start, ef)
+        # fused Pallas path: delta-code + EF + quant round-trip +
+        # residual in one HBM pass (the scales need one reduction
+        # over the corrected delta first) — the uplink twin of the
+        # downlink `broadcast_roundtrip_flat`
+        from repro.kernels.quantize import uplink_roundtrip_flat
+        delta = theta - start + ef
+        u = jax.random.uniform(key, delta.shape)
+        xhat, resid = uplink_roundtrip_flat(
+            theta, start, ef, u, self._scales(delta), qmax=self.qmax,
+            interpret=_INTERPRET)
+        return xhat, jnp.zeros((), jnp.float32), resid
 
 
 @dataclasses.dataclass(frozen=True)

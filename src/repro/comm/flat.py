@@ -1,18 +1,25 @@
-"""Flat wire-buffer layout shared by every comm stream.
+"""Flat wire-buffer layout shared by every comm stream — and, since
+the flat-resident engine refactor, the canonical **in-round
+representation** of all client-visible state (params, Sophia m/h,
+EF residuals, downlink replicas; docs/architecture.md "Memory
+layout").
 
-Same packed idiom as `repro.kernels.ops._pack`: every leaf of the
-pytree is flattened to fp32, concatenated, zero-padded and reshaped to
-a (rows, cols) buffer.  Rows double as the quantization scale groups,
-so one packed layout serves every compressor and the Pallas kernels
-tile it directly.  All three named streams of a round — the uplink
-model delta, the downlink broadcast delta, and the hessian-EMA — share
-the flattened coordinate order (the model and its Sophia ``h`` state
-have identical pytree structure) but may disagree on the (rows, cols)
-geometry: each stream's ``cols`` is its own ``quant_block``
-(`CommConfig.stream`), and `repack` re-lays a buffer between stream
-geometries.  Only the true ``total`` coordinates ever count as wire
-bytes (the pad tail is a simulation artifact — see
-docs/wire-format.md).
+Every leaf of the pytree is flattened to fp32, concatenated,
+zero-padded and reshaped to a (rows, cols) buffer.  Rows double as
+the quantization scale groups, so one packed layout serves every
+compressor and the Pallas kernels tile it directly.  All three named
+streams of a round — the uplink model delta, the downlink broadcast
+delta, and the hessian-EMA — share the flattened coordinate order
+(the model and its Sophia ``h`` state have identical pytree
+structure) but may disagree on the (rows, cols) geometry: each
+stream's ``cols`` is its own ``quant_block`` (`CommConfig.stream`),
+and `repack` re-lays a buffer between stream geometries.  Only the
+true ``total`` coordinates ever count as wire bytes (the pad tail is
+a simulation artifact — see docs/wire-format.md).
+
+`aval_key` fingerprints a pytree's avals so engines can memoize spec
+and compressor construction across traces (`FedEngine.comm_runtime`);
+`zeros` allocates flat state buffers without a donor pytree.
 
 This module also owns the versioned wire **header** (`Header`): the
 24-byte preamble every serialized payload carries, and the layout
@@ -170,6 +177,24 @@ def flat_spec(tree, cols: int = 1024) -> FlatSpec:
     return FlatSpec(treedef, sizes, shapes, dtypes, total, rows, cols)
 
 
+def aval_key(tree) -> Tuple:
+    """Hashable fingerprint of a pytree's structure + leaf avals.
+
+    Works on concrete arrays, tracers and ShapeDtypeStructs alike —
+    the memoization key for spec/compressor caches (specs are pure
+    static metadata, so one build serves every trace of the same
+    abstract shape)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).str)
+                           for l in leaves))
+
+
+def zeros(spec: FlatSpec, lead: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """A zeroed flat state buffer in ``spec``'s wire layout, with
+    optional leading (e.g. per-client) axes."""
+    return jnp.zeros(tuple(lead) + (spec.rows, spec.cols), jnp.float32)
+
+
 def pack(tree, spec: FlatSpec) -> jnp.ndarray:
     """pytree -> (rows, cols) fp32 wire buffer (zero pad at the tail)."""
     leaves = jax.tree_util.tree_flatten(tree)[0]
@@ -193,11 +218,15 @@ def repack(flat: jnp.ndarray, from_spec: FlatSpec,
            to_spec: FlatSpec) -> jnp.ndarray:
     """Re-lay a packed buffer from one stream's (rows, cols) geometry
     into another's (same flattened coordinates, different quant_block;
-    the pad tail is re-zeroed)."""
+    the pad tail is re-zeroed).  Matching geometries return the buffer
+    unchanged — engine state keeps its pad tail at zero invariantly, so
+    same-geometry repacks need no ops in the traced graph."""
     if from_spec.total != to_spec.total:
         raise ValueError(
             f"repack between incompatible specs: total "
             f"{from_spec.total} vs {to_spec.total}")
+    if (from_spec.rows, from_spec.cols) == (to_spec.rows, to_spec.cols):
+        return flat
     v = flat.reshape(-1)[:from_spec.total]
     return jnp.pad(v, (0, to_spec.padded - to_spec.total)).reshape(
         to_spec.rows, to_spec.cols)

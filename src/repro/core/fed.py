@@ -10,6 +10,22 @@ Two execution strategies (DESIGN.md §4):
 
 Optimizers: fed_sophia (the paper), fedavg, done, fedadam, fedyogi.
 
+Memory layout (docs/architecture.md "Memory layout"): the engine is
+**flat-resident** — the packed (rows, cols) fp32 wire buffer of
+`repro.comm.flat` is the canonical in-round representation of every
+piece of client-visible state: the round-start model, each client's
+evolving theta, the Sophia m/h EMAs (stored across rounds as
+(C, rows, cols) arrays), GNB estimates, uplink EF residuals and
+downlink replicas.  Pytrees are materialized only at the loss/grad
+boundary — one `unpack` view feeds `value_and_grad`, one `pack` lays
+the returned grads back — so the fused Pallas kernels and the wire
+compressors consume state that is *already* in their layout, the
+uplink delta is a flat subtraction, and the hessian stream reads
+``opt.h`` without conversion.  Leaf flattening order is frozen
+(`flat.FlatSpec`), which makes the flat round bit-identical to the
+historical pytree engine for fp32 models (tests/test_flat_engine.py
+pins this per config).
+
 Communication model (repro.comm): with the default CommConfig (lossless
 identity uplink/downlink, hessian stream off, full participation) the
 round aggregates client params directly — bit-identical to the original
@@ -32,8 +48,11 @@ Beyond the synchronous round, `comm_client_step` is the reusable
 per-participant core (broadcast -> local train -> uplink encode): the
 virtual-time scheduler (`repro.sched`) drives it one dispatch at a
 time for asynchronous / semi-synchronous disciplines, with
-`comm_runtime` supplying the per-stream (spec, compressor) handles and
-`wire_headers` fingerprinting the wire layouts for checkpoint restore.
+`comm_runtime` supplying the per-stream (spec, compressor) handles —
+memoized on the params' avals, so re-traces and scheduler dispatches
+reuse one construction — and `wire_headers` fingerprinting the wire
+layouts (including the flat client-state layout) for checkpoint
+restore.
 """
 from __future__ import annotations
 
@@ -51,8 +70,8 @@ from repro.configs.base import FedConfig
 from repro.core import sophia
 from repro.core.gnb import gnb_estimate
 from repro.core.schedules import lr_at_round
-from repro.utils.tree import (tree_count_params, tree_mean_axis0,
-                              tree_sq_norm, tree_sub, tree_zeros_like)
+from repro.utils.tree import (tree_count_params, tree_sq_norm,
+                              tree_zeros_like)
 
 
 #: rng salt of the per-round participation sample (shared by
@@ -62,12 +81,14 @@ PARTICIPATION_SALT = 0x9A70
 
 class CommRuntime(NamedTuple):
     """Trace-time comm-path handles: one (spec, compressor) per active
-    stream.  Per-stream packing geometry (``CommConfig.
-    downlink_quant_block`` / ``hessian_quant_block``) means the streams
-    may disagree on (rows, cols); they always share the flattened
-    ``total`` coordinate order, so `repro.comm.flat.repack` moves
-    buffers between geometries."""
-    spec: Any                      # uplink layout
+    stream.  ``spec`` (the uplink layout) doubles as the canonical
+    geometry of all flat-resident engine state.  Per-stream packing
+    geometry (``CommConfig.downlink_quant_block`` /
+    ``hessian_quant_block``) means the streams may disagree on
+    (rows, cols); they always share the flattened ``total`` coordinate
+    order, so `repro.comm.flat.repack` moves buffers between
+    geometries (a no-op in the traced graph when they agree)."""
+    spec: Any                      # uplink layout == engine state layout
     comp: Any                      # uplink compressor
     spec_dn: Any = None
     comp_dn: Any = None
@@ -102,12 +123,22 @@ class FedEngine:
         # params to it at each local step lowers to the per-step weight
         # all-gather that defines FSDP/ZeRO-3.
         self.gather_shardings = gather_shardings
+        # comm_runtime memoization: specs/compressors are pure static
+        # metadata, keyed on the params' avals (the engine's CommConfig
+        # is immutable, so it needs no key component)
+        self._rt_cache: Dict[Any, CommRuntime] = {}
 
     def _gathered(self, params):
         if self.gather_shardings is None:
             return params
         return jax.tree.map(jax.lax.with_sharding_constraint, params,
                             self.gather_shardings)
+
+    def _stateful(self) -> bool:
+        """Persistent per-client Sophia state lives in the engine state
+        dict (as (C, rows, cols) wire-layout buffers)."""
+        return (self.fed.optimizer == "fed_sophia"
+                and self.fed.persistent_client_state)
 
     def _value_and_grad(self, loss_fn, params, batch, rng=None):
         """value_and_grad with optional exact micro-batch accumulation."""
@@ -130,34 +161,45 @@ class FedEngine:
             body, init, (jnp.arange(n), mb))
         return loss, grads
 
+    def _flat_value_and_grad(self, theta, batch, spec, rng=None):
+        """The loss/grad boundary of the flat-resident engine: ONE
+        unpack materializes the pytree view for `value_and_grad`, ONE
+        pack lays the grads back into wire layout.  Also returns the
+        (gathered) pytree view so callers needing it (GNB refresh)
+        reuse the same unpack."""
+        pg = self._gathered(cflat.unpack(theta, spec))
+        loss, grads = self._value_and_grad(self.task.loss, pg, batch, rng)
+        return loss, cflat.pack(grads, spec), pg
+
     # ------------------------------------------------------------------ init
     def init(self, key) -> Dict[str, Any]:
         params = self.task.init(key)
-        state: Dict[str, Any] = {"params": params, "round": jnp.zeros((), jnp.int32)}
-        if (self.fed.optimizer == "fed_sophia"
-                and self.fed.persistent_client_state):
-            opt = sophia.init_state(params)
-            state["client_opt"] = jax.tree.map(
-                lambda x: jnp.broadcast_to(
-                    x[None], (self.fed.num_clients,) + x.shape).copy(), opt)
+        state: Dict[str, Any] = {"params": params,
+                                 "round": jnp.zeros((), jnp.int32)}
+        rt = self.comm_runtime(params)
+        C = self.fed.num_clients
+        comm = self.fed.comm
+        if self._stateful():
+            # per-client Sophia EMAs, stored directly in wire layout —
+            # the local loop and the hessian stream consume them with
+            # zero conversion
+            state["client_opt"] = sophia.SophiaState(
+                m=cflat.zeros(rt.spec, (C,)), h=cflat.zeros(rt.spec, (C,)))
         if self.fed.optimizer in ("fedadam", "fedyogi"):
             state["server_opt"] = {"m": tree_zeros_like(params),
                                    "v": tree_zeros_like(params)}
-        comm = self.fed.comm
         if wants_error_feedback(comm):
             # per-client error-feedback residual, stored in uplink
             # wire layout
-            spec = cflat.flat_spec(params, cols=comm.quant_block)
-            state["comm_ef"] = jnp.zeros(
-                (self.fed.num_clients, spec.rows, spec.cols), jnp.float32)
+            state["comm_ef"] = cflat.zeros(rt.spec, (C,))
         if comm.downlink_enabled:
             # per-client last-received model replicas (+ server-side
             # EF), stored in the downlink stream's own layout
-            spec_dn = cflat.flat_spec(
-                params, cols=comm.stream("downlink").quant_block)
             state.update(cdown.init_state(
-                comm, spec_dn, cflat.pack(params, spec_dn),
-                self.fed.num_clients))
+                comm, rt.spec_dn,
+                cflat.repack(cflat.pack(params, rt.spec), rt.spec,
+                             rt.spec_dn),
+                C))
         return state
 
     def restore_params(self, state, params) -> Dict[str, Any]:
@@ -167,14 +209,15 @@ class FedEngine:
         broadcast against the old init would be garbage) and EF
         residuals restart at zero."""
         state = {**state, "params": params}
+        rt = self.comm_runtime(params)
         comm = self.fed.comm
         if "comm_ef" in state:
             state["comm_ef"] = tree_zeros_like(state["comm_ef"])
         if comm.downlink_enabled:
-            spec_dn = cflat.flat_spec(
-                params, cols=comm.stream("downlink").quant_block)
             state.update(cdown.init_state(
-                comm, spec_dn, cflat.pack(params, spec_dn),
+                comm, rt.spec_dn,
+                cflat.repack(cflat.pack(params, rt.spec), rt.spec,
+                             rt.spec_dn),
                 self.fed.num_clients))
         return state
 
@@ -202,8 +245,14 @@ class FedEngine:
             C, self.fed.comm.num_participants(C))
 
     def comm_runtime(self, params) -> CommRuntime:
-        """Build the per-stream (spec, compressor) handles for the comm
-        path — trace-time only (specs/compressors hold no arrays)."""
+        """The per-stream (spec, compressor) handles — trace-time only
+        (specs/compressors hold no arrays), memoized on the params'
+        avals so every round trace, scheduler dispatch and init/restore
+        shares one construction instead of re-flattening the pytree."""
+        key = cflat.aval_key(params)
+        rt = self._rt_cache.get(key)
+        if rt is not None:
+            return rt
         comm = self.fed.comm
         spec = cflat.flat_spec(params, cols=comm.quant_block)
         kw: Dict[str, Any] = {}
@@ -217,23 +266,33 @@ class FedEngine:
                 params, cols=comm.stream("hessian").quant_block)
             kw.update(spec_h=s,
                       comp_h=make_stream_compressor(comm, "hessian", s))
-        return CommRuntime(spec=spec, comp=make_compressor(comm, spec),
-                           **kw)
+        rt = CommRuntime(spec=spec, comp=make_compressor(comm, spec), **kw)
+        self._rt_cache[key] = rt
+        return rt
 
     def wire_headers(self, params) -> Dict[str, Dict[str, Any]]:
-        """Versioned wire-layout headers of every active stream, as
-        plain dicts — store them in checkpoint manifests;
-        `repro.comm.flat.check_headers` rejects a restore whose
-        comm/EF state was written under a different layout."""
+        """Versioned wire-layout headers of every active stream — plus
+        the ``client_state`` layout fingerprint of the flat-resident
+        per-client optimizer state — as plain dicts.  Store them in
+        checkpoint manifests; `repro.comm.flat.check_headers` rejects a
+        restore whose comm/EF/client state was written under a
+        different layout."""
         rt = self.comm_runtime(params)
         out = {"uplink": rt.comp.header().to_dict()}
         if rt.dn_on:
             out["downlink"] = rt.comp_dn.header().to_dict()
         if rt.h_on:
             out["hessian"] = rt.comp_h.header().to_dict()
+        if self._stateful():
+            # the Sophia m/h buffers are stored in wire layout: a
+            # restore under a different packing geometry would silently
+            # re-interpret the rows
+            out["client_state"] = cflat.Header(
+                compressor="identity", total=rt.spec.total,
+                quant_block=rt.spec.cols).to_dict()
         return out
 
-    def comm_client_step(self, rt: CommRuntime, params, packed_theta,
+    def comm_client_step(self, rt: CommRuntime, theta, theta_dn,
                          round_idx, lr, opt, ef_i, dnm_i, dnef_i, batch,
                          crng):
         """One participant's comm-path step — the reusable core of
@@ -241,8 +300,15 @@ class FedEngine:
         virtual-time scheduler (`repro.sched`):
 
         downlink broadcast (replica update) -> local training from the
-        received model -> uplink delta encode/decode [-> hessian-EMA
-        encode/decode].
+        received model -> fused uplink delta encode/decode [-> hessian-
+        EMA encode/decode].
+
+        Everything stays in wire layout: ``theta`` is the packed server
+        model (canonical ``rt.spec`` geometry; ``theta_dn`` the same
+        coordinates in the downlink geometry, None when that stream is
+        off), the received replica *is* the local-training start state,
+        and the uplink delta is a flat subtraction inside
+        `Compressor.encode_delta`.
 
         Returns ``(xhat, stat, ef_new, opt_new, loss, dnm_new,
         dnef_new, h_hat, h_stat)`` with ``None`` for inactive pieces.
@@ -250,28 +316,32 @@ class FedEngine:
         if rt.dn_on:
             dnm_i, dnef_i = cdown.broadcast(
                 rt.comp_dn, jax.random.fold_in(crng, 0xD0),
-                packed_theta, dnm_i, dnef_i)
-            p_start = cflat.unpack(dnm_i, rt.spec_dn)
+                theta_dn, dnm_i, dnef_i)
+            start = cflat.repack(dnm_i, rt.spec_dn, rt.spec)
         else:
-            p_start = params
-        p_i, opt_i, loss = self._local_update(
-            p_start, opt, batch, crng, round_idx, lr)
-        delta = cflat.pack(tree_sub(p_i, p_start), rt.spec)
-        if ef_i is not None:
-            delta = delta + ef_i
-        xhat, stat = rt.comp.roundtrip(jax.random.fold_in(crng, 0xC0),
-                                       delta)
-        ef_new = None if ef_i is None else delta - xhat
+            start = theta
+        t_i, opt_i, loss = self._local_update_flat(
+            rt.spec, start, opt, batch, crng, round_idx, lr)
+        xhat, stat, ef_new = rt.comp.encode_delta(
+            jax.random.fold_in(crng, 0xC0), t_i, start, ef_i)
         h_hat = h_stat = None
         if rt.h_on:
+            # opt.h is already a wire buffer; only a geometry re-lay
+            # (if the hessian stream packs its own quant_block) stands
+            # between it and the compressor
             h_hat, h_stat = rt.comp_h.roundtrip(
                 jax.random.fold_in(crng, 0x4E),
-                cflat.pack(opt_i.h, rt.spec_h))
+                cflat.repack(opt_i.h, rt.spec, rt.spec_h))
         return (xhat, stat, ef_new, opt_i, loss,
                 dnm_i if rt.dn_on else None, dnef_i, h_hat, h_stat)
 
-    # ------------------------------------------------- local client training
-    def _local_sophia(self, params, opt, batch, round_idx, rng, lr):
+    # ------------------------------------------- local client training (flat)
+    def _local_sophia_flat(self, spec, theta, m, h, batch, round_idx, rng,
+                           lr):
+        """Flat-resident Sophia local loop: theta/m/h are (rows, cols)
+        wire buffers for the whole scan; the pytree exists only as the
+        per-iteration `value_and_grad` view (plus the GNB estimate on
+        refresh iterations, packed inside its lax.cond)."""
         fed = self.fed
         task = self.task
 
@@ -284,39 +354,53 @@ class FedEngine:
             do_h_round = (round_idx % fed.tau) == 0
             h_hat_round = jax.lax.cond(
                 do_h_round,
-                lambda: gnb_estimate(task, self._gathered(params), batch,
-                                     jax.random.fold_in(rng, 0x7FFFFFFF),
-                                     vg_fn=self._value_and_grad),
-                lambda: tree_zeros_like(params))
+                lambda: cflat.pack(gnb_estimate(
+                    task, self._gathered(cflat.unpack(theta, spec)), batch,
+                    jax.random.fold_in(rng, 0x7FFFFFFF),
+                    vg_fn=self._value_and_grad), spec),
+                lambda: cflat.zeros(spec))
 
         def step(carry, j):
-            p, st = carry
-            pg = self._gathered(p)          # FSDP: model-only view for use
-            loss, grads = self._value_and_grad(task.loss, pg, batch, None)
+            t, m_, h_ = carry
+            loss, g, pg = self._flat_value_and_grad(t, batch, spec)
             if round_mode:
                 do_h = do_h_round & (j == 0)   # EMA applied once per refresh
-                h_hat = h_hat_round
+                hh = h_hat_round
             else:
-                t = round_idx * fed.local_iters + j
-                do_h = (t % fed.tau) == 0
+                tstep = round_idx * fed.local_iters + j
+                do_h = (tstep % fed.tau) == 0
                 rng_j = jax.random.fold_in(rng, j)
-                h_hat = jax.lax.cond(
+                hh = jax.lax.cond(
                     do_h,
-                    lambda: gnb_estimate(task, pg, batch, rng_j,
-                                         vg_fn=self._value_and_grad),
-                    lambda: tree_zeros_like(p))
-            p, st = sophia.sophia_step(
-                p, grads, st, h_hat, do_h,
+                    lambda: cflat.pack(gnb_estimate(
+                        task, pg, batch, rng_j,
+                        vg_fn=self._value_and_grad), spec),
+                    lambda: cflat.zeros(spec))
+            t, m_, h_ = sophia.sophia_step_flat(
+                t, m_, h_, g, hh, do_h,
                 lr=lr, beta1=fed.beta1, beta2=fed.beta2, rho=fed.rho,
                 eps=fed.eps, weight_decay=fed.weight_decay,
                 use_pallas=fed.use_pallas)
-            return (p, st), loss
+            return (t, m_, h_), loss
 
-        (params, opt), losses = jax.lax.scan(
-            step, (params, opt), jnp.arange(fed.local_iters))
-        return params, opt, jnp.mean(losses)
+        (theta, m, h), losses = jax.lax.scan(
+            step, (theta, m, h), jnp.arange(fed.local_iters))
+        return theta, m, h, jnp.mean(losses)
+
+    def _local_sgd_flat(self, spec, theta, batch, rng, lr):
+        """Flat-resident local SGD: the update is one flat axpy."""
+        def step(t, j):
+            loss, g, _ = self._flat_value_and_grad(t, batch, spec)
+            return t - lr * g, loss
+
+        theta, losses = jax.lax.scan(step, theta,
+                                     jnp.arange(self.fed.local_iters))
+        return theta, jnp.mean(losses)
 
     def _local_sgd(self, params, batch, rng, lr):
+        """Pytree local SGD — the reference twin of `_local_sgd_flat`
+        (bit-identical per coordinate for fp32 models), kept for the
+        manual-recomputation equivalence tests."""
         fed = self.fed
         task = self.task
 
@@ -327,7 +411,8 @@ class FedEngine:
                              p, grads)
             return p, loss
 
-        params, losses = jax.lax.scan(step, params, jnp.arange(fed.local_iters))
+        params, losses = jax.lax.scan(step, params,
+                                      jnp.arange(fed.local_iters))
         return params, jnp.mean(losses)
 
     def _local_done(self, params, batch, rng, lr):
@@ -335,7 +420,9 @@ class FedEngine:
 
         Richardson requires alpha * (lmax + damping) < 2; non-IID clients
         have wildly different local curvature, so alpha is set per client
-        from a short power-iteration estimate of lmax.
+        from a short power-iteration estimate of lmax.  Inherently a
+        pytree algorithm (nested jvp over the loss), so the flat engine
+        brackets it with one unpack/pack pair per client round.
         """
         fed = self.fed
         task = self.task
@@ -378,25 +465,31 @@ class FedEngine:
         return new, loss
 
     # ------------------------------------------------- one client, dispatch
-    def _local_update(self, params, opt, batch, crng, round_idx, lr):
-        """One client's local training for the configured optimizer.
+    def _local_update_flat(self, spec, theta, opt, batch, crng, round_idx,
+                           lr):
+        """One client's local training over wire-layout state.
 
-        Returns (new_params, new_opt_or_None, mean_loss); new_opt is None
-        for optimizers without persistent per-client state.
+        theta: (rows, cols) packed start model; opt: `SophiaState` of
+        (rows, cols) buffers or None.  Returns (new_theta,
+        new_opt_or_None, mean_loss); new_opt is None for optimizers
+        without persistent per-client state.
         """
         fed = self.fed
         if fed.optimizer == "fed_sophia":
             if opt is None:   # stateless: fresh EMAs each round
-                opt = sophia.init_state(params)
-            p, o, loss = self._local_sophia(params, opt, batch, round_idx,
-                                            crng, lr)
-            return p, (o if fed.persistent_client_state else None), loss
+                opt = sophia.SophiaState(m=cflat.zeros(spec),
+                                         h=cflat.zeros(spec))
+            t, m, h, loss = self._local_sophia_flat(
+                spec, theta, opt.m, opt.h, batch, round_idx, crng, lr)
+            opt = sophia.SophiaState(m=m, h=h)
+            return t, (opt if fed.persistent_client_state else None), loss
         if fed.optimizer in ("fedavg", "fedadam", "fedyogi"):
-            p, loss = self._local_sgd(params, batch, crng, lr)
-            return p, None, loss
+            t, loss = self._local_sgd_flat(spec, theta, batch, crng, lr)
+            return t, None, loss
         if fed.optimizer == "done":
-            p, loss = self._local_done(params, batch, crng, lr)
-            return p, None, loss
+            p, loss = self._local_done(cflat.unpack(theta, spec), batch,
+                                       crng, lr)
+            return cflat.pack(p, spec), None, loss
         raise ValueError(fed.optimizer)
 
     def _apply_aggregate(self, state, agg):
@@ -414,6 +507,7 @@ class FedEngine:
         lr = lr_at_round(fed, round_idx)
         C = fed.num_clients
         S = comm.num_participants(C)
+        rt = self.comm_runtime(state["params"])
         client_rngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
             jnp.arange(C))
 
@@ -422,10 +516,10 @@ class FedEngine:
             # aggregate client params directly — bit-identical to the
             # pre-comm engine
             state, loss = self._round_direct(state, batches, client_rngs,
-                                             round_idx, lr)
+                                             round_idx, lr, rt)
         else:
             state, loss = self._round_comm(state, batches, client_rngs,
-                                           round_idx, lr, rng)
+                                           round_idx, lr, rng, rt)
 
         state = {**state, "round": round_idx + 1}
         n = tree_count_params(state["params"])
@@ -437,45 +531,47 @@ class FedEngine:
             metrics[k] = jnp.asarray(wire[k], jnp.float32)
         return state, metrics
 
-    def _round_direct(self, state, batches, client_rngs, round_idx, lr):
-        """Original aggregation: server model <- mean of client params."""
+    def _round_direct(self, state, batches, client_rngs, round_idx, lr, rt):
+        """Original aggregation: server model <- mean of client params —
+        computed entirely in wire layout (ONE pack of the server model
+        in, ONE unpack of the aggregate out)."""
         fed = self.fed
+        spec = rt.spec
         params = state["params"]
         C = fed.num_clients
-        stateful = (fed.optimizer == "fed_sophia"
-                    and fed.persistent_client_state)
+        stateful = self._stateful()
+        theta = cflat.pack(params, spec)
         opts = state.get("client_opt") if stateful else None
 
         if fed.strategy == "parallel":
             if stateful:
-                new_p, new_opt, losses = jax.vmap(
-                    lambda o, b, r: self._local_update(
-                        params, o, b, r, round_idx, lr)
+                new_t, new_opt, losses = jax.vmap(
+                    lambda o, b, r: self._local_update_flat(
+                        spec, theta, o, b, r, round_idx, lr)
                 )(opts, batches, client_rngs)
             else:
-                new_p, new_opt, losses = jax.vmap(
-                    lambda b, r: self._local_update(
-                        params, None, b, r, round_idx, lr)
+                new_t, new_opt, losses = jax.vmap(
+                    lambda b, r: self._local_update_flat(
+                        spec, theta, None, b, r, round_idx, lr)
                 )(batches, client_rngs)
-            agg = tree_mean_axis0(new_p)
+            agg_flat = jnp.mean(new_t, axis=0)
         else:
             def scan_body(acc, xs):
                 opt, batch, crng = xs
-                p_i, opt_i, loss = self._local_update(
-                    params, opt, batch, crng, round_idx, lr)
-                acc = jax.tree.map(lambda a, x: a + x / C, acc, p_i)
-                return acc, (opt_i, loss)
-            agg, (new_opt, losses) = jax.lax.scan(
-                scan_body, tree_zeros_like(params),
+                t_i, opt_i, loss = self._local_update_flat(
+                    spec, theta, opt, batch, crng, round_idx, lr)
+                return acc + t_i / C, (opt_i, loss)
+            agg_flat, (new_opt, losses) = jax.lax.scan(
+                scan_body, jnp.zeros_like(theta),
                 (opts, batches, client_rngs))
-            agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
 
-        state = self._apply_aggregate(state, agg)
+        state = self._apply_aggregate(state, cflat.unpack(agg_flat, spec))
         if stateful:
             state = {**state, "client_opt": new_opt}
         return state, jnp.mean(losses)
 
-    def _round_comm(self, state, batches, client_rngs, round_idx, lr, rng):
+    def _round_comm(self, state, batches, client_rngs, round_idx, lr, rng,
+                    rt):
         """Multi-stream delta-space round (docs/architecture.md):
 
         1. [downlink] each participant receives the compressed delta of
@@ -501,14 +597,13 @@ class FedEngine:
         params = state["params"]
         C = fed.num_clients
         S = comm.num_participants(C)
-        rt = self.comm_runtime(params)
         spec, comp = rt.spec, rt.comp
         dn_on, h_on = rt.dn_on, rt.h_on
-        packed_theta = cflat.pack(params, rt.spec_dn) if dn_on else None
+        theta = cflat.pack(params, spec)
+        theta_dn = cflat.repack(theta, spec, rt.spec_dn) if dn_on else None
         idx = participation_indices(
             jax.random.fold_in(rng, PARTICIPATION_SALT + comm.seed), C, S)
-        stateful = (fed.optimizer == "fed_sophia"
-                    and fed.persistent_client_state)
+        stateful = self._stateful()
         opts = state.get("client_opt") if stateful else None
         ef = state.get("comm_ef")
         dn_model = state.get(cdown.MODEL_KEY)
@@ -522,8 +617,8 @@ class FedEngine:
         dnm_g, dnef_g = take(dn_model), take(dn_ef)
         batches_g, rngs_g = take(batches), client_rngs[idx]
 
-        client = functools.partial(self.comm_client_step, rt, params,
-                                   packed_theta, round_idx, lr)
+        client = functools.partial(self.comm_client_step, rt, theta,
+                                   theta_dn, round_idx, lr)
 
         if fed.strategy == "parallel":
             (wires, stats, ef_new_g, opt_new_g, losses, dnm_new_g,
@@ -550,14 +645,11 @@ class FedEngine:
                     acc = {**acc, "h": acc["h"] + h_hat / S,
                            "hs": acc["hs"] + h_stat / S}
                 return acc, (ef_i_new, opt_i, loss, dnm_new, dnef_new)
-            acc0 = {"w": jnp.zeros((spec.rows, spec.cols), jnp.float32),
-                    "s": jnp.zeros((), jnp.float32)}
+            acc0 = {"w": cflat.zeros(spec), "s": jnp.zeros((), jnp.float32)}
             if dn_on:
-                acc0["dn"] = jnp.zeros(
-                    (rt.spec_dn.rows, rt.spec_dn.cols), jnp.float32)
+                acc0["dn"] = cflat.zeros(rt.spec_dn)
             if h_on:
-                acc0["h"] = jnp.zeros(
-                    (rt.spec_h.rows, rt.spec_h.cols), jnp.float32)
+                acc0["h"] = cflat.zeros(rt.spec_h)
                 acc0["hs"] = jnp.zeros((), jnp.float32)
             acc, (ef_new_g, opt_new_g, losses, dnm_new_g, dnef_new_g) = \
                 jax.lax.scan(scan_body, acc0,
@@ -574,14 +666,11 @@ class FedEngine:
             # clients trained from their OWN received replicas: the
             # aggregated model is mean_S(replica + decoded uplink delta),
             # expressed as a server-side delta vs the true model
-            corr = dn_mean - packed_theta
-            if rt.spec_dn.cols != spec.cols:
-                # downlink stream packs with its own quant_block
-                corr = cflat.repack(corr, rt.spec_dn, spec)
+            corr = cflat.repack(dn_mean - theta_dn, rt.spec_dn, spec)
             agg_flat = agg_flat + corr
-        agg_delta = cflat.unpack(agg_flat, spec)
-        agg = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
-                           params, agg_delta)
+        # the server model update is a flat axpy; the pytree appears
+        # only at the state boundary
+        agg = cflat.unpack(theta + agg_flat, spec)
         state = self._apply_aggregate(state, agg)
         if stateful:
             # scatter the participants' optimizer state rows back
@@ -593,12 +682,10 @@ class FedEngine:
                 h_down, _ = rt.comp_h.roundtrip(
                     jax.random.fold_in(rng, 0x4D),
                     rt.comp_h.server_combine(h_agg, h_wstat))
-                h_avg = cflat.unpack(h_down, rt.spec_h)
-                new_h = jax.tree.map(
-                    lambda full, v: full.at[idx].set(jnp.broadcast_to(
-                        v[None], (S,) + v.shape).astype(full.dtype)),
-                    new_opts.h, h_avg)
-                new_opts = new_opts._replace(h=new_h)
+                h_common = cflat.repack(h_down, rt.spec_h, spec)
+                new_opts = new_opts._replace(h=new_opts.h.at[idx].set(
+                    jnp.broadcast_to(h_common[None],
+                                     (S,) + h_common.shape)))
             state = {**state, "client_opt": new_opts}
         if ef is not None:
             state = {**state, "comm_ef": ef.at[idx].set(ef_new_g)}

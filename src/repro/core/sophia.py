@@ -1,7 +1,15 @@
 """The Sophia update (Liu et al. 2023) as used by Fed-Sophia (Alg. 1).
 
-Pure-JAX reference implementation; ``repro.kernels`` provides a fused
-Pallas version with identical semantics (selected via use_pallas).
+Two twins with identical per-coordinate semantics:
+
+* the pytree form (`sophia_step` and friends) — the reference the
+  paper-facing tests pin, still selectable onto the fused Pallas
+  kernel via ``use_pallas``;
+* the flat form (`sophia_step_flat`) — one packed (rows, cols) fp32
+  buffer per state stream, consumed by the flat-resident round engine
+  (`repro.core.fed`), where the kernel path needs **zero** layout
+  conversion because the engine already holds theta/m/h in the wire
+  layout (docs/architecture.md "Memory layout").
 """
 from __future__ import annotations
 
@@ -71,3 +79,29 @@ def sophia_step(params, grads, state: SophiaState, h_hat, do_h_update,
     params = apply_update(params, m, h, lr=lr, rho=rho, eps=eps,
                           weight_decay=weight_decay)
     return params, SophiaState(m=m, h=h)
+
+
+def sophia_step_flat(theta, m, h, grads, h_hat, do_h_update, *, lr, beta1,
+                     beta2, rho, eps, weight_decay,
+                     use_pallas: bool = False):
+    """`sophia_step` over packed (rows, cols) fp32 wire buffers.
+
+    Bit-identical per coordinate to the pytree form (the ops are all
+    elementwise; the zero pad tail is a fixed point, so packed state
+    stays valid wire buffers across iterations).  With ``use_pallas``
+    the buffers feed the fused kernel directly — no pack/unpack.
+    Returns ``(theta, m, h)``.
+    """
+    if use_pallas:
+        from repro.kernels import INTERPRET
+        from repro.kernels.sophia_update import sophia_update_flat
+        return sophia_update_flat(
+            theta, m, h, grads, h_hat, do_h_update, lr, beta1=beta1,
+            beta2=beta2, rho=rho, eps=eps, weight_decay=weight_decay,
+            interpret=INTERPRET)
+    m = beta1 * m + (1.0 - beta1) * grads                          # Eq. 9
+    h = jnp.where(do_h_update,
+                  beta2 * h + (1.0 - beta2) * h_hat, h)            # Eq. 10
+    theta = theta - lr * weight_decay * theta                      # line 15
+    step = clip(m / jnp.maximum(h, eps), rho)                      # Eq. 11
+    return theta - lr * step, m, h                                 # line 16

@@ -1,15 +1,18 @@
-"""jit'd pytree-level wrappers around the Pallas kernels.
+"""Pytree-level wrapper around the fused Sophia Pallas kernel.
 
-``sophia_apply_fused`` packs every floating leaf of the param pytree into
-one flat (R, C) buffer, runs the fused kernel once, and unpacks — one
-kernel launch per local iteration regardless of model structure.
+``sophia_fused_step`` packs every leaf of the param pytree into one
+flat (R, C) buffer, runs the fused kernel once, and unpacks.  It is
+the *pytree-boundary* form kept for `repro.core.sophia.sophia_step`
+(the reference twin) and its tests; the round engine itself is
+flat-resident (`repro.core.fed`) and calls
+`repro.kernels.sophia_update.sophia_update_flat` directly on wire-
+layout state — zero pack/unpack per local iteration.
+
+The dead apply-only wrapper (``sophia_apply_fused``) that allocated a
+full zeros gradient buffer to run the complete kernel was removed;
+use `repro.core.sophia.apply_update` for apply-only semantics.
 """
 from __future__ import annotations
-
-import functools
-
-import jax
-import jax.numpy as jnp
 
 from repro.comm.flat import flat_spec, pack, unpack
 from repro.kernels import INTERPRET as _INTERPRET
@@ -39,18 +42,3 @@ def sophia_fused_step(params, m, h, grads, h_hat, do_h, *, lr, beta1, beta2,
         t2, m2, h2, g2, hh2, do_h, lr, beta1=beta1, beta2=beta2,
         rho=rho, eps=eps, weight_decay=weight_decay, interpret=interpret)
     return _unpack(t2, meta), _unpack(m2, meta), _unpack(h2, meta)
-
-
-def sophia_apply_fused(params, m, h, *, lr, rho, eps, weight_decay,
-                       interpret=None):
-    """Apply-only variant used by core.sophia when the EMAs are already
-    updated (matches sophia.apply_update semantics)."""
-    if interpret is None:
-        interpret = _INTERPRET
-    (t2, m2, h2), meta = _pack([params, m, h])
-    zeros = jnp.zeros_like(t2)
-    # beta1=1, beta2=1 make the EMAs no-ops; do_h=0 keeps h unchanged.
-    t2, _, _ = sophia_update_flat(
-        t2, m2, h2, zeros, zeros, 0.0, lr, beta1=1.0, beta2=1.0,
-        rho=rho, eps=eps, weight_decay=weight_decay, interpret=interpret)
-    return _unpack(t2, meta)

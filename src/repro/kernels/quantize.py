@@ -106,6 +106,48 @@ def broadcast_roundtrip_flat(theta, ref, ef, noise, scale, *, qmax: int,
     )(theta, ref, ef, noise, scale)
 
 
+# ------------------------------------------------ fused uplink encode
+def _uplink_kernel(t_ref, s_ref, e_ref, u_ref, sc_ref, x_ref, r_ref,
+                   *, qmax):
+    """Delta-code + EF + stochastic quant round-trip + residual:
+    d = (theta_i - theta_i^rx) + ef; xhat = clip(floor(d/s + u)) * s;
+    resid' = d - xhat — the uplink twin of `_broadcast_kernel`, one
+    VMEM pass over 3 input streams instead of the subtract/add/quant
+    chain XLA would emit."""
+    sc = sc_ref[...]
+    safe = jnp.where(sc > 0, sc, 1.0)
+    d = (t_ref[...] - s_ref[...]) + e_ref[...]
+    q = jnp.clip(jnp.floor(d / safe + u_ref[...]), -qmax, qmax)
+    xhat = q * sc
+    x_ref[...] = xhat
+    r_ref[...] = d - xhat
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "interpret"))
+def uplink_roundtrip_flat(theta, start, ef, noise, scale, *, qmax: int,
+                          interpret: bool = True):
+    """Fused uplink encode over (R, C) fp32 buffers (see
+    `repro.comm.compressors.Compressor.encode_delta`).
+
+    theta: the client's locally-trained packed model; start: the packed
+    model it trained from (its received replica); ef: client-side EF
+    residual (zeros when EF is off); noise: U[0,1) of theta.shape;
+    scale: (R, 1) per-row scales of the corrected delta.  Returns
+    (decoded wire reconstruction, new EF residual).
+    """
+    R, C = theta.shape
+    grid, tile, rowcol, _ = _grid_specs(R, C)
+    return pl.pallas_call(
+        functools.partial(_uplink_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, rowcol],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((R, C), theta.dtype),
+                   jax.ShapeDtypeStruct((R, C), theta.dtype)],
+        interpret=interpret,
+    )(theta, start, ef, noise, scale)
+
+
 # --------------------------------------------------------------- sign sgd
 def _sign_kernel(x_ref, f_ref, out_ref):
     out_ref[...] = f_ref[0, 0] * jnp.sign(x_ref[...])

@@ -24,6 +24,14 @@ def quant_roundtrip_ref(x, noise, scale, *, qmax):
     return q * scale
 
 
+def uplink_roundtrip_ref(theta, start, ef, noise, scale, *, qmax):
+    """Reference for kernels.quantize.uplink_roundtrip_flat: EF-corrected
+    uplink delta, quant round-trip, new residual."""
+    d = (theta - start) + ef
+    xhat = quant_roundtrip_ref(d, noise, scale, qmax=qmax)
+    return xhat, d - xhat
+
+
 def sign_roundtrip_ref(x, scale):
     """Reference for kernels.quantize.sign_roundtrip_flat."""
     return jnp.asarray(scale, jnp.float32) * jnp.sign(x)

@@ -165,23 +165,30 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
                              fsdp_axes=daxes if seq_fed else None)
     st_sh = {"params": p_sh,
              "round": NamedSharding(mesh, P())}
+    # ALL per-client engine state lives in wire layout (C, rows, cols)
+    # — the Sophia m/h EMAs, the uplink EF residuals, the per-client
+    # downlink model replicas and the server-side downlink EF — so one
+    # sharding rule covers everything: clients over the client axes,
+    # and the cols axis over the remaining (model) axes in parallel
+    # mode — the wire-layout analogue of the old per-leaf param
+    # shardings, so the 2 x C x |theta| optimizer state is never
+    # replicated across the model axes.  cols (= quant_block, a power
+    # of two) is the divisible axis; rows = ceil(n/cols) generally is
+    # not.  Under sequential/FSDP, cols shard over the data axes
+    # instead (ZeRO-style, mirroring the params' fsdp_axes — note
+    # resolve_fed disables persistent client state for sequential, so
+    # client_opt only exists there under an explicit override).
+    maxes = tuple(n for n in mesh.axis_names if n not in daxes)
+    wire_sh = NamedSharding(
+        mesh, P(caxes, None, maxes or None) if not seq_fed
+        else P(None, None, daxes))
     if "client_opt" in state:
         from repro.core.sophia import SophiaState
-        inner = jax.tree.map(
-            lambda s: NamedSharding(mesh, P(caxes if not seq_fed else None,
-                                            *s.spec)),
-            S.param_shardings(cfg, mesh, state["params"],
-                              fsdp_axes=daxes if seq_fed else None))
-        st_sh["client_opt"] = SophiaState(m=inner, h=inner)
-    # comm-stream state all lives in wire layout (C, rows, cols): the
-    # uplink EF residuals, the per-client downlink model replicas, and
-    # the server-side downlink EF — shard the client axis alongside the
-    # batches in parallel mode
+        st_sh["client_opt"] = SophiaState(m=wire_sh, h=wire_sh)
     from repro.comm.downlink import EF_KEY, MODEL_KEY
     for k in ("comm_ef", MODEL_KEY, EF_KEY):
         if k in state:
-            st_sh[k] = NamedSharding(
-                mesh, P(caxes if not seq_fed else None, None, None))
+            st_sh[k] = wire_sh
 
     batch = _batch_struct(cfg, (C, b), seq)
     batch["labels"] = jnp.zeros((C, b, seq), jnp.int32)

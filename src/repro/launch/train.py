@@ -144,6 +144,13 @@ def main():
                      ("uplink_bytes", "downlink_bytes",
                       "hessian_uplink_bytes", "hessian_downlink_bytes",
                       "total_bytes")))
+    # the canonical flat layout every in-round state buffer lives in
+    # (docs/architecture.md "Memory layout"); its header rides along in
+    # the checkpoint manifest and is validated on --resume
+    rt = engine.comm_runtime(state["params"])
+    print(f"flat-resident state layout: {rt.spec.rows}x{rt.spec.cols} "
+          f"fp32 ({rt.spec.total:,} coords + "
+          f"{rt.spec.padded - rt.spec.total} pad)")
     def make_batches(r):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,

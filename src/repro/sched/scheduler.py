@@ -172,13 +172,16 @@ class VirtualScheduler:
     def _dispatch_impl(self, state, batches, idx, rng_v, round_idx):
         """Run the comm-path client step for the dispatch group ``idx``
         against the current server model (vmapped, same math as
-        `_round_comm`)."""
+        `_round_comm`).  The server model is packed ONCE into the
+        canonical wire layout; the per-client step is flat-resident
+        end-to-end (`FedEngine.comm_client_step`)."""
         engine = self.engine
         params = state["params"]
         rt = engine.comm_runtime(params)
         lr = lr_at_round(self.fed, round_idx)
-        packed_theta = (cflat.pack(params, rt.spec_dn)
-                        if rt.dn_on else None)
+        theta = cflat.pack(params, rt.spec)
+        theta_dn = (cflat.repack(theta, rt.spec, rt.spec_dn)
+                    if rt.dn_on else None)
 
         def take(tree):
             return (None if tree is None
@@ -193,7 +196,7 @@ class VirtualScheduler:
 
         def client(opt, ef_i, dnm_i, dnef_i, batch, crng):
             return engine.comm_client_step(
-                rt, params, packed_theta, round_idx, lr,
+                rt, theta, theta_dn, round_idx, lr,
                 opt, ef_i, dnm_i, dnef_i, batch, crng)
 
         return jax.vmap(client)(opts_g, ef_g, dnm_g, dnef_g,
@@ -226,22 +229,21 @@ class VirtualScheduler:
         if normalize:
             wstat = wstat / wsum
         agg_flat = rt.comp.server_combine(agg_flat, wstat)
+        theta = cflat.pack(params, rt.spec)
         if rt.dn_on:
             # arrivals trained from their OWN received replicas: fold
             # in each arrival's (replica - current model) reference
             # shift, weighted like its delta
-            packed_now = cflat.pack(params, rt.spec_dn)
+            packed_now = cflat.repack(theta, rt.spec, rt.spec_dn)
             dn_acc = jnp.sum(dnm_rows * weights[:, None, None], axis=0)
             if normalize:
                 corr = dn_acc / wsum - packed_now
             else:
                 corr = dn_acc - wsum * packed_now
-            if rt.spec_dn.cols != rt.spec.cols:
-                corr = cflat.repack(corr, rt.spec_dn, rt.spec)
-            agg_flat = agg_flat + corr
-        agg_delta = cflat.unpack(agg_flat, rt.spec)
-        agg = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
-                           params, agg_delta)
+            agg_flat = agg_flat + cflat.repack(corr, rt.spec_dn, rt.spec)
+        # flat axpy + ONE unpack at the state boundary (no per-leaf
+        # delta application)
+        agg = cflat.unpack(theta + agg_flat, rt.spec)
         state = engine._apply_aggregate(state, agg)
         state = {**state, "round": state["round"] + 1}
         if self._stateful and opt_rows is not None:

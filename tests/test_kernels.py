@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import sophia_apply_fused, sophia_fused_step
-from repro.kernels.ref import sophia_update_ref
+from repro.kernels.ops import sophia_fused_step
+from repro.kernels.ref import sophia_update_ref, uplink_roundtrip_ref
 from repro.kernels.sophia_update import sophia_update_flat
 
 HP = dict(beta1=0.9, beta2=0.95, rho=0.04, eps=1e-12, weight_decay=1e-4)
@@ -82,14 +82,33 @@ def test_fused_step_traced_lr_and_flag():
     np.testing.assert_allclose(h2["w"], 0.0)           # do_h=0 -> h frozen
 
 
-def test_apply_only_matches_apply_update():
-    from repro.core.sophia import apply_update
-    key = jax.random.PRNGKey(2)
-    params = {"w": _rand(key, (100, 100))}
-    m = jax.tree.map(lambda x: 0.3 * jnp.ones_like(x), params)
-    h = jax.tree.map(lambda x: 2.0 * jnp.ones_like(x), params)
-    got = sophia_apply_fused(params, m, h, lr=1e-2, rho=0.04, eps=1e-12,
-                             weight_decay=0.1)
-    want = apply_update(params, m, h, lr=1e-2, rho=0.04, eps=1e-12,
-                        weight_decay=0.1)
-    np.testing.assert_allclose(got["w"], want["w"], rtol=1e-6, atol=1e-7)
+@pytest.mark.parametrize("qmax", [127, 7])
+@pytest.mark.parametrize("with_ef", [False, True])
+def test_uplink_roundtrip_kernel_matches_ref(qmax, with_ef):
+    """Fused uplink encode (delta + EF + quant round-trip + residual)
+    == pure-jnp reference, and consistent with the unfused
+    quantize-a-precomputed-delta path."""
+    from repro.kernels.quantize import (quant_roundtrip_flat,
+                                        uplink_roundtrip_flat)
+    key = jax.random.PRNGKey(3)
+    theta = _rand(key, (300, 130))
+    start = theta + 0.05 * _rand(jax.random.fold_in(key, 1), (300, 130))
+    ef = (0.01 * _rand(jax.random.fold_in(key, 2), (300, 130))
+          if with_ef else jnp.zeros_like(theta))
+    delta = theta - start + ef
+    u = jax.random.uniform(jax.random.fold_in(key, 3), delta.shape)
+    scale = jnp.max(jnp.abs(delta), axis=1, keepdims=True) / qmax
+    xhat, resid = uplink_roundtrip_flat(theta, start, ef, u, scale,
+                                        qmax=qmax, interpret=True)
+    ref_x, ref_r = uplink_roundtrip_ref(theta, start, ef, u, scale,
+                                        qmax=qmax)
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(ref_x),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(ref_r),
+                               rtol=1e-6, atol=1e-7)
+    unfused = quant_roundtrip_flat(delta, u, scale, qmax=qmax,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(unfused),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(xhat + resid), np.asarray(delta),
+                               rtol=1e-6, atol=1e-6)

@@ -11,6 +11,9 @@ that no longer exist, so the docs cannot silently drift from the code:
 * ``--flags`` inside fenced command blocks that invoke
   ``repro.launch.train`` or ``benchmarks.run`` must appear verbatim in
   that entry point's source;
+* ``--only <regime>`` values in ``benchmarks.run`` invocations must
+  name a registered benchmark regime (the ALL dict, ``kernel`` or
+  ``all``);
 * ``CommConfig.field`` / ``FedConfig.field`` references must name real
   dataclass fields;
 * ``make target`` references must name real Makefile targets.
@@ -41,6 +44,11 @@ FIELD_RE = re.compile(
     r"\b(CommConfig|FedConfig|ModelConfig|SchedConfig)\.(\w+)")
 MAKE_RE = re.compile(r"\bmake ([\w-]+)")
 FLAG_RE = re.compile(r"(?<!-)--([\w-]+)")
+ONLY_RE = re.compile(r"--only[= ](\w+)")
+# benchmark regime registry: keys of benchmarks/run.py's ALL dict plus
+# the regimes main() special-cases
+REGIME_RE = re.compile(r"^ALL = \{(.*?)\}", re.S | re.M)
+EXTRA_REGIMES = {"kernel", "all"}
 
 
 def module_resolves(dotted: str) -> bool:
@@ -52,6 +60,14 @@ def module_resolves(dotted: str) -> bool:
         if base.with_suffix(".py").is_file() or base.is_dir():
             return True
     return False
+
+
+def bench_regimes(src: str):
+    """Valid ``--only`` values: keys of benchmarks/run.py's ALL dict
+    plus the special-cased ``kernel``/``all``."""
+    m = REGIME_RE.search(src)
+    names = set(re.findall(r'"(\w+)":', m.group(1))) if m else set()
+    return names | EXTRA_REGIMES
 
 
 def fenced_commands(text: str):
@@ -102,6 +118,12 @@ def check_file(doc: Path, make_targets, errors):
                         errors.append(
                             f"{rel}: flag `--{flag}` not defined in "
                             f"{src_path.relative_to(ROOT)}")
+                if entry == "benchmarks.run":
+                    for regime in ONLY_RE.findall(cmd):
+                        if regime not in bench_regimes(src):
+                            errors.append(
+                                f"{rel}: `--only {regime}` is not a "
+                                f"registered benchmark regime")
 
 
 def main() -> int:
