@@ -3,15 +3,21 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check
+.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check docs-gen
 
 test-fast:
 	$(PY) -m pytest -q
 
 # fail if README.md / docs/ / benchmarks/README.md reference flags,
-# modules, paths or make targets that no longer exist (stdlib-only)
+# modules, paths or make targets that no longer exist, or if the
+# generated docs/configuration.md drifted from the config dataclasses
+# (stdlib-only)
 docs-check:
 	python tools/check_docs.py
+
+# regenerate docs/configuration.md from the config dataclasses
+docs-gen:
+	python tools/gen_config_docs.py
 
 test-slow:
 	$(PY) -m pytest -q -m slow

@@ -289,33 +289,53 @@ def _count_layout_ops(jaxpr) -> int:
 
 def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     """Round-engine microbenchmark: per-round wall-clock (jitted,
-    block_until_ready) and the layout-conversion op count of the round
-    jaxpr, per comm regime.
+    block_until_ready), the layout-conversion op count of the round
+    jaxpr, and the state-residency accounting of the compiled round,
+    per comm regime.
 
     The `*-pallas` regimes are the production kernel path and the
-    gated metric: the fused kernels consume the packed (rows, cols)
+    gated set: the fused kernels consume the packed (rows, cols)
     buffer, so every pytree<->flat conversion around them is pure HBM
-    churn.  Results append to the committed perf trajectory in
-    BENCH_engine.json ("baseline" = the pre-flat-resident tree engine,
-    frozen; "current" = this checkout) and the run FAILS if a gated
-    regime's op count regresses — `make bench-engine-smoke` runs the
-    same gate in CI (`--smoke`: op counts only, no timing, no file
-    write).
+    churn.  The `packed-donated-*` regimes additionally keep
+    ``state["params"]`` packed BETWEEN rounds and donate the state to
+    the jit — gated on ``state_copy_bytes == 0`` (XLA aliases every
+    resident buffer in place; from `compiled.memory_analysis()`), and
+    the bf16 regime on ``resident_state_bytes`` ≤ 0.55x its fp32 twin
+    (`CommConfig.state_dtype`).  Results append to the committed perf
+    trajectory in BENCH_engine.json ("baseline" = the pre-flat-
+    resident tree engine, frozen; "current" = this checkout) and the
+    run FAILS if a gated regime's op count (or a residency gate)
+    regresses — `make bench-engine-smoke` runs the same gates in CI
+    (`--smoke`: op counts + residency accounting only, no timing, no
+    file write).
     """
     clients = 8 if paper_scale else 4
     iters = 0 if smoke else (20 if not paper_scale else 5)
-    # (comm config, fed.use_pallas, gated): op-count acceptance applies
-    # to the kernel path; the `-ref` regime tracks the pure-JAX
-    # wall-clock alongside.
+    # regime -> (comm config, fed.use_pallas, gated, packed, donate):
+    # op-count acceptance applies to the kernel path; the `-ref`
+    # regime tracks the pure-JAX wall-clock alongside.
     regimes = {
-        "direct-pallas": (CommConfig(use_pallas=True), True, True),
+        "direct-pallas": (CommConfig(use_pallas=True), True, True,
+                          False, False),
         "uplink-int8-pallas": (
-            CommConfig(compressor="int8", use_pallas=True), True, True),
+            CommConfig(compressor="int8", use_pallas=True), True, True,
+            False, False),
         "bidir-int8-pallas": (
             CommConfig(compressor="int8", downlink_compressor="int8",
                        hessian_compressor="int4", use_pallas=True),
+            True, True, False, False),
+        "uplink-int8-ref": (CommConfig(compressor="int8"), False, False,
+                            False, False),
+        # device-residency regimes: params packed between rounds,
+        # state donated to the jit (in-place resident buffers)
+        "packed-donated-pallas": (
+            CommConfig(use_pallas=True), True, True, True, True),
+        "packed-donated-int8-pallas": (
+            CommConfig(compressor="int8", use_pallas=True), True, True,
             True, True),
-        "uplink-int8-ref": (CommConfig(compressor="int8"), False, False),
+        "packed-donated-bf16-pallas": (
+            CommConfig(use_pallas=True, state_dtype="bfloat16"), True,
+            True, True, True),
     }
     import jax as _jax
     from repro.core.fed import FedEngine
@@ -331,26 +351,47 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     rng = _jax.random.fold_in(key, 3)
 
     results = {}
-    for name, (comm, use_pallas, gated) in regimes.items():
+    for name, (comm, use_pallas, gated, packed, donate) in regimes.items():
         fed = common.make_fed("fed_sophia", clients=clients, local_iters=3,
                               lr=0.02, tau=2, rounds=16, comm=comm)
         fed = dataclasses.replace(fed, use_pallas=use_pallas)
         engine = FedEngine(task, fed)
         state = engine.init(_jax.random.fold_in(key, 4))
+        if packed:
+            state = engine.pack_state(state)
         ops = _count_layout_ops(
             _jax.make_jaxpr(engine.round)(state, batches, rng).jaxpr)
+        # state-residency accounting: resident bytes are the whole
+        # state dict (params + m/h + EF + replicas); under donation
+        # XLA aliases them onto the outputs in place, so per-round
+        # copies = resident - aliased (0 when donation covers all)
+        resident = sum(l.size * l.dtype.itemsize
+                       for l in _jax.tree.leaves(state))
+        # one AOT compile serves both the memory analysis and the
+        # timed loop (jit __call__ would otherwise compile a second
+        # copy of the same program)
+        compiled = engine.round_fn(donate=donate).lower(
+            state, batches, rng).compile()
+        ma = compiled.memory_analysis()
+        aliased = int(getattr(ma, "alias_size_in_bytes", 0) or 0)
+        copy_bytes = max(0, resident - aliased)
         us = None
         if iters:
-            round_fn = _jax.jit(engine.round)
-            s, m = round_fn(state, batches, rng)          # compile
+            s, m = compiled(state, batches, rng)          # warm-up
             _jax.block_until_ready(m["loss"])
             t0 = time.perf_counter()
             for _ in range(iters):
-                _, m = round_fn(state, batches, rng)
+                # donated calls consume their input state: re-thread it
+                s, m = compiled(s, batches, rng)
                 _jax.block_until_ready(m["loss"])
             us = (time.perf_counter() - t0) / iters * 1e6
         results[name] = {"layout_ops": ops, "us_per_round": us,
-                         "gated": gated}
+                         "gated": gated, "packed": packed,
+                         "donate": donate,
+                         "state_dtype": comm.state_dtype,
+                         "resident_state_bytes": resident,
+                         "aliased_bytes": aliased,
+                         "state_copy_bytes": copy_bytes}
 
     hist = {}
     if os.path.exists(BENCH_ENGINE_JSON):
@@ -380,13 +421,34 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
              r["us_per_round"] if r["us_per_round"] else 0.0,
              f"layout_ops={r['layout_ops']}"
              f";baseline_ops={base_ops}"
-             f";reduction_x={red:.2f}")
+             f";reduction_x={red:.2f}"
+             f";resident_state_B={r['resident_state_bytes']}"
+             f";state_copy_B={r['state_copy_bytes']}")
         r["baseline_layout_ops"] = base_ops
         r["reduction_x"] = red
         if r["gated"] and r["layout_ops"] > gate_ops:
             regressions.append(
                 f"{name}: layout_ops {r['layout_ops']} > committed "
                 f"{gate_ops}")
+        # residency gates (static properties of the compiled round —
+        # identical in --smoke and full runs)
+        if r["donate"] and r["state_copy_bytes"] != 0:
+            regressions.append(
+                f"{name}: donation left {r['state_copy_bytes']} bytes "
+                f"of resident state copied per round (want 0 — every "
+                f"state buffer aliased in place)")
+    # bf16 residency gate: the bf16 regime must roughly halve the
+    # resident-state HBM of its fp32 twin
+    bf16 = results.get("packed-donated-bf16-pallas")
+    fp32 = results.get("packed-donated-pallas")
+    if bf16 and fp32:
+        ratio = (bf16["resident_state_bytes"]
+                 / fp32["resident_state_bytes"])
+        bf16["resident_ratio_vs_fp32"] = ratio
+        if ratio > 0.55:
+            regressions.append(
+                f"packed-donated-bf16-pallas: resident state is "
+                f"{ratio:.2f}x the fp32 twin (want <= 0.55x)")
     out["engine"] = results
     if regressions:
         # do NOT persist the regressed counts: rewriting 'current'

@@ -5,6 +5,14 @@ fully-addressable arrays or process-local replicas), flattened with
 stable path keys, and stored as .npz + a JSON manifest. Restore rebuilds
 the pytree and (optionally) re-shards with device_put against provided
 shardings.
+
+Checkpoints always store the params PYTREE — portable across packing
+geometries and resident state dtypes.  The packed-resident engine
+(`FedEngine.pack_state`) crosses this boundary through the explicit
+shims `save_packed` / `restore_packed`: the only places (besides eval)
+where its between-round wire buffers materialize a pytree.  The wire
+headers stored in the manifest (`FedEngine.wire_headers`) fingerprint
+the packed layout so `--resume` can reject a reinterpreting restore.
 """
 from __future__ import annotations
 
@@ -72,3 +80,27 @@ def restore(path: str, like: Any, shardings: Optional[Any] = None):
 def load_manifest(path: str) -> dict:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)
+
+
+# ------------------------------------------ packed-resident state shims
+def save_packed(path: str, packed, spec, step: int = 0,
+                extra: Optional[dict] = None):
+    """`save` for a packed (rows, cols) wire buffer: unpack through
+    ``spec`` (`repro.comm.flat.FlatSpec`) and store the params pytree —
+    the on-disk format is residency-agnostic, so a run that keeps
+    params packed between rounds checkpoints identically to a
+    tree-resident one."""
+    from repro.comm import flat as cflat
+    save(path, cflat.unpack(packed, spec), step=step, extra=extra)
+
+
+def restore_packed(path: str, spec, dtype=jnp.float32,
+                   shardings: Optional[Any] = None):
+    """Restore a checkpoint directly INTO wire layout: rebuild the
+    pytree from ``spec``'s shapes/dtypes, then pack it as one
+    (rows, cols) buffer in the resident storage ``dtype``
+    (`CommConfig.state_dtype`).  The inverse of `save_packed`."""
+    from repro.comm import flat as cflat
+    like = cflat.unpack(cflat.zeros(spec), spec)
+    return cflat.pack(restore(path, like, shardings=shardings), spec,
+                      dtype=dtype)

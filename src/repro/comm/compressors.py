@@ -94,10 +94,14 @@ class Compressor:
     def header(self) -> cflat.Header:
         """The versioned 24-byte wire header of this stream's payloads
         (docs/wire-format.md): layout fingerprint a decoder validates
-        before touching the body."""
+        before touching the body.  ``state_dtype`` records the storage
+        dtype of resident state kept under this stream's layout (EF
+        residuals, replicas) — the payload bytes themselves are always
+        compressor-dtyped."""
         return cflat.Header(compressor=self.cfg.compressor,
                             total=self.spec.total,
-                            quant_block=self.spec.cols)
+                            quant_block=self.spec.cols,
+                            state_dtype=self.cfg.state_dtype)
 
     def serialize(self, payload: Payload) -> bytes:
         """Canonical little-endian wire bytes of ONE payload (host-side,
@@ -249,7 +253,8 @@ class TopK(Compressor):
     def header(self) -> cflat.Header:
         return cflat.Header(compressor=self.cfg.compressor,
                             total=self.spec.total,
-                            quant_block=self.spec.cols, aux=self.k)
+                            quant_block=self.spec.cols, aux=self.k,
+                            state_dtype=self.cfg.state_dtype)
 
     def _body(self, payload: Payload) -> bytes:
         idx = np.asarray(payload["idx"], dtype="<i4")

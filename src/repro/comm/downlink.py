@@ -43,17 +43,20 @@ def wants_downlink_ef(comm: CommConfig) -> bool:
 
 
 def init_state(comm: CommConfig, spec: FlatSpec, packed_params,
-               num_clients: int) -> dict:
+               num_clients: int, dtype=jnp.float32) -> dict:
     """Server-side downlink state: every client starts exactly in sync
     (the initial model is assumed distributed out-of-band), with zero
-    EF residual."""
+    EF residual.  ``dtype`` is the resident storage dtype of the
+    replicas/residuals (`CommConfig.state_dtype`); the engine upcasts
+    gathered rows to fp32 before `broadcast` sees them."""
     if not comm.downlink_enabled:
         return {}
     state = {MODEL_KEY: jnp.broadcast_to(
-        packed_params[None], (num_clients,) + packed_params.shape).copy()}
+        packed_params[None].astype(dtype),
+        (num_clients,) + packed_params.shape).copy()}
     if wants_downlink_ef(comm):
         state[EF_KEY] = jnp.zeros(
-            (num_clients, spec.rows, spec.cols), jnp.float32)
+            (num_clients, spec.rows, spec.cols), dtype)
     return state
 
 

@@ -17,9 +17,36 @@ and `repack` re-lays a buffer between stream geometries.  Only the
 true ``total`` coordinates ever count as wire bytes (the pad tail is
 a simulation artifact — see docs/wire-format.md).
 
-`aval_key` fingerprints a pytree's avals so engines can memoize spec
-and compressor construction across traces (`FedEngine.comm_runtime`);
-`zeros` allocates flat state buffers without a donor pytree.
+Helper semantics (the contracts the flat-resident engine relies on):
+
+* `aval_key(tree)` — a hashable fingerprint of a pytree's structure
+  plus leaf (shape, dtype) avals.  It deliberately ignores leaf
+  *values* and shardings: two pytrees with the same key pack to the
+  same `FlatSpec`, so engines memoize spec/compressor construction on
+  it across traces (`FedEngine.comm_runtime`).  Works on concrete
+  arrays, tracers and ShapeDtypeStructs alike.
+* `zeros(spec, lead, dtype)` — allocates a zeroed flat state buffer
+  in ``spec``'s wire layout without a donor pytree (per-client state
+  gets leading axes via ``lead``).  ``dtype`` is the *storage* dtype
+  (`CommConfig.state_dtype`); the zero pad tail is a fixed point of
+  every engine op, so buffers from `zeros` stay valid wire buffers
+  forever.
+* `repack(flat, from_spec, to_spec)` — re-lays a packed buffer
+  between two stream geometries that share the flattened ``total``
+  coordinate order (different ``quant_block`` ⇒ different
+  (rows, cols)).  Matching geometries return the *same array object*
+  (zero ops in the traced graph) — callers must not mutate the result
+  in place assuming it is a copy.
+
+Donation-safety contract: the flat-resident engine donates its state
+buffers to the jitted round (`FedEngine.round_fn`), so on
+donation-capable backends every buffer reachable from the state dict
+passed in — packed params, (C, rows, cols) m/h/EF/replica stacks —
+is INVALIDATED by the call and aliased by the returned state.  A
+caller that keeps a reference (for eval, checkpointing, or a
+same-geometry `repack` view) must copy it out *before* the round, or
+use the undonated entry point.  See docs/architecture.md
+"Memory layout: the life of a round".
 
 This module also owns the versioned wire **header** (`Header`): the
 24-byte preamble every serialized payload carries, and the layout
@@ -36,11 +63,17 @@ from typing import Any, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-#: magic + version of the serialized wire-buffer format
+#: magic + version of the serialized wire-buffer format.  Version 2
+#: (FSWB v2) carries the resident-state dtype in the previously
+#: reserved flags byte; version-1 payloads/manifests (flags = 0) are
+#: still accepted and decode as float32 (docs/wire-format.md).
 WIRE_MAGIC = b"FSWB"
-WIRE_VERSION = 1
+WIRE_VERSION = 2
+#: versions `Header.unpack` / `check_headers` accept
+SUPPORTED_WIRE_VERSIONS = (1, 2)
 #: <magic 4s><version u16><compressor u8><flags u8><total u64>
-#: <quant_block u32><aux u32>, little-endian (docs/wire-format.md)
+#: <quant_block u32><aux u32>, little-endian (docs/wire-format.md).
+#: flags (v2): low 4 bits = state-dtype id, high 4 bits reserved.
 _HEADER_STRUCT = struct.Struct("<4sHBBQII")
 HEADER_BYTES = _HEADER_STRUCT.size          # 24
 
@@ -48,6 +81,27 @@ HEADER_BYTES = _HEADER_STRUCT.size          # 24
 COMPRESSOR_IDS = {"identity": 0, "int8": 1, "int4": 2, "topk": 3,
                   "signsgd": 4}
 _ID_COMPRESSORS = {v: k for k, v in COMPRESSOR_IDS.items()}
+
+#: stable state-dtype ids carried in the v2 flags byte (append only);
+#: 0 == float32 keeps v1 payloads (flags == 0) meaning what they meant
+STATE_DTYPE_IDS = {"float32": 0, "bfloat16": 1}
+_ID_STATE_DTYPES = {v: k for k, v in STATE_DTYPE_IDS.items()}
+#: name -> storage dtype; one registry for validation AND lookup, so
+#: appending a dtype id without its jnp mapping is a loud error, never
+#: a silent float32 fallback
+_STATE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+assert set(_STATE_DTYPES) == set(STATE_DTYPE_IDS)
+
+
+def as_dtype(state_dtype: str):
+    """`CommConfig.state_dtype` name -> jnp dtype (storage dtype of
+    the resident wire-layout state)."""
+    try:
+        return _STATE_DTYPES[state_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown state_dtype {state_dtype!r} "
+            f"(want one of {tuple(_STATE_DTYPES)})") from None
 
 
 @dataclass(frozen=True)
@@ -60,20 +114,31 @@ class Header:
     `check_headers` rejects any mismatch with a clear error.
 
     ``aux`` carries the compressor-specific layout parameter (top-k:
-    ``k``); 0 otherwise.
+    ``k``); 0 otherwise.  ``state_dtype`` (v2) is the storage dtype of
+    resident wire-layout state written under this header — the wire
+    *payload* bytes are dtype'd by the compressor, not this field.
+    Version-1 headers decode with ``state_dtype="float32"``.
     """
     compressor: str
     total: int
     quant_block: int
     aux: int = 0
     version: int = WIRE_VERSION
+    state_dtype: str = "float32"
 
     def pack(self) -> bytes:
         if self.compressor not in COMPRESSOR_IDS:
             raise ValueError(f"unknown compressor {self.compressor!r}")
+        if self.state_dtype not in STATE_DTYPE_IDS:
+            raise ValueError(f"unknown state_dtype {self.state_dtype!r}")
+        flags = STATE_DTYPE_IDS[self.state_dtype]
+        if self.version == 1 and flags:
+            raise ValueError(
+                "wire-format v1 cannot carry a non-float32 state_dtype "
+                "(the flags byte was reserved = 0); write v2")
         return _HEADER_STRUCT.pack(
-            WIRE_MAGIC, self.version, COMPRESSOR_IDS[self.compressor], 0,
-            self.total, self.quant_block, self.aux)
+            WIRE_MAGIC, self.version, COMPRESSOR_IDS[self.compressor],
+            flags, self.total, self.quant_block, self.aux)
 
     @classmethod
     def unpack(cls, buf: bytes) -> "Header":
@@ -81,33 +146,53 @@ class Header:
             raise ValueError(
                 f"wire buffer too short for a header: {len(buf)} < "
                 f"{HEADER_BYTES} bytes")
-        magic, ver, comp_id, _flags, total, qb, aux = \
+        magic, ver, comp_id, flags, total, qb, aux = \
             _HEADER_STRUCT.unpack_from(buf)
         if magic != WIRE_MAGIC:
             raise ValueError(
                 f"not a Fed-Sophia wire buffer (magic {magic!r}, "
                 f"expected {WIRE_MAGIC!r})")
-        if ver != WIRE_VERSION:
+        if ver not in SUPPORTED_WIRE_VERSIONS:
             raise ValueError(
                 f"unsupported wire-format version {ver} (this build "
-                f"speaks version {WIRE_VERSION}); re-encode the payload "
-                f"or upgrade")
+                f"speaks versions {SUPPORTED_WIRE_VERSIONS}); re-encode "
+                f"the payload or upgrade")
         if comp_id not in _ID_COMPRESSORS:
             raise ValueError(f"unknown wire compressor id {comp_id}")
+        if ver == 1:
+            # v1 reserved the flags byte: anything nonzero is corrupt
+            if flags:
+                raise ValueError(
+                    f"wire-format v1 header with nonzero reserved flags "
+                    f"byte ({flags:#x})")
+            sdt = "float32"
+        else:
+            if flags & 0xF0:
+                # the high nibble is reserved = 0 in v2: nonzero means
+                # corruption or a future format this build can't read
+                raise ValueError(
+                    f"wire-format v2 header with nonzero reserved flag "
+                    f"bits ({flags:#x})")
+            dt_id = flags & 0x0F
+            if dt_id not in _ID_STATE_DTYPES:
+                raise ValueError(f"unknown wire state-dtype id {dt_id}")
+            sdt = _ID_STATE_DTYPES[dt_id]
         return cls(compressor=_ID_COMPRESSORS[comp_id], total=total,
-                   quant_block=qb, aux=aux, version=ver)
+                   quant_block=qb, aux=aux, version=ver, state_dtype=sdt)
 
     def to_dict(self) -> Dict[str, Any]:
         return {"version": self.version, "compressor": self.compressor,
                 "total": self.total, "quant_block": self.quant_block,
-                "aux": self.aux}
+                "aux": self.aux, "state_dtype": self.state_dtype}
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Header":
+        # v1 manifests predate the state_dtype field: default float32
         return cls(compressor=d["compressor"], total=int(d["total"]),
                    quant_block=int(d["quant_block"]),
                    aux=int(d.get("aux", 0)),
-                   version=int(d.get("version", WIRE_VERSION)))
+                   version=int(d.get("version", 1)),
+                   state_dtype=d.get("state_dtype", "float32"))
 
 
 def check_headers(saved: Dict[str, Dict[str, Any]],
@@ -115,7 +200,19 @@ def check_headers(saved: Dict[str, Dict[str, Any]],
     """Validate checkpointed per-stream wire headers against the
     current engine's (`FedEngine.wire_headers`).  Raises ValueError
     naming every mismatched stream/field — comm/EF state saved under
-    one layout must never be reinterpreted under another."""
+    one layout must never be reinterpreted under another.
+
+    Versioning: headers saved under any `SUPPORTED_WIRE_VERSIONS`
+    format load under the current one — a v1 manifest (no
+    ``state_dtype`` field) is exactly a v2 header with
+    ``state_dtype="float32"``, so upgrading the build never orphans a
+    checkpoint; only the *layout* fields (compressor, total,
+    quant_block, aux) must match.  ``state_dtype`` is deliberately NOT
+    compared: checkpoints store the dtype-agnostic params pytree (the
+    resident EF/replica/optimizer buffers are rebuilt on restore, not
+    read back), so the resident storage dtype is a runtime choice —
+    resuming an fp32 run with ``state_dtype="bfloat16"`` (or back) is
+    a supported upgrade, not a reinterpretation."""
     if not saved:
         raise ValueError(
             "the checkpoint manifest carries no wire headers (it "
@@ -136,8 +233,14 @@ def check_headers(saved: Dict[str, Dict[str, Any]],
                 f"active under the current config")
             continue
         s, c = saved[stream], current[stream]
-        for field_ in ("version", "compressor", "total", "quant_block",
-                       "aux"):
+        for d, when in ((s, "save time"), (c, "now")):
+            ver = int(d.get("version", 1))
+            if ver not in SUPPORTED_WIRE_VERSIONS:
+                problems.append(
+                    f"stream {stream!r}: wire-format version {ver} "
+                    f"({when}) is not supported by this build "
+                    f"({SUPPORTED_WIRE_VERSIONS})")
+        for field_ in ("compressor", "total", "quant_block", "aux"):
             if s.get(field_) != c.get(field_):
                 problems.append(
                     f"stream {stream!r}: {field_} was "
@@ -189,22 +292,39 @@ def aval_key(tree) -> Tuple:
                            for l in leaves))
 
 
-def zeros(spec: FlatSpec, lead: Tuple[int, ...] = ()) -> jnp.ndarray:
+def zeros(spec: FlatSpec, lead: Tuple[int, ...] = (),
+          dtype=jnp.float32) -> jnp.ndarray:
     """A zeroed flat state buffer in ``spec``'s wire layout, with
-    optional leading (e.g. per-client) axes."""
-    return jnp.zeros(tuple(lead) + (spec.rows, spec.cols), jnp.float32)
+    optional leading (e.g. per-client) axes.
+
+    ``dtype`` is the STORAGE dtype of the buffer (resident engine
+    state follows `CommConfig.state_dtype`); in-round compute always
+    upcasts to fp32.  Zero is exactly representable in every supported
+    dtype, and the pad tail is a fixed point of all engine ops, so the
+    result is a valid wire buffer under any later `unpack`/`repack`.
+    """
+    return jnp.zeros(tuple(lead) + (spec.rows, spec.cols), dtype)
 
 
-def pack(tree, spec: FlatSpec) -> jnp.ndarray:
-    """pytree -> (rows, cols) fp32 wire buffer (zero pad at the tail)."""
+def pack(tree, spec: FlatSpec, dtype=jnp.float32) -> jnp.ndarray:
+    """pytree -> (rows, cols) wire buffer (zero pad at the tail).
+
+    Leaves are flattened via fp32 (the canonical wire precision) and
+    the buffer is stored as ``dtype`` — fp32 by default, or bf16 when
+    the caller keeps resident state in `CommConfig.state_dtype`
+    ="bfloat16" (a value-rounding, layout-preserving cast)."""
     leaves = jax.tree_util.tree_flatten(tree)[0]
     v = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
     return jnp.pad(v, (0, spec.padded - spec.total)).reshape(
-        spec.rows, spec.cols)
+        spec.rows, spec.cols).astype(dtype)
 
 
 def unpack(flat: jnp.ndarray, spec: FlatSpec):
-    """(rows, cols) buffer -> pytree with the original shapes/dtypes."""
+    """(rows, cols) buffer -> pytree with the original shapes/dtypes.
+
+    The returned leaves are *views-then-casts* of ``flat``: for fp32
+    models this is bit-exact round-tripping of `pack`; a bf16 buffer
+    upcasts losslessly (bf16 ⊂ fp32)."""
     v = flat.reshape(-1)[:spec.total]
     out: List[jnp.ndarray] = []
     off = 0
@@ -218,9 +338,12 @@ def repack(flat: jnp.ndarray, from_spec: FlatSpec,
            to_spec: FlatSpec) -> jnp.ndarray:
     """Re-lay a packed buffer from one stream's (rows, cols) geometry
     into another's (same flattened coordinates, different quant_block;
-    the pad tail is re-zeroed).  Matching geometries return the buffer
-    unchanged — engine state keeps its pad tail at zero invariantly, so
-    same-geometry repacks need no ops in the traced graph."""
+    the pad tail is re-zeroed; the storage dtype is preserved).
+    Matching geometries return the buffer — the SAME array object, not
+    a copy — engine state keeps its pad tail at zero invariantly, so
+    same-geometry repacks need no ops in the traced graph.  Callers
+    must treat the result as aliasing the input (see the
+    donation-safety contract in the module docstring)."""
     if from_spec.total != to_spec.total:
         raise ValueError(
             f"repack between incompatible specs: total "

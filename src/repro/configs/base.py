@@ -192,6 +192,16 @@ class CommConfig:
     # common payload back. Second-order state is smoother than
     # gradients, so the intended default when enabled is "int4".
     hessian_compressor: str = "off"
+    # ---- resident-state storage dtype ---------------------------------
+    # Storage dtype of the wire-layout state that LIVES on device
+    # between rounds (packed params, the (C, rows, cols) Sophia m/h
+    # EMAs, EF residuals, downlink replicas). "bfloat16" halves the
+    # resident-state HBM; every round still computes in fp32 — rows are
+    # upcast when gathered and downcast when scattered back, and the
+    # fused Pallas kernels carry a dtype-parameterized load/store path.
+    # Wire payloads are unaffected (bytes on the wire follow the
+    # compressor, not this dtype).
+    state_dtype: str = "float32"      # float32 | bfloat16
     # ---- per-stream packing geometry overrides (0/0.0 = inherit) ------
     # Each stream may override the quantization group size and top-k
     # sparsity of its packed layout: curvature is much smoother than

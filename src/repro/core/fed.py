@@ -26,6 +26,28 @@ uplink delta is a flat subtraction, and the hessian stream reads
 historical pytree engine for fp32 models (tests/test_flat_engine.py
 pins this per config).
 
+Device residency (docs/architecture.md "Memory layout: the life of a
+round"): the engine goes one step further than in-round flatness —
+
+* **Packed params between rounds.** `pack_state` re-lays
+  ``state["params"]`` (and the FedOpt server m/v) as wire buffers, and
+  `round` consumes/produces them without the per-round pack/unpack
+  bracket; the pytree then exists only at the init / eval / checkpoint
+  boundaries (`unpack_params` / `unpack_state` are the inverse shims).
+* **Buffer donation.** `round_fn(donate=True)` jits the round with the
+  state argument donated, so on donation-capable backends theta, the
+  (C, rows, cols) Sophia m/h stacks, EF residuals and downlink
+  replicas update IN PLACE — zero per-round device copies of resident
+  client state.  Contract: the caller must not touch the state it
+  passed in after the call (XLA invalidates those buffers); rebind the
+  returned state, as ``state, metrics = round_fn(state, ...)`` does.
+* **bf16 resident state.** ``CommConfig.state_dtype="bfloat16"``
+  stores all resident wire-layout state in bf16 (half the HBM);
+  every round upcasts gathered rows to fp32, computes exactly as the
+  fp32 engine does, and downcasts on the scatter back — the Pallas
+  kernels carry the same load/store dtype contract
+  (`repro.kernels`).  Wire bytes are unaffected.
+
 Communication model (repro.comm): with the default CommConfig (lossless
 identity uplink/downlink, hessian stream off, full participation) the
 round aggregates client params directly — bit-identical to the original
@@ -127,6 +149,41 @@ class FedEngine:
         # metadata, keyed on the params' avals (the engine's CommConfig
         # is immutable, so it needs no key component)
         self._rt_cache: Dict[Any, CommRuntime] = {}
+        # the runtime of the packed-resident state (set by init /
+        # pack_state / restore shims): packed buffers carry no treedef,
+        # so rounds over packed state read the layout from here
+        self._packed_rt: CommRuntime | None = None
+
+    # ------------------------------------------------- residency helpers
+    @property
+    def state_dtype(self):
+        """Storage dtype of resident wire-layout state
+        (`CommConfig.state_dtype`); in-round compute is always fp32."""
+        return cflat.as_dtype(self.fed.comm.state_dtype)
+
+    @staticmethod
+    def params_packed(params) -> bool:
+        """Whether ``state["params"]`` is a packed (rows, cols) wire
+        buffer (packed-resident mode, `pack_state`) rather than a
+        parameter pytree.  Model pytrees are containers, never a bare
+        rank-2 array, so the array rank is the discriminator."""
+        return getattr(params, "ndim", None) == 2
+
+    def _compute32(self, tree):
+        """Gather-side upcast: resident rows -> fp32 compute values.
+        A no-op (the identical array objects) for fp32 state, so the
+        default engine's traced graph is unchanged."""
+        if tree is None:
+            return None
+        return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+    def _store(self, tree):
+        """Scatter-side downcast: fp32 compute values -> the resident
+        storage dtype.  No-op for fp32 state."""
+        if tree is None:
+            return None
+        dt = self.state_dtype
+        return jax.tree.map(lambda x: x.astype(dt), tree)
 
     def _gathered(self, params):
         if self.gather_shardings is None:
@@ -177,29 +234,32 @@ class FedEngine:
         state: Dict[str, Any] = {"params": params,
                                  "round": jnp.zeros((), jnp.int32)}
         rt = self.comm_runtime(params)
+        self._packed_rt = rt
         C = self.fed.num_clients
         comm = self.fed.comm
+        dt = self.state_dtype
         if self._stateful():
-            # per-client Sophia EMAs, stored directly in wire layout —
-            # the local loop and the hessian stream consume them with
-            # zero conversion
+            # per-client Sophia EMAs, stored directly in wire layout
+            # (and in the resident storage dtype) — the local loop and
+            # the hessian stream consume them with zero conversion
             state["client_opt"] = sophia.SophiaState(
-                m=cflat.zeros(rt.spec, (C,)), h=cflat.zeros(rt.spec, (C,)))
+                m=cflat.zeros(rt.spec, (C,), dt),
+                h=cflat.zeros(rt.spec, (C,), dt))
         if self.fed.optimizer in ("fedadam", "fedyogi"):
             state["server_opt"] = {"m": tree_zeros_like(params),
                                    "v": tree_zeros_like(params)}
         if wants_error_feedback(comm):
             # per-client error-feedback residual, stored in uplink
             # wire layout
-            state["comm_ef"] = cflat.zeros(rt.spec, (C,))
+            state["comm_ef"] = cflat.zeros(rt.spec, (C,), dt)
         if comm.downlink_enabled:
             # per-client last-received model replicas (+ server-side
             # EF), stored in the downlink stream's own layout
             state.update(cdown.init_state(
                 comm, rt.spec_dn,
-                cflat.repack(cflat.pack(params, rt.spec), rt.spec,
-                             rt.spec_dn),
-                C))
+                cflat.repack(cflat.pack(params, rt.spec, dtype=dt),
+                             rt.spec, rt.spec_dn),
+                C, dtype=dt))
         return state
 
     def restore_params(self, state, params) -> Dict[str, Any]:
@@ -210,16 +270,102 @@ class FedEngine:
         residuals restart at zero."""
         state = {**state, "params": params}
         rt = self.comm_runtime(params)
+        self._packed_rt = rt
         comm = self.fed.comm
         if "comm_ef" in state:
             state["comm_ef"] = tree_zeros_like(state["comm_ef"])
         if comm.downlink_enabled:
             state.update(cdown.init_state(
                 comm, rt.spec_dn,
-                cflat.repack(cflat.pack(params, rt.spec), rt.spec,
-                             rt.spec_dn),
-                self.fed.num_clients))
+                cflat.repack(cflat.pack(params, rt.spec,
+                                        dtype=self.state_dtype),
+                             rt.spec, rt.spec_dn),
+                self.fed.num_clients, dtype=self.state_dtype))
         return state
+
+    # ------------------------------------------- packed-resident boundary
+    def pack_state(self, state) -> Dict[str, Any]:
+        """Re-lay ``state["params"]`` (and the FedOpt server m/v) as
+        wire buffers so the state is device-resident in wire layout
+        BETWEEN rounds too: `round` then consumes and returns packed
+        buffers with no per-round pack/unpack bracket.  Idempotent.
+        The pytree reappears only through `unpack_params` /
+        `unpack_state` (eval/checkpoint boundaries)."""
+        params = state["params"]
+        if self.params_packed(params):
+            return state
+        rt = self.comm_runtime(params)
+        self._packed_rt = rt
+        dt = self.state_dtype
+        out = {**state, "params": cflat.pack(params, rt.spec, dtype=dt)}
+        if "server_opt" in state:
+            out["server_opt"] = {
+                k: cflat.pack(v, rt.spec, dtype=dt)
+                for k, v in state["server_opt"].items()}
+        return out
+
+    def unpack_state(self, state) -> Dict[str, Any]:
+        """Inverse of `pack_state`: materialize the params (and FedOpt
+        server m/v) pytrees.  Idempotent on tree-resident state."""
+        params = state["params"]
+        if not self.params_packed(params):
+            return state
+        spec = self._require_packed_rt().spec
+        out = {**state, "params": cflat.unpack(params, spec)}
+        if "server_opt" in state:
+            out["server_opt"] = {
+                k: cflat.unpack(v, spec)
+                for k, v in state["server_opt"].items()}
+        return out
+
+    def unpack_params(self, state):
+        """The params pytree view of ``state`` regardless of residency
+        — the eval/checkpoint shim of the packed-resident engine."""
+        params = state["params"]
+        if not self.params_packed(params):
+            return params
+        return cflat.unpack(params, self._require_packed_rt().spec)
+
+    def _require_packed_rt(self) -> CommRuntime:
+        if self._packed_rt is None:
+            raise ValueError(
+                "packed-resident state reached the engine before its "
+                "layout was established — create the state with this "
+                "engine's init()+pack_state() (or restore through its "
+                "shims) so the packed spec is known")
+        return self._packed_rt
+
+    def runtime_for(self, params) -> CommRuntime:
+        """`comm_runtime` for either residency: pytree params build
+        (memoized) specs; packed params read the layout recorded by
+        `pack_state`."""
+        if self.params_packed(params):
+            return self._require_packed_rt()
+        return self.comm_runtime(params)
+
+    def num_params(self, state) -> int:
+        """True model coordinate count under either residency (the
+        packed buffer's pad tail never counts)."""
+        params = state["params"]
+        if self.params_packed(params):
+            return self._require_packed_rt().spec.total
+        return tree_count_params(params)
+
+    def round_fn(self, *, donate: bool = True):
+        """The jitted round entry point.
+
+        With ``donate=True`` the state argument is donated to XLA:
+        on donation-capable backends every resident buffer — packed
+        params, the (C, rows, cols) Sophia m/h stacks, EF residuals,
+        downlink replicas — is updated IN PLACE (zero per-round device
+        copies of client state).  Donation contract: the caller must
+        not reuse the state object it passed in (its buffers are
+        invalidated); rebind the return value, as in
+        ``state, metrics = round_fn(state, batches, rng)``.
+        """
+        if donate:
+            return jax.jit(self.round, donate_argnums=(0,))
+        return jax.jit(self.round)
 
     # ------------------------------------------------------ comm plumbing
     def uses_direct_path(self) -> bool:
@@ -277,19 +423,21 @@ class FedEngine:
         checkpoint manifests; `repro.comm.flat.check_headers` rejects a
         restore whose comm/EF/client state was written under a
         different layout."""
-        rt = self.comm_runtime(params)
+        rt = self.runtime_for(params)
         out = {"uplink": rt.comp.header().to_dict()}
         if rt.dn_on:
             out["downlink"] = rt.comp_dn.header().to_dict()
         if rt.h_on:
             out["hessian"] = rt.comp_h.header().to_dict()
         if self._stateful():
-            # the Sophia m/h buffers are stored in wire layout: a
-            # restore under a different packing geometry would silently
-            # re-interpret the rows
+            # the Sophia m/h buffers are stored in wire layout (and in
+            # the resident storage dtype): a restore under a different
+            # packing geometry or dtype would silently re-interpret
+            # the rows
             out["client_state"] = cflat.Header(
                 compressor="identity", total=rt.spec.total,
-                quant_block=rt.spec.cols).to_dict()
+                quant_block=rt.spec.cols,
+                state_dtype=self.fed.comm.state_dtype).to_dict()
         return out
 
     def comm_client_step(self, rt: CommRuntime, theta, theta_dn,
@@ -308,7 +456,10 @@ class FedEngine:
         coordinates in the downlink geometry, None when that stream is
         off), the received replica *is* the local-training start state,
         and the uplink delta is a flat subtraction inside
-        `Compressor.encode_delta`.
+        `Compressor.encode_delta`.  All buffer arguments are fp32
+        compute values — callers gathering bf16 resident rows upcast
+        first (`_compute32`) and downcast the returned rows on the
+        scatter back (`_store`).
 
         Returns ``(xhat, stat, ef_new, opt_new, loss, dnm_new,
         dnef_new, h_hat, h_stat)`` with ``None`` for inactive pieces.
@@ -498,16 +649,31 @@ class FedEngine:
             return self._server_opt_update(state, agg)
         return {**state, "params": agg}
 
+    def _apply_aggregate_flat(self, state, agg_flat):
+        """`_apply_aggregate` for packed-resident state: the server
+        model update never leaves wire layout (stored back in the
+        resident dtype)."""
+        if self.fed.optimizer in ("fedadam", "fedyogi"):
+            return self._server_opt_update_flat(state, agg_flat)
+        return {**state,
+                "params": agg_flat.astype(state["params"].dtype)}
+
     # ------------------------------------------------------------- the round
     def round(self, state, batches, rng):
-        """batches: pytree with leading client axis C. Returns (state, metrics)."""
+        """batches: pytree with leading client axis C. Returns (state, metrics).
+
+        Accepts either residency: tree-resident state (`init`) or
+        packed-resident state (`pack_state`) — the latter skips the
+        per-round params pack/unpack bracket entirely.  Jit through
+        `round_fn` to opt into buffer donation (in-place resident
+        state)."""
         fed = self.fed
         comm = fed.comm
         round_idx = state["round"]
         lr = lr_at_round(fed, round_idx)
         C = fed.num_clients
         S = comm.num_participants(C)
-        rt = self.comm_runtime(state["params"])
+        rt = self.runtime_for(state["params"])
         client_rngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
             jnp.arange(C))
 
@@ -522,7 +688,7 @@ class FedEngine:
                                            round_idx, lr, rng, rt)
 
         state = {**state, "round": round_idx + 1}
-        n = tree_count_params(state["params"])
+        n = self.num_params(state)
         wire = accounting.round_bytes(comm, n, C)
         metrics = {"loss": loss, "lr": lr,
                    "participants": jnp.asarray(S, jnp.float32)}
@@ -534,20 +700,26 @@ class FedEngine:
     def _round_direct(self, state, batches, client_rngs, round_idx, lr, rt):
         """Original aggregation: server model <- mean of client params —
         computed entirely in wire layout (ONE pack of the server model
-        in, ONE unpack of the aggregate out)."""
+        in, ONE unpack of the aggregate out — and ZERO of either in
+        packed-resident mode).  Resident rows upcast to fp32 on entry
+        into each client's local loop and downcast on the store back
+        (no-ops for fp32 state)."""
         fed = self.fed
         spec = rt.spec
         params = state["params"]
         C = fed.num_clients
         stateful = self._stateful()
-        theta = cflat.pack(params, spec)
+        packed = self.params_packed(params)
+        theta = (params.astype(jnp.float32) if packed
+                 else cflat.pack(params, spec))
         opts = state.get("client_opt") if stateful else None
 
         if fed.strategy == "parallel":
             if stateful:
                 new_t, new_opt, losses = jax.vmap(
                     lambda o, b, r: self._local_update_flat(
-                        spec, theta, o, b, r, round_idx, lr)
+                        spec, theta, self._compute32(o), b, r, round_idx,
+                        lr)
                 )(opts, batches, client_rngs)
             else:
                 new_t, new_opt, losses = jax.vmap(
@@ -559,15 +731,20 @@ class FedEngine:
             def scan_body(acc, xs):
                 opt, batch, crng = xs
                 t_i, opt_i, loss = self._local_update_flat(
-                    spec, theta, opt, batch, crng, round_idx, lr)
+                    spec, theta, self._compute32(opt), batch, crng,
+                    round_idx, lr)
                 return acc + t_i / C, (opt_i, loss)
             agg_flat, (new_opt, losses) = jax.lax.scan(
                 scan_body, jnp.zeros_like(theta),
                 (opts, batches, client_rngs))
 
-        state = self._apply_aggregate(state, cflat.unpack(agg_flat, spec))
+        if packed:
+            state = self._apply_aggregate_flat(state, agg_flat)
+        else:
+            state = self._apply_aggregate(state,
+                                          cflat.unpack(agg_flat, spec))
         if stateful:
-            state = {**state, "client_opt": new_opt}
+            state = {**state, "client_opt": self._store(new_opt)}
         return state, jnp.mean(losses)
 
     def _round_comm(self, state, batches, client_rngs, round_idx, lr, rng,
@@ -599,7 +776,9 @@ class FedEngine:
         S = comm.num_participants(C)
         spec, comp = rt.spec, rt.comp
         dn_on, h_on = rt.dn_on, rt.h_on
-        theta = cflat.pack(params, spec)
+        packed = self.params_packed(params)
+        theta = (params.astype(jnp.float32) if packed
+                 else cflat.pack(params, spec))
         theta_dn = cflat.repack(theta, spec, rt.spec_dn) if dn_on else None
         idx = participation_indices(
             jax.random.fold_in(rng, PARTICIPATION_SALT + comm.seed), C, S)
@@ -613,8 +792,13 @@ class FedEngine:
             return (None if tree is None
                     else jax.tree.map(lambda x: x[idx], tree))
 
-        opts_g, ef_g = take(opts), take(ef)
-        dnm_g, dnef_g = take(dn_model), take(dn_ef)
+        def take32(tree):
+            """Gather the participants' resident-state rows, upcast to
+            the fp32 compute dtype (no-op for fp32 resident state)."""
+            return self._compute32(take(tree))
+
+        opts_g, ef_g = take32(opts), take32(ef)
+        dnm_g, dnef_g = take32(dn_model), take32(dn_ef)
         batches_g, rngs_g = take(batches), client_rngs[idx]
 
         client = functools.partial(self.comm_client_step, rt, theta,
@@ -669,31 +853,40 @@ class FedEngine:
             corr = cflat.repack(dn_mean - theta_dn, rt.spec_dn, spec)
             agg_flat = agg_flat + corr
         # the server model update is a flat axpy; the pytree appears
-        # only at the state boundary
-        agg = cflat.unpack(theta + agg_flat, spec)
-        state = self._apply_aggregate(state, agg)
+        # only at the state boundary (and not at all in packed-
+        # resident mode)
+        if packed:
+            state = self._apply_aggregate_flat(state, theta + agg_flat)
+        else:
+            state = self._apply_aggregate(
+                state, cflat.unpack(theta + agg_flat, spec))
         if stateful:
             # scatter the participants' optimizer state rows back
+            # (downcast to the resident storage dtype; no-op for fp32)
             new_opts = jax.tree.map(
-                lambda full, g: full.at[idx].set(g), opts, opt_new_g)
+                lambda full, g: full.at[idx].set(g),
+                state["client_opt"], self._store(opt_new_g))
             if h_on:
                 # curvature averaging: every participant's h re-synced
                 # to the (re-quantized) common averaged broadcast
                 h_down, _ = rt.comp_h.roundtrip(
                     jax.random.fold_in(rng, 0x4D),
                     rt.comp_h.server_combine(h_agg, h_wstat))
-                h_common = cflat.repack(h_down, rt.spec_h, spec)
+                h_common = cflat.repack(h_down, rt.spec_h, spec).astype(
+                    new_opts.h.dtype)
                 new_opts = new_opts._replace(h=new_opts.h.at[idx].set(
                     jnp.broadcast_to(h_common[None],
                                      (S,) + h_common.shape)))
             state = {**state, "client_opt": new_opts}
         if ef is not None:
-            state = {**state, "comm_ef": ef.at[idx].set(ef_new_g)}
+            state = {**state, "comm_ef":
+                     ef.at[idx].set(self._store(ef_new_g))}
         if dn_model is not None:
             state = {**state, cdown.MODEL_KEY:
-                     dn_model.at[idx].set(dnm_new_g)}
+                     dn_model.at[idx].set(self._store(dnm_new_g))}
         if dn_ef is not None:
-            state = {**state, cdown.EF_KEY: dn_ef.at[idx].set(dnef_new_g)}
+            state = {**state, cdown.EF_KEY:
+                     dn_ef.at[idx].set(self._store(dnef_new_g))}
         return state, jnp.mean(losses)
 
     # ------------------------------------------------ server-side optimizers
@@ -719,3 +912,28 @@ class FedEngine:
             params, m, v)
         return {**state, "params": new_params,
                 "server_opt": {"m": m, "v": v}}
+
+    def _server_opt_update_flat(self, state, agg):
+        """`_server_opt_update` over packed wire buffers (packed-
+        resident mode): identical per-coordinate math on the flattened
+        coordinates, fp32 compute, stored back in the resident dtype.
+        ``agg`` is the fp32 aggregated packed model."""
+        fed = self.fed
+        so = state["server_opt"]
+        params = state["params"].astype(jnp.float32)
+        m0, v0 = (so["m"].astype(jnp.float32),
+                  so["v"].astype(jnp.float32))
+        delta = params - agg
+        m = fed.server_beta1 * m0 + (1 - fed.server_beta1) * delta
+        if fed.optimizer == "fedadam":
+            v = (fed.server_beta2 * v0
+                 + (1 - fed.server_beta2) * delta * delta)
+        else:  # fedyogi
+            v = v0 - ((1 - fed.server_beta2) * delta * delta
+                      * jnp.sign(v0 - delta * delta))
+        new_params = (params - fed.server_lr * m
+                      / (jnp.sqrt(v) + fed.server_eps))
+        return {**state,
+                "params": new_params.astype(state["params"].dtype),
+                "server_opt": {"m": m.astype(so["m"].dtype),
+                               "v": v.astype(so["v"].dtype)}}

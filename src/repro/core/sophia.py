@@ -84,13 +84,16 @@ def sophia_step(params, grads, state: SophiaState, h_hat, do_h_update,
 def sophia_step_flat(theta, m, h, grads, h_hat, do_h_update, *, lr, beta1,
                      beta2, rho, eps, weight_decay,
                      use_pallas: bool = False):
-    """`sophia_step` over packed (rows, cols) fp32 wire buffers.
+    """`sophia_step` over packed (rows, cols) wire buffers.
 
-    Bit-identical per coordinate to the pytree form (the ops are all
-    elementwise; the zero pad tail is a fixed point, so packed state
-    stays valid wire buffers across iterations).  With ``use_pallas``
-    the buffers feed the fused kernel directly — no pack/unpack.
-    Returns ``(theta, m, h)``.
+    Bit-identical per coordinate to the pytree form for fp32 buffers
+    (the ops are all elementwise; the zero pad tail is a fixed point,
+    so packed state stays valid wire buffers across iterations).
+    With ``use_pallas`` the buffers feed the fused kernel directly —
+    no pack/unpack.  Follows the kernel layer's dtype contract: bf16
+    resident buffers (`CommConfig.state_dtype`) are upcast to fp32
+    for the arithmetic and the results stored back in each input's
+    dtype (no-op casts for fp32).  Returns ``(theta, m, h)``.
     """
     if use_pallas:
         from repro.kernels import INTERPRET
@@ -99,9 +102,13 @@ def sophia_step_flat(theta, m, h, grads, h_hat, do_h_update, *, lr, beta1,
             theta, m, h, grads, h_hat, do_h_update, lr, beta1=beta1,
             beta2=beta2, rho=rho, eps=eps, weight_decay=weight_decay,
             interpret=INTERPRET)
+    out_dt = (theta.dtype, m.dtype, h.dtype)
+    theta, m, h, grads, h_hat = (x.astype(jnp.float32)
+                                 for x in (theta, m, h, grads, h_hat))
     m = beta1 * m + (1.0 - beta1) * grads                          # Eq. 9
     h = jnp.where(do_h_update,
                   beta2 * h + (1.0 - beta2) * h_hat, h)            # Eq. 10
     theta = theta - lr * weight_decay * theta                      # line 15
     step = clip(m / jnp.maximum(h, eps), rho)                      # Eq. 11
-    return theta - lr * step, m, h                                 # line 16
+    return ((theta - lr * step).astype(out_dt[0]),                 # line 16
+            m.astype(out_dt[1]), h.astype(out_dt[2]))

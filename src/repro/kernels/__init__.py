@@ -1,6 +1,39 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas TPU kernels for the engine's HBM-bound hot paths.
+
+Every kernel consumes the packed ``(rows, cols)`` wire layout of
+`repro.comm.flat` directly — the flat-resident engine hands them state
+that is *already* in their layout, so the kernel path performs zero
+pytree<->flat conversion (gated by ``make bench-engine-smoke``):
+
+* `sophia_update.sophia_update_flat` — the fused Sophia local
+  iteration (m-EMA, gated h-EMA, decay, clip, step) over theta/m/h/g.
+* `quantize.quant_roundtrip_flat` / `uplink_roundtrip_flat` /
+  `broadcast_roundtrip_flat` / `sign_roundtrip_flat` /
+  `topk_threshold_flat` — the wire round-trips of the comm streams
+  (delta-code + EF + stochastic quant + residual in one VMEM pass).
+* `stale_accum.stale_accum_flat` — the scheduler's staleness-weighted
+  buffered aggregation.
+* `ref` — pure-jnp oracles with identical per-coordinate semantics
+  (the equivalence targets in tests/test_kernels.py).
+
+Dtype contract: resident state may be stored bf16
+(`CommConfig.state_dtype="bfloat16"`).  Kernels and refs upcast loads
+to fp32, compute in fp32, and store each output in that output's
+declared dtype; noise/scales/weights are always fp32.  With fp32
+inputs all casts are no-ops — the default path is bit-identical to
+the pre-dtype kernels.
+
+Donation-safety: the kernels allocate fresh outputs; in-place update
+of the resident buffers happens one level up, where the jitted round
+donates its state (`FedEngine.round_fn`) and XLA aliases these
+outputs onto the donated inputs.  Kernel callers never need to think
+about aliasing; round callers do (docs/architecture.md "Memory
+layout: the life of a round").
+
+This layer is OPTIONAL: add <name>.py + a ref oracle ONLY for compute
+hot-spots that are demonstrably HBM- or compute-bound; everything
+else belongs in plain jnp.
+"""
 import jax
 
 # Pallas kernels execute in interpret mode everywhere but real TPUs

@@ -8,12 +8,21 @@ clip, scale-mul); fusing them reads each input stream once and writes
 the reconstruction once — the same HBM-roofline argument as
 `sophia_update`.
 
-Layout matches `repro.comm.flat`: fp32 (rows, cols) tiles, one
-quantization scale per row.  Stochastic-rounding noise is generated
-outside the kernel with `jax.random` and streamed in, so the reference
-path (`repro.kernels.ref`) sees the identical noise and the
-Pallas-vs-ref equivalence is exact; `interpret=True` runs the kernel
-body on CPU (this container), pass False on a real TPU.
+Layout matches `repro.comm.flat`: (rows, cols) tiles, one quantization
+scale per row.  Stochastic-rounding noise is generated outside the
+kernel with `jax.random` and streamed in, so the reference path
+(`repro.kernels.ref`) sees the identical noise and the Pallas-vs-ref
+equivalence is exact; `interpret=True` runs the kernel body on CPU
+(this container), pass False on a real TPU.
+
+Dtype contract (`CommConfig.state_dtype`): the state tiles (model /
+replica / EF streams) may be stored bf16 — every kernel upcasts its
+loads to fp32, computes in fp32, and stores each output in that
+output's declared dtype (the first state input's dtype), so a bf16
+resident buffer costs half the HBM traffic without changing the
+arithmetic.  Noise and scales are always fp32.  With fp32 inputs the
+casts are no-ops and the kernels are bit-identical to their pre-dtype
+versions.
 """
 from __future__ import annotations
 
@@ -38,12 +47,13 @@ def _grid_specs(R, C):
 
 # ------------------------------------------------- stochastic quantization
 def _quant_kernel(x_ref, u_ref, s_ref, out_ref, *, qmax):
-    """q = clip(floor(x/scale + u), ±qmax); out = q * scale (one pass)."""
+    """q = clip(floor(x/scale + u), ±qmax); out = q * scale (one pass).
+    Loads upcast to fp32, the store downcasts to the output dtype."""
     s = s_ref[...]                                   # (br, 1) row scales
     safe = jnp.where(s > 0, s, 1.0)
-    q = jnp.floor(x_ref[...] / safe + u_ref[...])
+    q = jnp.floor(x_ref[...].astype(jnp.float32) / safe + u_ref[...])
     q = jnp.clip(q, -qmax, qmax)
-    out_ref[...] = q * s
+    out_ref[...] = (q * s).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("qmax", "interpret"))
@@ -51,8 +61,9 @@ def quant_roundtrip_flat(x, noise, scale, *, qmax: int,
                          interpret: bool = True):
     """Fused stochastic quantize->dequantize over a (R, C) fp32 buffer.
 
-    noise: U[0,1) array of x.shape; scale: (R, 1) per-row scales.
-    Returns the dequantized reconstruction (R, C) fp32.
+    noise: U[0,1) fp32 array of x.shape; scale: (R, 1) fp32 per-row
+    scales.  Returns the dequantized reconstruction (R, C) in ``x``'s
+    dtype (fp32 compute in-kernel; see the module dtype contract).
     """
     R, C = x.shape
     grid, tile, rowcol, _ = _grid_specs(R, C)
@@ -72,14 +83,17 @@ def _broadcast_kernel(t_ref, r_ref, e_ref, u_ref, s_ref, m_ref, d_ref,
     """Delta-code + stochastic quant round-trip + apply + residual:
     d = (theta - ref) + ef; xhat = clip(floor(d/s + u)) * s;
     model' = ref + xhat; resid' = d - xhat — one pass over 4 streams
-    instead of the ~8 HBM-bound elementwise ops XLA would emit."""
+    instead of the ~8 HBM-bound elementwise ops XLA would emit.
+    Loads upcast to fp32, stores downcast to each output's dtype."""
     s = s_ref[...]
     safe = jnp.where(s > 0, s, 1.0)
-    d = (t_ref[...] - r_ref[...]) + e_ref[...]
+    t = t_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    d = (t - r) + e_ref[...].astype(jnp.float32)
     q = jnp.clip(jnp.floor(d / safe + u_ref[...]), -qmax, qmax)
     xhat = q * s
-    m_ref[...] = r_ref[...] + xhat
-    d_ref[...] = d - xhat
+    m_ref[...] = (r + xhat).astype(m_ref.dtype)
+    d_ref[...] = (d - xhat).astype(d_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("qmax", "interpret"))
@@ -113,14 +127,16 @@ def _uplink_kernel(t_ref, s_ref, e_ref, u_ref, sc_ref, x_ref, r_ref,
     d = (theta_i - theta_i^rx) + ef; xhat = clip(floor(d/s + u)) * s;
     resid' = d - xhat — the uplink twin of `_broadcast_kernel`, one
     VMEM pass over 3 input streams instead of the subtract/add/quant
-    chain XLA would emit."""
+    chain XLA would emit.  Loads upcast to fp32, stores downcast to
+    each output's dtype."""
     sc = sc_ref[...]
     safe = jnp.where(sc > 0, sc, 1.0)
-    d = (t_ref[...] - s_ref[...]) + e_ref[...]
+    d = (t_ref[...].astype(jnp.float32) - s_ref[...].astype(jnp.float32)
+         + e_ref[...].astype(jnp.float32))
     q = jnp.clip(jnp.floor(d / safe + u_ref[...]), -qmax, qmax)
     xhat = q * sc
-    x_ref[...] = xhat
-    r_ref[...] = d - xhat
+    x_ref[...] = xhat.astype(x_ref.dtype)
+    r_ref[...] = (d - xhat).astype(r_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("qmax", "interpret"))
@@ -150,7 +166,9 @@ def uplink_roundtrip_flat(theta, start, ef, noise, scale, *, qmax: int,
 
 # --------------------------------------------------------------- sign sgd
 def _sign_kernel(x_ref, f_ref, out_ref):
-    out_ref[...] = f_ref[0, 0] * jnp.sign(x_ref[...])
+    out_ref[...] = (f_ref[0, 0]
+                    * jnp.sign(x_ref[...].astype(jnp.float32))
+                    ).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -171,8 +189,9 @@ def sign_roundtrip_flat(x, scale, *, interpret: bool = True):
 
 # ------------------------------------------------------ top-k sparsify
 def _thresh_kernel(x_ref, f_ref, out_ref):
-    x = x_ref[...]
-    out_ref[...] = jnp.where(jnp.abs(x) >= f_ref[0, 0], x, 0.0)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.where(jnp.abs(x) >= f_ref[0, 0], x,
+                             0.0).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

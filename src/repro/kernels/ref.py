@@ -1,50 +1,78 @@
-"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests).
+
+Dtype contract (mirrors `repro.kernels.quantize`): every ref upcasts
+its state operands to fp32, computes in fp32, and casts each output
+back to the corresponding input's storage dtype — so a bf16 resident
+buffer (`CommConfig.state_dtype="bfloat16"`) produces the same
+rounding as the kernels' in-VMEM load/store path, and with fp32
+inputs the casts are no-ops and the refs are unchanged.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
 def sophia_update_ref(theta, m, h, g, h_hat, do_h, *, lr, beta1, beta2,
                       rho, eps, weight_decay):
-    """Reference semantics of the fused Sophia update (flat arrays)."""
+    """Reference semantics of the fused Sophia update (flat arrays).
+    Returns (theta, m, h) in their input storage dtypes."""
+    out_dt = (theta.dtype, m.dtype, h.dtype)
     do_h = jnp.asarray(do_h, jnp.float32)
+    theta, m, h, g, h_hat = map(_f32, (theta, m, h, g, h_hat))
     m = beta1 * m + (1.0 - beta1) * g
     h_new = beta2 * h + (1.0 - beta2) * h_hat
     h = do_h * h_new + (1.0 - do_h) * h
     theta = theta - lr * weight_decay * theta
     step = jnp.clip(m / jnp.maximum(h, eps), -rho, rho)
-    return theta - lr * step, m, h
+    return ((theta - lr * step).astype(out_dt[0]), m.astype(out_dt[1]),
+            h.astype(out_dt[2]))
 
 
 def quant_roundtrip_ref(x, noise, scale, *, qmax):
     """Reference for kernels.quantize.quant_roundtrip_flat: per-row-scale
-    stochastic quantize then dequantize."""
+    stochastic quantize then dequantize (output in x's dtype)."""
     safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.floor(x / safe + noise), -qmax, qmax)
-    return q * scale
+    q = jnp.clip(jnp.floor(_f32(x) / safe + noise), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
 
 
 def uplink_roundtrip_ref(theta, start, ef, noise, scale, *, qmax):
     """Reference for kernels.quantize.uplink_roundtrip_flat: EF-corrected
     uplink delta, quant round-trip, new residual."""
-    d = (theta - start) + ef
+    d = (_f32(theta) - _f32(start)) + _f32(ef)
     xhat = quant_roundtrip_ref(d, noise, scale, qmax=qmax)
-    return xhat, d - xhat
+    # both outputs in theta's dtype, matching the kernel's out_shape
+    return xhat.astype(theta.dtype), (d - xhat).astype(theta.dtype)
+
+
+def broadcast_roundtrip_ref(theta, ref, ef, noise, scale, *, qmax):
+    """Reference for kernels.quantize.broadcast_roundtrip_flat: delta-
+    coded broadcast round-trip, replica apply, new residual."""
+    r = _f32(ref)
+    d = (_f32(theta) - r) + _f32(ef)
+    xhat = quant_roundtrip_ref(d, noise, scale, qmax=qmax)
+    return (r + xhat).astype(theta.dtype), (d - xhat).astype(theta.dtype)
 
 
 def sign_roundtrip_ref(x, scale):
     """Reference for kernels.quantize.sign_roundtrip_flat."""
-    return jnp.asarray(scale, jnp.float32) * jnp.sign(x)
+    return (jnp.asarray(scale, jnp.float32)
+            * jnp.sign(_f32(x))).astype(x.dtype)
 
 
 def topk_threshold_ref(x, thr):
     """Reference for kernels.quantize.topk_threshold_flat."""
-    return jnp.where(jnp.abs(x) >= thr, x, 0.0)
+    xf = _f32(x)
+    return jnp.where(jnp.abs(xf) >= thr, xf, 0.0).astype(x.dtype)
 
 
 def stale_accum_ref(wires, weights, inv_norm):
     """Reference for kernels.stale_accum.stale_accum_flat: staleness-
-    weighted accumulate of K arrival wires."""
+    weighted accumulate of K arrival wires (always fp32 out)."""
     w = jnp.asarray(weights, jnp.float32)[:, None, None]
     return jnp.asarray(inv_norm, jnp.float32) * jnp.sum(
-        wires.astype(jnp.float32) * w, axis=0)
+        _f32(wires) * w, axis=0)

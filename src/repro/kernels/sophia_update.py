@@ -28,21 +28,25 @@ def _sophia_kernel(theta_ref, m_ref, h_ref, g_ref, hhat_ref, flags_ref,
     """One VMEM tile of the fused update.
 
     flags_ref: (1, 2) scalars — [do_h_update (0/1), lr]. Runtime inputs
-    (lr is schedule-driven and traced).
+    (lr is schedule-driven and traced).  Loads upcast to fp32, stores
+    downcast to each output's dtype (bf16 resident state computes in
+    fp32; no-op casts for fp32 state).
     """
     do_h = flags_ref[0, 0]
     lr = flags_ref[0, 1]
-    g = g_ref[...]
-    m = beta1 * m_ref[...] + (1.0 - beta1) * g                     # Eq. 9
-    h_new = beta2 * h_ref[...] + (1.0 - beta2) * hhat_ref[...]     # Eq. 10
-    h = do_h * h_new + (1.0 - do_h) * h_ref[...]
-    theta = theta_ref[...]
+    g = g_ref[...].astype(jnp.float32)
+    h0 = h_ref[...].astype(jnp.float32)
+    m = beta1 * m_ref[...].astype(jnp.float32) + (1.0 - beta1) * g  # Eq. 9
+    h_new = beta2 * h0 + (1.0 - beta2) * hhat_ref[...].astype(
+        jnp.float32)                                               # Eq. 10
+    h = do_h * h_new + (1.0 - do_h) * h0
+    theta = theta_ref[...].astype(jnp.float32)
     theta = theta - lr * weight_decay * theta                      # line 15
     step = m / jnp.maximum(h, eps)
     step = jnp.clip(step, -rho, rho)                               # Eq. 11
-    theta_out[...] = theta - lr * step                             # line 16
-    m_out[...] = m
-    h_out[...] = h
+    theta_out[...] = (theta - lr * step).astype(theta_out.dtype)   # line 16
+    m_out[...] = m.astype(m_out.dtype)
+    h_out[...] = h.astype(h_out.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("beta1", "beta2", "rho",
@@ -50,7 +54,9 @@ def _sophia_kernel(theta_ref, m_ref, h_ref, g_ref, hhat_ref, flags_ref,
                                              "interpret"))
 def sophia_update_flat(theta, m, h, g, h_hat, do_h, lr, *, beta1, beta2,
                        rho, eps, weight_decay, interpret: bool = True):
-    """Fused update over a flat (R, C) fp32 view. Returns (theta, m, h).
+    """Fused update over a flat (R, C) view. Returns (theta, m, h),
+    each in its input's storage dtype (fp32 or bf16 resident state;
+    compute is fp32 in-kernel either way).
 
     interpret=True executes the kernel body in Python on CPU (this
     container); on a real TPU pass interpret=False.
@@ -68,7 +74,8 @@ def sophia_update_flat(theta, m, h, g, h_hat, do_h, lr, *, beta1, beta2,
     kernel = functools.partial(
         _sophia_kernel, beta1=beta1, beta2=beta2, rho=rho, eps=eps,
         weight_decay=weight_decay)
-    out_shape = [jax.ShapeDtypeStruct((R, C), theta.dtype)] * 3
+    out_shape = [jax.ShapeDtypeStruct((R, C), x.dtype)
+                 for x in (theta, m, h)]
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -32,14 +32,16 @@ BLOCK_C = 1024
 
 def _stale_accum_kernel(x_ref, w_ref, s_ref, out_ref, *, num_wires):
     """One (br, bc) output tile, revisited across the K grid steps:
-    out = 0; out += w_k * x_k; out *= inv_norm on the last step."""
+    out = 0; out += w_k * x_k; out *= inv_norm on the last step.
+    Loads upcast to fp32 in VMEM (bf16 wires stream at half the HBM
+    bandwidth; the accumulator is always fp32)."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += w_ref[0, 0] * x_ref[0, ...]
+    out_ref[...] += w_ref[0, 0] * x_ref[0, ...].astype(jnp.float32)
 
     @pl.when(k == num_wires - 1)
     def _scale():
@@ -50,9 +52,11 @@ def _stale_accum_kernel(x_ref, w_ref, s_ref, out_ref, *, num_wires):
 def stale_accum_flat(wires, weights, inv_norm, *, interpret: bool = True):
     """Fused weighted accumulate over K arrival wires.
 
-    wires: (K, R, C) fp32 packed deltas; weights: (K,) staleness
-    weights; inv_norm: scalar final scale (traced).  Returns the
-    (R, C) fp32 aggregate ``inv_norm * sum_k weights[k] * wires[k]``.
+    wires: (K, R, C) packed deltas (fp32 or bf16 — loads upcast
+    in-kernel, so bf16 wires never materialize an fp32 copy in HBM);
+    weights: (K,) staleness weights; inv_norm: scalar final scale
+    (traced).  Returns the (R, C) fp32 aggregate
+    ``inv_norm * sum_k weights[k] * wires[k]``.
     """
     K, R, C = wires.shape
     br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
@@ -70,4 +74,4 @@ def stale_accum_flat(wires, weights, inv_norm, *, interpret: bool = True):
         out_specs=pl.BlockSpec((br, bc), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
         interpret=interpret,
-    )(wires.astype(jnp.float32), w2, s2)
+    )(wires, w2, s2)

@@ -118,7 +118,8 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
                 use_pallas: bool = False, fsdp_gather: bool = True,
                 cfg_overrides: Optional[dict] = None,
                 fed_overrides: Optional[dict] = None,
-                comm: Optional[CommConfig] = None) -> Bundle:
+                comm: Optional[CommConfig] = None,
+                packed_state: bool = False) -> Bundle:
     cfg = _apply_overrides(configs.get_model_config(arch_id), cfg_overrides)
     shape = INPUT_SHAPES["train_4k"]
     seq, gbatch = shape.seq_len, shape.global_batch
@@ -163,6 +164,11 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
     state = jax.eval_shape(engine.init, jax.random.PRNGKey(0))
     p_sh = S.param_shardings(cfg, mesh, state["params"],
                              fsdp_axes=daxes if seq_fed else None)
+    if packed_state:
+        # packed-resident mode: the state ships to the device with
+        # params (and FedOpt m/v) already in wire layout — the round
+        # neither packs nor unpacks them
+        state = jax.eval_shape(engine.pack_state, state)
     st_sh = {"params": p_sh,
              "round": NamedSharding(mesh, P())}
     # ALL per-client engine state lives in wire layout (C, rows, cols)
@@ -189,6 +195,19 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
     for k in ("comm_ef", MODEL_KEY, EF_KEY):
         if k in state:
             st_sh[k] = wire_sh
+    if packed_state:
+        # the flat analogue of the per-leaf param shardings: the 2D
+        # (rows, cols) buffer shards its cols (= quant_block, a power
+        # of two) over the model axes in parallel mode, or over the
+        # data axes under sequential/FSDP (ZeRO-style) — one rule for
+        # params and the FedOpt server state alike
+        flat_sh = NamedSharding(
+            mesh, P(None, maxes or None) if not seq_fed
+            else P(None, daxes))
+        st_sh["params"] = flat_sh
+        if "server_opt" in state:
+            st_sh["server_opt"] = {k: flat_sh
+                                   for k in state["server_opt"]}
 
     batch = _batch_struct(cfg, (C, b), seq)
     batch["labels"] = jnp.zeros((C, b, seq), jnp.int32)
@@ -207,7 +226,7 @@ def build_train(arch_id: str, mesh, *, reduced: bool = False,
     out_sh = (st_sh, None)
     meta = dict(arch=arch_id, shape="train_4k", entry="train_round",
                 num_clients=C, per_client_batch=b, strategy=fed.strategy,
-                seq=seq, cfg=cfg, fed=fed)
+                seq=seq, cfg=cfg, fed=fed, packed_state=packed_state)
     return Bundle(engine.round, args, in_sh, out_sh, meta)
 
 

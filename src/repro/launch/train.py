@@ -66,6 +66,18 @@ def main():
                          "averaging; 'off' keeps curvature local)")
     ap.add_argument("--comm-pallas", action="store_true",
                     help="fused quantize/dequantize kernels (interpret on CPU)")
+    # device residency of the engine state (docs/architecture.md
+    # "Memory layout: the life of a round")
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="storage dtype of resident wire-layout state "
+                         "(params between rounds, Sophia m/h, EF, "
+                         "replicas); bfloat16 halves its HBM, compute "
+                         "stays fp32")
+    ap.add_argument("--tree-state", action="store_true",
+                    help="keep params as a pytree between rounds and "
+                         "skip buffer donation (the pre-residency "
+                         "engine; default: packed, donated rounds)")
     # virtual-time round scheduling (repro.sched)
     ap.add_argument("--schedule", default="sync",
                     choices=SCHED_DISCIPLINES,
@@ -100,6 +112,7 @@ def main():
                       sign_majority=args.sign_majority,
                       downlink_compressor=args.downlink_compressor,
                       hessian_compressor=args.hessian_compressor,
+                      state_dtype=args.state_dtype,
                       use_pallas=args.comm_pallas)
     sched = SchedConfig(discipline=args.schedule,
                         buffer_size=args.buffer_size,
@@ -125,9 +138,15 @@ def main():
             state, ckpt.restore(args.ckpt_dir, state["params"]))
         print(f"resumed params from {args.ckpt_dir} "
               f"(step {manifest['step']}, wire headers OK)")
-    round_fn = jax.jit(engine.round)
+    if not args.tree_state:
+        # device residency: params stay packed in wire layout BETWEEN
+        # rounds (pytrees materialize only at the eval/checkpoint
+        # boundary below) and the jitted round donates the state, so
+        # resident buffers update in place
+        state = engine.pack_state(state)
+    round_fn = engine.round_fn(donate=not args.tree_state)
 
-    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    n_params = engine.num_params(state)
     # exact integers from the accounting model (the in-metrics float32
     # mirror loses precision above ~16M params)
     wire = round_bytes(comm, n_params, fed.num_clients)
@@ -144,13 +163,15 @@ def main():
                      ("uplink_bytes", "downlink_bytes",
                       "hessian_uplink_bytes", "hessian_downlink_bytes",
                       "total_bytes")))
-    # the canonical flat layout every in-round state buffer lives in
+    # the canonical flat layout every resident state buffer lives in
     # (docs/architecture.md "Memory layout"); its header rides along in
     # the checkpoint manifest and is validated on --resume
-    rt = engine.comm_runtime(state["params"])
+    rt = engine.runtime_for(state["params"])
+    residency = "tree" if args.tree_state else "packed+donated"
     print(f"flat-resident state layout: {rt.spec.rows}x{rt.spec.cols} "
-          f"fp32 ({rt.spec.total:,} coords + "
-          f"{rt.spec.padded - rt.spec.total} pad)")
+          f"{comm.state_dtype} ({rt.spec.total:,} coords + "
+          f"{rt.spec.padded - rt.spec.total} pad), "
+          f"between-round residency: {residency}")
     def make_batches(r):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,
@@ -177,8 +198,10 @@ def main():
                   flush=True)
     else:
         # virtual-time event loop (repro.sched): --rounds counts
-        # aggregation events; the printed time is SIMULATED seconds
-        scheduler = VirtualScheduler(engine, make_batches)
+        # aggregation events; the printed time is SIMULATED seconds.
+        # The apply jit donates the state unless --tree-state.
+        scheduler = VirtualScheduler(engine, make_batches,
+                                     donate=not args.tree_state)
         state, trace = scheduler.run(state, args.rounds, key)
         for ev in trace.events:
             stale = max(ev.staleness) if ev.staleness else 0
@@ -190,9 +213,16 @@ def main():
               f"simulated {trace.final_time:.2f}s, "
               f"{trace.total_bytes / 2**20:.2f}MiB on the wire")
     if args.ckpt_dir:
-        ckpt.save(args.ckpt_dir, state["params"], step=args.rounds,
-                  extra={"arch": args.arch,
-                         "wire": engine.wire_headers(state["params"])})
+        extra = {"arch": args.arch,
+                 "wire": engine.wire_headers(state["params"])}
+        if engine.params_packed(state["params"]):
+            # checkpoint boundary shim: the on-disk format is the
+            # pytree regardless of the between-round residency
+            ckpt.save_packed(args.ckpt_dir, state["params"], rt.spec,
+                             step=args.rounds, extra=extra)
+        else:
+            ckpt.save(args.ckpt_dir, state["params"], step=args.rounds,
+                      extra=extra)
         print(f"saved checkpoint to {args.ckpt_dir}")
 
 

@@ -54,7 +54,6 @@ from repro.configs.base import SCHED_DISCIPLINES
 from repro.core.schedules import lr_at_round
 from repro.kernels import INTERPRET as _INTERPRET
 from repro.sched import latency
-from repro.utils.tree import tree_count_params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,12 +122,24 @@ class VirtualScheduler:
     leading client axis ``C`` for the given server version (clients
     dispatched at version ``v`` train on their row of
     ``batch_fn(v)``); ``eval_fn(params) -> scalar loss`` is optional
-    and sampled every ``eval_every`` aggregations.
+    and sampled every ``eval_every`` aggregations (it always receives
+    the params *pytree* — packed-resident state is unpacked at this
+    boundary).
+
+    ``donate=True`` donates the state to the sync-round and apply
+    jits, so resident buffers update in place on donation-capable
+    backends.  Donation contract: the state passed to `run` is
+    consumed — its buffers are invalidated by the first aggregation;
+    callers keep only the returned state.  The default is undonated
+    (state survives `run`, e.g. for side-by-side comparisons).
+    State residency follows the engine: tree- and packed-resident
+    state (`FedEngine.pack_state`) both work, at any
+    `CommConfig.state_dtype`.
     """
 
     def __init__(self, engine, batch_fn: Callable[[int], Any],
                  eval_fn: Optional[Callable[[Any], Any]] = None,
-                 eval_every: int = 1):
+                 eval_every: int = 1, donate: bool = False):
         fed = engine.fed
         sched = fed.sched
         comm = fed.comm
@@ -163,9 +174,12 @@ class VirtualScheduler:
             self.buffer_size = 1           # async applies every arrival
         self._stateful = (fed.optimizer == "fed_sophia"
                           and fed.persistent_client_state)
-        self._round_fn = jax.jit(engine.round)
+        self._round_fn = engine.round_fn(donate=donate)
+        # dispatch reads the state (its outputs are per-client rows,
+        # not a new state), so only the apply step can donate
         self._dispatch_fn = jax.jit(self._dispatch_impl)
-        self._apply_fn = jax.jit(self._apply_impl)
+        self._apply_fn = jax.jit(self._apply_impl,
+                                 donate_argnums=(0,) if donate else ())
         self._batch_cache: Tuple[int, Any] = (-1, None)
 
     # ---------------------------------------------------------- jit bodies
@@ -177,9 +191,11 @@ class VirtualScheduler:
         end-to-end (`FedEngine.comm_client_step`)."""
         engine = self.engine
         params = state["params"]
-        rt = engine.comm_runtime(params)
+        rt = engine.runtime_for(params)
         lr = lr_at_round(self.fed, round_idx)
-        theta = cflat.pack(params, rt.spec)
+        theta = (params.astype(jnp.float32)
+                 if engine.params_packed(params)
+                 else cflat.pack(params, rt.spec))
         theta_dn = (cflat.repack(theta, rt.spec, rt.spec_dn)
                     if rt.dn_on else None)
 
@@ -187,10 +203,15 @@ class VirtualScheduler:
             return (None if tree is None
                     else jax.tree.map(lambda x: x[idx], tree))
 
-        opts_g = take(state.get("client_opt") if self._stateful else None)
-        ef_g = take(state.get("comm_ef"))
-        dnm_g = take(state.get(cdown.MODEL_KEY))
-        dnef_g = take(state.get(cdown.EF_KEY))
+        def take32(tree):
+            # resident rows -> fp32 compute values (no-op for fp32)
+            return engine._compute32(take(tree))
+
+        opts_g = take32(state.get("client_opt") if self._stateful
+                        else None)
+        ef_g = take32(state.get("comm_ef"))
+        dnm_g = take32(state.get(cdown.MODEL_KEY))
+        dnef_g = take32(state.get(cdown.EF_KEY))
         batches_g = take(batches)
         rngs_g = jax.vmap(lambda i: jax.random.fold_in(rng_v, i))(idx)
 
@@ -213,7 +234,8 @@ class VirtualScheduler:
         engine = self.engine
         comm = self.comm
         params = state["params"]
-        rt = engine.comm_runtime(params)
+        rt = engine.runtime_for(params)
+        packed = engine.params_packed(params)
         normalize = self.sched.discipline == "semisync"
         wsum = jnp.sum(weights)
         inv_norm = (1.0 / wsum) if normalize else jnp.float32(1.0)
@@ -229,7 +251,8 @@ class VirtualScheduler:
         if normalize:
             wstat = wstat / wsum
         agg_flat = rt.comp.server_combine(agg_flat, wstat)
-        theta = cflat.pack(params, rt.spec)
+        theta = (params.astype(jnp.float32) if packed
+                 else cflat.pack(params, rt.spec))
         if rt.dn_on:
             # arrivals trained from their OWN received replicas: fold
             # in each arrival's (replica - current model) reference
@@ -242,23 +265,30 @@ class VirtualScheduler:
                 corr = dn_acc - wsum * packed_now
             agg_flat = agg_flat + cflat.repack(corr, rt.spec_dn, rt.spec)
         # flat axpy + ONE unpack at the state boundary (no per-leaf
-        # delta application)
-        agg = cflat.unpack(theta + agg_flat, rt.spec)
-        state = engine._apply_aggregate(state, agg)
+        # delta application; none at all in packed-resident mode)
+        if packed:
+            state = engine._apply_aggregate_flat(state, theta + agg_flat)
+        else:
+            state = engine._apply_aggregate(
+                state, cflat.unpack(theta + agg_flat, rt.spec))
         state = {**state, "round": state["round"] + 1}
+        # scatters downcast the arrivals' rows back to the resident
+        # storage dtype (no-op for fp32)
         if self._stateful and opt_rows is not None:
             state = {**state, "client_opt": jax.tree.map(
                 lambda full, g: full.at[idx].set(g),
-                state["client_opt"], opt_rows)}
+                state["client_opt"], engine._store(opt_rows))}
         if ef_rows is not None:
-            state = {**state,
-                     "comm_ef": state["comm_ef"].at[idx].set(ef_rows)}
+            state = {**state, "comm_ef": state["comm_ef"].at[idx].set(
+                engine._store(ef_rows))}
         if dnm_rows is not None:
             state = {**state, cdown.MODEL_KEY:
-                     state[cdown.MODEL_KEY].at[idx].set(dnm_rows)}
+                     state[cdown.MODEL_KEY].at[idx].set(
+                         engine._store(dnm_rows))}
         if dnef_rows is not None:
             state = {**state, cdown.EF_KEY:
-                     state[cdown.EF_KEY].at[idx].set(dnef_rows)}
+                     state[cdown.EF_KEY].at[idx].set(
+                         engine._store(dnef_rows))}
         return state
 
     # ------------------------------------------------------------- helpers
@@ -274,7 +304,9 @@ class VirtualScheduler:
         if self.eval_fn is None:
             return None
         if final or (version % self.eval_every) == 0:
-            return float(self.eval_fn(state["params"]))
+            # packed-resident state materializes the params pytree
+            # only here, at the eval boundary
+            return float(self.eval_fn(self.engine.unpack_params(state)))
         return None
 
     def _weight(self, staleness: int) -> float:
@@ -299,7 +331,7 @@ class VirtualScheduler:
                   stop_at_target):
         fed, comm = self.fed, self.comm
         C = self.num_clients
-        n_params = tree_count_params(state["params"])
+        n_params = self.engine.num_params(state)
         durations = latency.dispatch_seconds(fed, n_params, C)
         per_round = accounting.round_bytes(comm, n_params, C)
         trace = SchedTrace(discipline="sync")
@@ -328,7 +360,7 @@ class VirtualScheduler:
                         stop_at_target):
         fed, comm = self.fed, self.comm
         C = self.num_clients
-        n_params = tree_count_params(state["params"])
+        n_params = self.engine.num_params(state)
         durations = latency.dispatch_seconds(fed, n_params, C)
         down_bytes, up_bytes = latency.leg_bytes(comm, n_params)
         trace = SchedTrace(discipline=self.sched.discipline)

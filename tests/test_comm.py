@@ -628,7 +628,8 @@ def test_repack_relays_geometry():
         cflat.repack(buf, a, cflat.flat_spec({"x": jnp.zeros(7)}, cols=4))
 
 
-# ------------------------------------------------- wire headers (v1 spec)
+# ------------------------------------------- wire headers (FSWB v2 spec;
+# v1-compat matrix lives in tests/test_residency.py)
 def test_header_pack_unpack_roundtrip():
     h = cflat.Header(compressor="int4", total=3000, quant_block=128,
                      aux=0)

@@ -1,0 +1,409 @@
+"""Device-residency safety net: packed between-round params, buffer
+donation, bf16 resident state, and FSWB v1->v2 checkpoint compat.
+
+Three claims are pinned here (docs/architecture.md "Memory layout:
+the life of a round"):
+
+* **Packed == tree.** A round over packed-resident state
+  (`FedEngine.pack_state`) computes the SAME per-coordinate op
+  sequence as the tree-resident round for fp32 models — bitwise under
+  op-by-op execution (see tests/test_flat_engine.py for why jit
+  bitwise-ness is only claimed where program structure cannot change
+  XLA:CPU's per-fusion FMA contraction).
+* **Donation changes nothing but ownership.** The donated round
+  (`FedEngine.round_fn(donate=True)`) is bitwise identical to the
+  undonated one; the donated input state is actually invalidated
+  (the donation contract is real, not advisory).
+* **bf16 resident state degrades gracefully.** Kernels and refs agree
+  on the bf16 load/store path, and an engine round with
+  ``state_dtype="bfloat16"`` stays close to its fp32 twin for one
+  round (one bf16 store rounding per buffer).
+
+Plus the wire-format compat satellite: v1 headers/manifests load
+under the v2 build (`state_dtype` defaults to float32), and the
+checkpoint shims round-trip packed state exactly.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.comm import flat as cflat
+from repro.configs.base import CommConfig, FedConfig
+from repro.core.fed import FedEngine
+from repro.data import synthetic as syn
+from repro.models.small import MLPTask
+
+
+# ---------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def task_data():
+    key = jax.random.PRNGKey(0)
+    x, y = syn.make_image_data(key, 512, "mnist", noise=1.3)
+    part = syn.dirichlet_partition(jax.random.fold_in(key, 1), y, 4,
+                                   alpha=0.5)
+    tr, _ = syn.train_test_split(part)
+    batches = syn.client_batches(jax.random.fold_in(key, 2), x, y, tr, 16)
+    return MLPTask(), batches, key
+
+
+def _engine(task, comm=None, opt="fed_sophia", **kw):
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer=opt, lr=0.02,
+                    tau=2, total_rounds=8, comm=comm or CommConfig(), **kw)
+    return FedEngine(task, fed)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+def _assert_bitwise(a, b, msg=""):
+    for la, lb in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(la, lb, err_msg=msg)
+
+
+# ------------------------------------------------- packed == tree rounds
+PACKED_MATRIX = [
+    ("direct", CommConfig(), "fed_sophia"),
+    ("uplink-int8", CommConfig(compressor="int8"), "fed_sophia"),
+    ("ef-topk", CommConfig(compressor="topk"), "fedavg"),
+    ("bidir", CommConfig(compressor="int8", downlink_compressor="int8",
+                         hessian_compressor="int4"), "fed_sophia"),
+    ("fedadam", CommConfig(compressor="int8"), "fedadam"),
+]
+
+
+@pytest.mark.parametrize("name,comm,opt", PACKED_MATRIX,
+                         ids=[c[0] for c in PACKED_MATRIX])
+def test_packed_round_matches_tree_round(task_data, name, comm, opt):
+    """Two rounds over packed-resident state, unpacked at the end, are
+    BITWISE the tree-resident rounds (op-by-op execution)."""
+    task, batches, key = task_data
+    e = _engine(task, comm, opt)
+    s_tree = e.init(key)
+    s_pack = e.pack_state(e.init(key))
+    assert e.params_packed(s_pack["params"])
+    assert not e.params_packed(s_tree["params"])
+    with jax.disable_jit():
+        for r in range(2):
+            rng = jax.random.fold_in(key, 10 + r)
+            s_tree, m_tree = e.round(s_tree, batches, rng)
+            s_pack, m_pack = e.round(s_pack, batches, rng)
+    _assert_bitwise(s_tree, e.unpack_state(s_pack), name)
+    np.testing.assert_array_equal(np.asarray(m_tree["loss"]),
+                                  np.asarray(m_pack["loss"]))
+
+
+def test_packed_round_matches_tree_round_jit_fedavg(task_data):
+    """Under jit, bitwise where program structure cannot change FMA
+    contraction (fedavg — no EMA chain; see test_flat_engine)."""
+    task, batches, key = task_data
+    e = _engine(task, CommConfig(compressor="int8"), "fedavg")
+    s_tree = e.init(key)
+    s_pack = e.pack_state(e.init(key))
+    rng = jax.random.fold_in(key, 11)
+    s_tree, _ = jax.jit(e.round)(s_tree, batches, rng)
+    s_pack, _ = jax.jit(e.round)(s_pack, batches, rng)
+    _assert_bitwise(s_tree["params"], e.unpack_params(s_pack))
+
+
+def test_pack_unpack_state_roundtrip(task_data):
+    task, _, key = task_data
+    e = _engine(task, CommConfig(compressor="topk"), "fedadam")
+    state = e.init(key)
+    rt = e.comm_runtime(state["params"])
+    packed = e.pack_state(state)
+    # idempotent both ways
+    assert e.pack_state(packed)["params"] is packed["params"]
+    back = e.unpack_state(packed)
+    _assert_bitwise(state, back)
+    assert e.num_params(packed) == e.num_params(state) == rt.spec.total
+
+
+# ------------------------------------------------------ donation contract
+def test_donated_round_bitwise_and_invalidating(task_data):
+    """Donated vs undonated jitted rounds are bitwise identical, under
+    either residency — and donation actually invalidates the caller's
+    state (the documented contract, not a no-op)."""
+    task, batches, key = task_data
+    e = _engine(task, CommConfig(compressor="int8"))
+    rng = jax.random.fold_in(key, 12)
+    for packed in (False, True):
+        mk = ((lambda: e.pack_state(e.init(key))) if packed
+              else (lambda: e.init(key)))
+        s_u, m_u = e.round_fn(donate=False)(mk(), batches, rng)
+        donated_in = mk()
+        s_d, m_d = e.round_fn(donate=True)(donated_in, batches, rng)
+        _assert_bitwise(s_u, s_d, f"packed={packed}")
+        np.testing.assert_array_equal(np.asarray(m_u["loss"]),
+                                      np.asarray(m_d["loss"]))
+        # chaining donated rounds (the real training loop) works
+        s_d, _ = e.round_fn(donate=True)(s_d, batches,
+                                         jax.random.fold_in(rng, 1))
+        if jax.default_backend() in ("cpu", "tpu", "gpu"):
+            with pytest.raises(Exception):
+                np.asarray(jax.tree.leaves(donated_in)[0]) + 0
+
+
+def test_donated_scheduler_matches_undonated(task_data):
+    """The event-loop scheduler with donate=True reproduces the
+    undonated run event-for-event (packed state)."""
+    from repro.configs.base import SchedConfig
+    from repro.sched import VirtualScheduler
+    task, batches, key = task_data
+    comm = CommConfig(compressor="int8")
+    sched = SchedConfig(discipline="semisync", buffer_size=2,
+                        latency_profile="straggler")
+    fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
+                    lr=0.02, tau=2, comm=comm, sched=sched)
+    e = FedEngine(task, fed)
+    batch_fn = lambda v: batches
+    s1, t1 = VirtualScheduler(e, batch_fn).run(
+        e.init(key), 3, jax.random.fold_in(key, 13))
+    s2, t2 = VirtualScheduler(e, batch_fn, donate=True).run(
+        e.pack_state(e.init(key)), 3, jax.random.fold_in(key, 13))
+    assert [ev.loss for ev in t1.events] == [ev.loss for ev in t2.events]
+    _assert_bitwise(s1["params"], e.unpack_params(s2))
+
+
+# ------------------------------------------------------ bf16 resident state
+def test_bf16_kernel_paths_match_refs():
+    """The kernels' bf16 load/store path agrees with the dtype-aware
+    refs (identical casts -> allclose at bf16 resolution), and fp32
+    stays bit-identical to the pre-dtype behaviour."""
+    from repro.kernels import ref
+    from repro.kernels.quantize import (broadcast_roundtrip_flat,
+                                        quant_roundtrip_flat,
+                                        uplink_roundtrip_flat)
+    from repro.kernels.sophia_update import sophia_update_flat
+    from repro.kernels.stale_accum import stale_accum_flat
+    key = jax.random.PRNGKey(7)
+    R, C = 8, 256
+    mk = lambda i, dt: jax.random.normal(
+        jax.random.fold_in(key, i), (R, C)).astype(dt)
+    for dt in (jnp.float32, jnp.bfloat16):
+        x, start, ef = mk(0, dt), mk(1, dt), mk(2, dt)
+        noise = jax.random.uniform(jax.random.fold_in(key, 3), (R, C))
+        scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1,
+                        keepdims=True) / 127
+        got = quant_roundtrip_flat(x, noise, scale, qmax=127)
+        want = ref.quant_roundtrip_ref(x, noise, scale, qmax=127)
+        assert got.dtype == dt
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # XLA:CPU contracts d - q*scale into an FMA per fusion (the
+        # caveat documented in tests/test_flat_engine.py): the residual
+        # may differ by one ulp of the compared dtype
+        ulp = 1e-6 if dt == jnp.float32 else 1e-2
+        gu = uplink_roundtrip_flat(x, start, ef, noise, scale, qmax=127)
+        wu = ref.uplink_roundtrip_ref(x, start, ef, noise, scale,
+                                      qmax=127)
+        for g, w in zip(gu, wu):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       rtol=ulp, atol=ulp)
+        gb = broadcast_roundtrip_flat(x, start, ef, noise, scale,
+                                      qmax=127)
+        wb = ref.broadcast_roundtrip_ref(x, start, ef, noise, scale,
+                                         qmax=127)
+        for g, w in zip(gb, wb):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       rtol=ulp, atol=ulp)
+        gs = sophia_update_flat(x, start, jnp.abs(ef), mk(4, dt),
+                                jnp.abs(mk(5, dt)), True, 1e-2,
+                                beta1=0.9, beta2=0.95, rho=0.04,
+                                eps=1e-12, weight_decay=1e-4)
+        ws = ref.sophia_update_ref(x, start, jnp.abs(ef), mk(4, dt),
+                                   jnp.abs(mk(5, dt)), True, lr=1e-2,
+                                   beta1=0.9, beta2=0.95, rho=0.04,
+                                   eps=1e-12, weight_decay=1e-4)
+        for g, w in zip(gs, ws):
+            assert g.dtype == dt
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       rtol=ulp, atol=ulp)
+        wires = jnp.stack([mk(i, dt) for i in (0, 1, 2)])
+        wts = jnp.asarray([1.0, 0.5, 0.25], jnp.float32)
+        ga = stale_accum_flat(wires, wts, 1.0 / jnp.sum(wts))
+        wa = ref.stale_accum_ref(wires, wts, 1.0 / jnp.sum(wts))
+        assert ga.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(wa),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_bf16_round_tolerance_and_dtypes(task_data):
+    """One bf16-resident round stays within bf16 rounding of its fp32
+    twin, and the resident dtypes survive the round (the scatter-back
+    downcast)."""
+    task, batches, key = task_data
+    rng = jax.random.fold_in(key, 14)
+    e32 = _engine(task, CommConfig(compressor="int8"))
+    e16 = _engine(task, CommConfig(compressor="int8",
+                                   state_dtype="bfloat16"))
+    s32, m32 = jax.jit(e32.round)(e32.pack_state(e32.init(key)),
+                                  batches, rng)
+    s16, m16 = jax.jit(e16.round)(e16.pack_state(e16.init(key)),
+                                  batches, rng)
+    assert s16["params"].dtype == jnp.bfloat16
+    assert s16["client_opt"].m.dtype == jnp.bfloat16
+    assert s16["client_opt"].h.dtype == jnp.bfloat16
+    # the inputs agree to bf16 rounding (~3 decimal digits); one round
+    # of fp32 compute keeps the outputs within that neighbourhood
+    np.testing.assert_allclose(
+        np.asarray(s16["params"], np.float32), np.asarray(s32["params"]),
+        rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(float(m16["loss"]), float(m32["loss"]),
+                               rtol=2e-2)
+    # multi-round stability: losses stay finite
+    s, fn = s16, e16.round_fn(donate=True)
+    for r in range(3):
+        s, m = fn(s, batches, jax.random.fold_in(rng, r))
+    assert np.isfinite(float(m["loss"]))
+
+
+# ------------------------------------------- FSWB v2 header + v1 compat
+def test_header_v2_roundtrip_and_v1_decode():
+    h = cflat.Header(compressor="int8", total=1000, quant_block=128,
+                     state_dtype="bfloat16")
+    assert h.version == cflat.WIRE_VERSION == 2
+    got = cflat.Header.unpack(h.pack())
+    assert got == h
+    # a v1 header (reserved flags byte == 0) decodes as float32
+    v1 = cflat.Header(compressor="int8", total=1000, quant_block=128,
+                      version=1)
+    got1 = cflat.Header.unpack(v1.pack())
+    assert got1.version == 1 and got1.state_dtype == "float32"
+    # v1 cannot carry a non-float32 state dtype
+    with pytest.raises(ValueError, match="v1"):
+        cflat.Header(compressor="int8", total=1, quant_block=1,
+                     version=1, state_dtype="bfloat16").pack()
+    # corrupt v1 flags byte rejected
+    raw = bytearray(v1.pack())
+    raw[7] = 0x01
+    with pytest.raises(ValueError, match="reserved"):
+        cflat.Header.unpack(bytes(raw))
+    # v2 reserved high nibble rejected too
+    raw = bytearray(h.pack())
+    raw[7] |= 0x10
+    with pytest.raises(ValueError, match="reserved"):
+        cflat.Header.unpack(bytes(raw))
+    # unknown version rejected
+    raw = bytearray(h.pack())
+    raw[4] = 9
+    with pytest.raises(ValueError, match="version"):
+        cflat.Header.unpack(bytes(raw))
+
+
+def _strip_to_v1(headers):
+    """A manifest as a v1 build would have written it: version 1, no
+    state_dtype field."""
+    out = {}
+    for k, d in headers.items():
+        d = {f: v for f, v in d.items() if f != "state_dtype"}
+        d["version"] = 1
+        out[k] = d
+    return out
+
+
+def test_check_headers_accepts_v1_manifest(task_data):
+    task, _, key = task_data
+    e = _engine(task, CommConfig(compressor="int8",
+                                 downlink_compressor="int8",
+                                 hessian_compressor="int4"))
+    params = e.init(key)["params"]
+    current = e.wire_headers(params)
+    assert all(d["version"] == 2 for d in current.values())
+    # a checkpoint written by the v1 build loads under the v2 build
+    cflat.check_headers(_strip_to_v1(current), current)
+    # ...but layout mismatches still fail loudly
+    bad = _strip_to_v1(current)
+    bad["uplink"]["quant_block"] = 999
+    with pytest.raises(ValueError, match="quant_block"):
+        cflat.check_headers(bad, current)
+    # state_dtype is a runtime residency choice, not a layout field:
+    # resuming an fp32 checkpoint under bf16 residency is supported
+    # (checkpoints store the dtype-agnostic pytree; resident buffers
+    # are rebuilt on restore)
+    e16 = _engine(task, CommConfig(compressor="int8",
+                                   downlink_compressor="int8",
+                                   hessian_compressor="int4",
+                                   state_dtype="bfloat16"))
+    cur16 = e16.wire_headers(params)
+    cflat.check_headers(_strip_to_v1(current), cur16)
+    cflat.check_headers(current, cur16)
+
+
+def test_resume_v1_checkpoint_under_v2(tmp_path, task_data):
+    """End-to-end --resume proof: a checkpoint whose manifest carries
+    v1 wire headers restores under the v2 build through the exact
+    train.py resume path (load_manifest -> check_headers -> restore ->
+    restore_params -> pack_state)."""
+    task, batches, key = task_data
+    e = _engine(task, CommConfig(compressor="int8"))
+    state = e.init(key)
+    rng = jax.random.fold_in(key, 15)
+    state, _ = jax.jit(e.round)(state, batches, rng)
+    path = os.fspath(tmp_path / "ck")
+    # write the checkpoint as the v1 build would have
+    ckpt.save(path, state["params"], step=1,
+              extra={"wire": _strip_to_v1(e.wire_headers(
+                  state["params"]))})
+    # the v2 build's resume path
+    e2 = _engine(task, CommConfig(compressor="int8"))
+    s2 = e2.init(key)
+    manifest = ckpt.load_manifest(path)
+    cflat.check_headers(manifest["extra"]["wire"],
+                        e2.wire_headers(s2["params"]))
+    restored = ckpt.restore(path, s2["params"])
+    s2 = e2.restore_params(s2, restored)
+    _assert_bitwise(s2["params"], state["params"])
+    # and the restored run continues packed + donated
+    s2 = e2.pack_state(s2)
+    s2, m = e2.round_fn(donate=True)(s2, batches,
+                                     jax.random.fold_in(rng, 1))
+    assert np.isfinite(float(m["loss"]))
+
+
+# ------------------------------------------------- launch bundle (api.py)
+def test_build_train_packed_state_bundle_compiles():
+    """`launch.api.build_train(packed_state=True)` ships a state struct
+    whose params (and wire-layout client state) are packed, with the
+    flat sharding rule, and the bundle lowers + compiles."""
+    from repro.launch import api
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    b = api.build_train("minicpm-2b", mesh, reduced=True, local_iters=2,
+                        packed_state=True)
+    state = b.args[0]
+    assert state["params"].ndim == 2          # packed, not a pytree
+    assert b.meta["packed_state"]
+    compiled = jax.jit(b.fn, in_shardings=b.in_shardings,
+                       out_shardings=b.out_shardings).lower(
+                           *b.args).compile()
+    assert compiled is not None
+
+
+# ------------------------------------------------------- checkpoint shims
+def test_ckpt_packed_shims_roundtrip(tmp_path, task_data):
+    task, _, key = task_data
+    e = _engine(task, CommConfig())
+    state = e.pack_state(e.init(key))
+    spec = e.runtime_for(state["params"]).spec
+    path = os.fspath(tmp_path / "ck")
+    ckpt.save_packed(path, state["params"], spec, step=3,
+                     extra={"wire": e.wire_headers(state["params"])})
+    # on-disk format is the pytree (residency-agnostic)
+    tree = ckpt.restore(path, e.unpack_params(state))
+    _assert_bitwise(tree, e.unpack_params(state))
+    # restore straight back into wire layout, either dtype
+    back32 = ckpt.restore_packed(path, spec)
+    np.testing.assert_array_equal(np.asarray(back32),
+                                  np.asarray(state["params"]))
+    back16 = ckpt.restore_packed(path, spec, dtype=jnp.bfloat16)
+    assert back16.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(back16, np.float32), np.asarray(state["params"]),
+        rtol=1e-2, atol=1e-2)
+    assert ckpt.load_manifest(path)["step"] == 3

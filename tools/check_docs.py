@@ -11,12 +11,17 @@ that no longer exist, so the docs cannot silently drift from the code:
 * ``--flags`` inside fenced command blocks that invoke
   ``repro.launch.train`` or ``benchmarks.run`` must appear verbatim in
   that entry point's source;
-* ``--only <regime>`` values in ``benchmarks.run`` invocations must
-  name a registered benchmark regime (the ALL dict, ``kernel`` or
-  ``all``);
+* ``--only <regime>`` values must name a registered benchmark regime
+  (the ALL dict, ``kernel`` or ``all``) — both in fenced
+  ``benchmarks.run`` commands AND in inline code spans across every
+  doc file (so prose like "the ``--only engine`` run" can't outlive a
+  renamed regime);
 * ``CommConfig.field`` / ``FedConfig.field`` references must name real
   dataclass fields;
-* ``make target`` references must name real Makefile targets.
+* ``make target`` references must name real Makefile targets;
+* ``docs/configuration.md`` must be byte-identical to what
+  ``tools/gen_config_docs.py`` generates from the config dataclasses
+  (every field present, nothing stale).
 
 Pure stdlib + text matching — no imports of the package, so it runs in
 seconds on a bare checkout.
@@ -109,6 +114,15 @@ def check_file(doc: Path, make_targets, errors):
             errors.append(f"{rel}: `make {m.group(1)}` is not a Makefile "
                           f"target")
 
+    # `--only <regime>` anywhere in code spans/blocks (not just fenced
+    # benchmarks.run commands) must name a registered regime
+    bench_src = CLI_SOURCES["benchmarks.run"].read_text()
+    for regime in ONLY_RE.findall(code_text):
+        if regime not in bench_regimes(bench_src):
+            errors.append(
+                f"{rel}: `--only {regime}` is not a registered "
+                f"benchmark regime")
+
     for cmd in fenced_commands(text):
         for entry, src_path in CLI_SOURCES.items():
             if entry in cmd:
@@ -126,6 +140,28 @@ def check_file(doc: Path, make_targets, errors):
                                 f"registered benchmark regime")
 
 
+def check_config_reference(errors) -> None:
+    """docs/configuration.md is GENERATED (tools/gen_config_docs.py):
+    regenerate in memory and fail on any drift from the dataclasses —
+    a new/renamed/retyped config field without a doc rebuild is a CI
+    error, which is what keeps the reference complete."""
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import gen_config_docs
+    finally:
+        sys.path.pop(0)
+    target = ROOT / "docs" / "configuration.md"
+    if not target.exists():
+        errors.append("docs/configuration.md is missing — run "
+                      "`python tools/gen_config_docs.py`")
+        return
+    if target.read_text() != gen_config_docs.generate():
+        errors.append(
+            "docs/configuration.md is stale (config dataclasses "
+            "changed) — regenerate with `python tools/gen_config_docs"
+            ".py`")
+
+
 def main() -> int:
     make_targets = set(re.findall(r"^([\w-]+):", (ROOT / "Makefile")
                                   .read_text(), re.M))
@@ -133,6 +169,7 @@ def main() -> int:
     for doc in DOC_FILES:
         if doc.exists():
             check_file(doc, make_targets, errors)
+    check_config_reference(errors)
     if errors:
         print(f"docs-check: {len(errors)} stale reference(s)")
         for e in errors:

@@ -1,0 +1,228 @@
+#!/usr/bin/env python
+"""Generate docs/configuration.md from the config dataclasses.
+
+Parses ``src/repro/configs/base.py`` with the stdlib ``ast`` module (no
+package import, mirroring tools/check_docs.py) and emits one reference
+table per runtime config class — `FedConfig`, `CommConfig`,
+`SchedConfig` — with every field's name, type, default, the
+``repro.launch.train`` flag that sets it (where one exists), and the
+description recovered from the source comments around the field.
+
+The output is DETERMINISTIC: same source in, same bytes out.
+`tools/check_docs.py` regenerates it in memory on every ``make
+docs-check`` and fails CI when the committed ``docs/configuration.md``
+drifts from the dataclasses — add a field and CI will tell you to run
+
+    python tools/gen_config_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CONFIG_SOURCE = ROOT / "src" / "repro" / "configs" / "base.py"
+TRAIN_SOURCE = ROOT / "src" / "repro" / "launch" / "train.py"
+OUT = ROOT / "docs" / "configuration.md"
+
+#: the runtime config classes the reference covers, in document order
+CLASSES = ("FedConfig", "CommConfig", "SchedConfig")
+
+#: fields whose train.py flag does NOT follow the name == flag rule
+FLAG_OVERRIDES = {
+    ("FedConfig", "num_clients"): "clients",
+    ("FedConfig", "total_rounds"): "rounds",
+    ("CommConfig", "use_pallas"): "comm-pallas",
+    ("SchedConfig", "discipline"): "schedule",
+}
+#: fields that must NOT auto-match a same-named train.py flag (the
+#: flag exists but means something else)
+FLAG_DENY = {
+    ("CommConfig", "seed"),      # --seed is the launcher's global RNG
+    ("SchedConfig", "seed"),
+    ("FedConfig", "seed"),
+    ("FedConfig", "schedule"),   # --schedule is SchedConfig.discipline
+}
+
+HEADER = """\
+<!-- GENERATED FILE — do not edit by hand.
+     Source of truth: src/repro/configs/base.py (+ the flag registry in
+     src/repro/launch/train.py).  Regenerate with:
+         python tools/gen_config_docs.py
+     `make docs-check` (tools/check_docs.py) fails CI when this file
+     drifts from the dataclasses. -->
+
+# Configuration reference
+
+Every field of the federated runtime's config dataclasses
+(`repro.configs.base`).  `FedConfig` owns the round (Alg. 1
+hyper-parameters) and embeds one `CommConfig` (the client<->server
+wire model) and one `SchedConfig` (virtual-time round scheduling).
+Model-architecture configs (`ModelConfig` and the zoo under
+`src/repro/configs/`) are intentionally out of scope: they describe
+networks, not the runtime.
+
+Flags column: the `repro.launch.train` CLI flag that sets the field,
+where one exists (the launcher composes the configs; library users
+construct them directly).
+"""
+
+
+def _class_nodes(tree: ast.Module):
+    return {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+
+
+def _comment_text(line: str) -> str:
+    """The comment payload of a source line ('' when none)."""
+    m = re.search(r"#[:]?\s?(.*)$", line)
+    return m.group(1).rstrip() if m else ""
+
+
+def _is_separator(text: str) -> bool:
+    return bool(re.match(r"^\s*-{4,}", text)) or bool(
+        re.match(r"^={4,}", text))
+
+
+def _strip_separators(text: str) -> str:
+    """Drop '---- section ----' decoration, keep any inner words."""
+    return re.sub(r"-{4,}", "", text).strip()
+
+
+def _is_continuation_line(line: str) -> bool:
+    """Whether a full-line comment continues the PREVIOUS field's
+    inline comment (deep `#` column, or deep indentation inside the
+    comment) rather than introducing the next field."""
+    return line.index("#") > 8 or bool(re.match(r"\s*#\s{3,}", line))
+
+
+def _field_description(lines, node: ast.AnnAssign, next_lineno: int) -> str:
+    """Recover a field's doc from the comments around it: the
+    contiguous full-line comment block directly above, the inline
+    comment on the assignment line(s), and continuation comment lines
+    below (before the next field)."""
+    parts = []
+    # comment block immediately above (no blank line in between);
+    # deep-indented lines there continue the previous field, not this
+    above = []
+    i = node.lineno - 2              # 0-based line above the field
+    while i >= 0 and lines[i].strip().startswith("#"):
+        if not _is_continuation_line(lines[i]):
+            above.append(_comment_text(lines[i]))
+        i -= 1
+    for t in reversed(above):
+        if _is_separator(t):
+            continue
+        parts.append(t)
+    # inline comment(s) on the assignment's own line span
+    for ln in range(node.lineno - 1, node.end_lineno):
+        code = lines[ln]
+        if "#" in code:
+            t = _comment_text(code)
+            if t and not _is_separator(t):
+                parts.append(t)
+    # continuation comments below: only DEEP-indented ones (aligned
+    # with the inline-comment column) — a comment block at the field
+    # indentation introduces the NEXT field, not this one
+    ln = node.end_lineno
+    while ln < min(next_lineno - 1, len(lines)):
+        stripped = lines[ln].strip()
+        if not (stripped.startswith("#")
+                and _is_continuation_line(lines[ln])):
+            break
+        t = _comment_text(lines[ln])
+        if t and not _is_separator(t):
+            parts.append(t)
+        ln += 1
+    text = " ".join(p.strip() for p in parts if p.strip())
+    return re.sub(r"\s+", " ", text).strip()
+
+
+def _fields(cls: ast.ClassDef, lines):
+    """(name, type, default, description) per dataclass field."""
+    anns = [n for n in cls.body if isinstance(n, ast.AnnAssign)
+            and isinstance(n.target, ast.Name)]
+    out = []
+    for i, node in enumerate(anns):
+        nxt = anns[i + 1].lineno if i + 1 < len(anns) else (
+            cls.end_lineno + 1)
+        default = ""
+        if node.value is not None:
+            default = ast.unparse(node.value)
+            # field(default_factory=X) reads better as its result
+            m = re.match(r"field\(default_factory=(\w+)\)", default)
+            if m:
+                default = f"{m.group(1)}()"
+        out.append((node.target.id, ast.unparse(node.annotation),
+                    default, _field_description(lines, node, nxt)))
+    return out
+
+
+def _train_flags(train_src: str):
+    """Flags actually registered by repro.launch.train."""
+    return set(re.findall(r'add_argument\(\s*"--([\w-]+)"', train_src))
+
+
+def _flag_for(cls: str, name: str, flags) -> str:
+    if (cls, name) in FLAG_DENY:
+        return ""
+    over = FLAG_OVERRIDES.get((cls, name))
+    if over:
+        return f"--{over}" if over in flags else ""
+    auto = name.replace("_", "-")
+    return f"--{auto}" if auto in flags else ""
+
+
+def _md_escape(text: str) -> str:
+    return text.replace("|", "\\|")
+
+
+def _class_doc(cls: ast.ClassDef) -> str:
+    doc = ast.get_docstring(cls) or ""
+    return doc.split("\n\n")[0].replace("\n", " ").strip()
+
+
+def generate() -> str:
+    src = CONFIG_SOURCE.read_text()
+    lines = src.splitlines()
+    tree = ast.parse(src)
+    nodes = _class_nodes(tree)
+    flags = _train_flags(TRAIN_SOURCE.read_text())
+    chunks = [HEADER]
+    for cls_name in CLASSES:
+        cls = nodes[cls_name]
+        chunks.append(f"\n## `{cls_name}`\n")
+        summary = _class_doc(cls)
+        if summary:
+            chunks.append(f"\n{summary}\n")
+        chunks.append(
+            "\n| field | type | default | train.py flag | description |"
+            "\n| --- | --- | --- | --- | --- |")
+        for name, ann, default, desc in _fields(cls, lines):
+            flag = _flag_for(cls_name, name, flags)
+            chunks.append(
+                f"\n| `{name}` | `{_md_escape(ann)}` "
+                f"| `{_md_escape(default)}` "
+                f"| {f'`{flag}`' if flag else '—'} "
+                f"| {_md_escape(desc) or '—'} |")
+        chunks.append("\n")
+    return "".join(chunks)
+
+
+def main(argv) -> int:
+    text = generate()
+    if "--check" in argv:
+        if not OUT.exists() or OUT.read_text() != text:
+            print(f"{OUT.relative_to(ROOT)} is stale — regenerate with "
+                  f"`python tools/gen_config_docs.py`")
+            return 1
+        print(f"{OUT.relative_to(ROOT)} is up to date")
+        return 0
+    OUT.write_text(text)
+    print(f"wrote {OUT.relative_to(ROOT)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
