@@ -3,7 +3,7 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check docs-gen
+.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check docs-gen obs-smoke
 
 test-fast:
 	$(PY) -m pytest -q
@@ -42,6 +42,16 @@ bench-sched-smoke:
 # trajectory in BENCH_engine.json
 bench-engine-smoke:
 	$(PY) -m benchmarks.run --only engine --smoke --out ""
+
+# CI gate on the obs pipeline: a 2-round scheduled run with Sophia
+# health probes writing schema-validated JSONL, then re-validate every
+# record (manifest header, field sets, exact-int64 byte counters)
+obs-smoke:
+	$(PY) -m repro.launch.train --arch minicpm-2b --reduced --rounds 2 \
+		--clients 2 --local-iters 1 --batch 1 --seq 16 \
+		--schedule semisync --latency-profile straggler \
+		--probes --obs-log /tmp/obs_smoke.jsonl
+	python tools/obs_report.py /tmp/obs_smoke.jsonl --validate
 
 example-comm:
 	$(PY) examples/comm_compression.py

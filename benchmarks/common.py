@@ -79,8 +79,8 @@ def run_federated(model: str, dataset: str, optimizer: str, *,
     teb = syn.client_batches(jax.random.fold_in(key, 3), x, y, te, 128)
     acc_fn = jax.jit(lambda p: jnp.mean(jax.vmap(
         lambda b: task.accuracy(p, b))(teb)))
-    # exact per-round per-stream bytes from the accounting model (the
-    # in-metrics float32 mirror loses precision above ~16M params)
+    # exact per-round per-stream bytes from the accounting model; the
+    # obs record schema carries these as exact int64 columns
     n_params = num_params(model)
     wire = comm_accounting.round_bytes(fed.comm, n_params, clients)
     per_round_up = wire["uplink_bytes"]

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.configs.base import CommConfig, SchedConfig
+from repro import obs
+from repro.configs.base import CommConfig, ObsConfig, SchedConfig
 from repro.metrics import energy
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -306,36 +307,46 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     resident tree engine, frozen; "current" = this checkout) and the
     run FAILS if a gated regime's op count (or a residency gate)
     regresses — `make bench-engine-smoke` runs the same gates in CI
-    (`--smoke`: op counts + residency accounting only, no timing, no
-    file write).
+    (`--smoke`: few-iteration timing, no file write).  Wall-clock
+    drift is gated too, tolerance-banded: a gated regime failing
+    ``us_per_round <= REPRO_US_BAND x committed`` (default band 4.0,
+    loose on purpose — it catches a lost donation or an un-jitted
+    round, not machine jitter) fails the run.
     """
     clients = 8 if paper_scale else 4
-    iters = 0 if smoke else (20 if not paper_scale else 5)
-    # regime -> (comm config, fed.use_pallas, gated, packed, donate):
-    # op-count acceptance applies to the kernel path; the `-ref`
-    # regime tracks the pure-JAX wall-clock alongside.
+    # --smoke now times a few iterations too: the us_per_round
+    # tolerance-band gate below needs a current number to compare
+    # against the committed trajectory
+    iters = 3 if smoke else (20 if not paper_scale else 5)
+    # regime -> (comm config, fed.use_pallas, gated, packed, donate,
+    # probes): op-count acceptance applies to the kernel path; the
+    # `-ref` regime tracks the pure-JAX wall-clock alongside.
     regimes = {
         "direct-pallas": (CommConfig(use_pallas=True), True, True,
-                          False, False),
+                          False, False, False),
         "uplink-int8-pallas": (
             CommConfig(compressor="int8", use_pallas=True), True, True,
-            False, False),
+            False, False, False),
         "bidir-int8-pallas": (
             CommConfig(compressor="int8", downlink_compressor="int8",
                        hessian_compressor="int4", use_pallas=True),
-            True, True, False, False),
+            True, True, False, False, False),
         "uplink-int8-ref": (CommConfig(compressor="int8"), False, False,
-                            False, False),
+                            False, False, False),
         # device-residency regimes: params packed between rounds,
         # state donated to the jit (in-place resident buffers)
         "packed-donated-pallas": (
-            CommConfig(use_pallas=True), True, True, True, True),
+            CommConfig(use_pallas=True), True, True, True, True, False),
         "packed-donated-int8-pallas": (
             CommConfig(compressor="int8", use_pallas=True), True, True,
-            True, True),
+            True, True, False),
         "packed-donated-bf16-pallas": (
             CommConfig(use_pallas=True, state_dtype="bfloat16"), True,
-            True, True, True),
+            True, True, True, False),
+        # Sophia health probes ON (repro.obs.probes): must keep the
+        # layout-op count and donation contract of its probes-off twin
+        "packed-donated-probes-pallas": (
+            CommConfig(use_pallas=True), True, True, True, True, True),
     }
     import jax as _jax
     from repro.core.fed import FedEngine
@@ -351,10 +362,12 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     rng = _jax.random.fold_in(key, 3)
 
     results = {}
-    for name, (comm, use_pallas, gated, packed, donate) in regimes.items():
+    for name, (comm, use_pallas, gated, packed, donate,
+               probes) in regimes.items():
         fed = common.make_fed("fed_sophia", clients=clients, local_iters=3,
                               lr=0.02, tau=2, rounds=16, comm=comm)
-        fed = dataclasses.replace(fed, use_pallas=use_pallas)
+        fed = dataclasses.replace(fed, use_pallas=use_pallas,
+                                  obs=ObsConfig(probes=probes))
         engine = FedEngine(task, fed)
         state = engine.init(_jax.random.fold_in(key, 4))
         if packed:
@@ -387,11 +400,18 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
             us = (time.perf_counter() - t0) / iters * 1e6
         results[name] = {"layout_ops": ops, "us_per_round": us,
                          "gated": gated, "packed": packed,
-                         "donate": donate,
+                         "donate": donate, "probes": probes,
                          "state_dtype": comm.state_dtype,
                          "resident_state_bytes": resident,
                          "aliased_bytes": aliased,
                          "state_copy_bytes": copy_bytes}
+        # every row doubles as a schema-validated obs `bench` record
+        rec = {"record": "bench", "name": name, "layout_ops": ops,
+               "state_copy_bytes": copy_bytes,
+               "resident_state_bytes": resident}
+        if us is not None:
+            rec["us_per_round"] = us
+        obs.validate_record(rec)
 
     hist = {}
     if os.path.exists(BENCH_ENGINE_JSON):
@@ -411,6 +431,13 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     baseline = hist.get("baseline") or copy.deepcopy(results)
     committed = hist.get("current") or baseline
 
+    # wall-clock drift band (ROADMAP §2): a gated regime's current
+    # us_per_round may not exceed REPRO_US_BAND x the committed
+    # trajectory's timing.  The band is deliberately loose — it exists
+    # to catch an accidental 10x (a lost donation, an un-jitted round),
+    # not CI machine jitter.  0 disables; skipped when either side has
+    # no timing recorded.
+    us_band = float(os.environ.get("REPRO_US_BAND", "4.0"))
     regressions = []
     for name, r in results.items():
         base_ops = baseline.get(name, {}).get("layout_ops", r["layout_ops"])
@@ -430,6 +457,13 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
             regressions.append(
                 f"{name}: layout_ops {r['layout_ops']} > committed "
                 f"{gate_ops}")
+        gate_us = committed.get(name, {}).get("us_per_round")
+        if (us_band > 0 and r["gated"] and r["us_per_round"] and gate_us
+                and r["us_per_round"] > us_band * gate_us):
+            regressions.append(
+                f"{name}: us_per_round {r['us_per_round']:.0f} exceeds "
+                f"{us_band:.1f}x the committed {gate_us:.0f} "
+                f"(REPRO_US_BAND overrides the band)")
         # residency gates (static properties of the compiled round —
         # identical in --smoke and full runs)
         if r["donate"] and r["state_copy_bytes"] != 0:
@@ -437,6 +471,16 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
                 f"{name}: donation left {r['state_copy_bytes']} bytes "
                 f"of resident state copied per round (want 0 — every "
                 f"state buffer aliased in place)")
+    # probes gate: enabling the Sophia health probes must not add a
+    # single layout op vs the probes-off twin (probe math is
+    # elementwise/reduction only — docs/observability.md)
+    probed = results.get("packed-donated-probes-pallas")
+    twin = results.get("packed-donated-pallas")
+    if probed and twin and probed["layout_ops"] != twin["layout_ops"]:
+        regressions.append(
+            f"packed-donated-probes-pallas: layout_ops "
+            f"{probed['layout_ops']} != probes-off twin "
+            f"{twin['layout_ops']} (probes must stay layout-neutral)")
     # bf16 residency gate: the bf16 regime must roughly halve the
     # resident-state HBM of its fp32 twin
     bf16 = results.get("packed-donated-bf16-pallas")

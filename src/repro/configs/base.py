@@ -298,6 +298,26 @@ class SchedConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Structured telemetry (repro.obs).
+
+    ``probes=True`` adds device-side Sophia health metrics — clip
+    fraction of the Eq. 11 step, m/h EMA norms, h-EMA staleness and
+    the cumulative GNB refresh count — to the round metrics, computed
+    INSIDE the jitted round with no extra host syncs (requires
+    ``optimizer="fed_sophia"`` with ``persistent_client_state``; the
+    probed round is bitwise identical in state to the unprobed one).
+    Sinks, the record schema and the run manifest live in `repro.obs`;
+    see docs/observability.md for the metric catalogue.
+    """
+    probes: bool = False              # device-side Sophia health probes
+    #                                   in the round metrics dict
+    flush_every: int = 10             # rounds between metric-buffer
+    #                                   flushes (host syncs) in obs runs
+    ring_capacity: int = 1024         # in-memory ring sink capacity
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """Federated runtime configuration (Alg. 1 hyper-parameters)."""
     num_clients: int = 32
@@ -342,6 +362,10 @@ class FedConfig:
     # disciplines, staleness weighting) — consumed by repro.sched, not
     # by the engine itself; the default is today's synchronous rounds
     sched: SchedConfig = field(default_factory=SchedConfig)
+    # structured telemetry (record schema, sinks, Sophia health probes)
+    # — see repro.obs and docs/observability.md; the default is fully
+    # off (no probe ops in the traced round)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 @dataclass(frozen=True)

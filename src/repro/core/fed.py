@@ -91,6 +91,7 @@ from repro.comm.compressors import (make_compressor, make_stream_compressor,
 from repro.configs.base import FedConfig
 from repro.core import sophia
 from repro.core.gnb import gnb_estimate
+from repro.obs import probes as obs_probes
 from repro.core.schedules import lr_at_round
 from repro.utils.tree import (tree_count_params, tree_sq_norm,
                               tree_zeros_like)
@@ -136,6 +137,13 @@ class FedEngine:
             raise ValueError(
                 "the hessian comm stream aggregates the Sophia h-EMA: it "
                 "requires optimizer='fed_sophia' with "
+                "persistent_client_state=True")
+        if fed.obs.probes and not (
+                fed.optimizer == "fed_sophia"
+                and fed.persistent_client_state):
+            raise ValueError(
+                "ObsConfig.probes reads the persistent Sophia m/h EMAs: "
+                "it requires optimizer='fed_sophia' with "
                 "persistent_client_state=True")
         # FSDP (sequential strategy): params are STORED sharded over the
         # data axes; each use must see them model-only-sharded, otherwise
@@ -695,7 +703,30 @@ class FedEngine:
         for k in ("uplink_bytes", "downlink_bytes", "hessian_uplink_bytes",
                   "hessian_downlink_bytes", "total_bytes"):
             metrics[k] = jnp.asarray(wire[k], jnp.float32)
+        if fed.obs.probes:
+            # Sophia health probes, computed INSIDE this jit: pure
+            # elementwise/reduction reads of the state the round just
+            # produced — no layout ops, no extra host syncs, and the
+            # returned state is bitwise identical to the unprobed round
+            # (pinned by tests/test_obs.py)
+            metrics.update(obs_probes.sophia_health(
+                state["client_opt"], round_idx, fed, rt.spec.total))
         return state, metrics
+
+    def probe_metrics(self, state) -> Dict[str, jnp.ndarray]:
+        """The Sophia health probes of `repro.obs.probes` for a state
+        OUTSIDE the round jit — the virtual-time scheduler applies
+        aggregates through its own jits, so it probes the post-apply
+        state with this (jittable; requires the stateful engine)."""
+        if not self._stateful():
+            raise ValueError(
+                "probe_metrics reads the persistent Sophia m/h EMAs: "
+                "it requires optimizer='fed_sophia' with "
+                "persistent_client_state=True")
+        rt = self.runtime_for(state["params"])
+        return obs_probes.sophia_health(
+            state["client_opt"], state["round"] - 1, self.fed,
+            rt.spec.total)
 
     def _round_direct(self, state, batches, client_rngs, round_idx, lr, rt):
         """Original aggregation: server model <- mean of client params —

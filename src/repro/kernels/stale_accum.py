@@ -65,13 +65,15 @@ def stale_accum_flat(wires, weights, inv_norm, *, interpret: bool = True):
     grid = (pl.cdiv(R, br), pl.cdiv(C, bc), K)
     w2 = jnp.asarray(weights, jnp.float32).reshape(K, 1)
     s2 = jnp.asarray(inv_norm, jnp.float32).reshape(1, 1)
-    return pl.pallas_call(
-        functools.partial(_stale_accum_kernel, num_wires=K),
-        grid=grid,
-        in_specs=[pl.BlockSpec((1, br, bc), lambda i, j, k: (k, i, j)),
-                  pl.BlockSpec((1, 1), lambda i, j, k: (k, 0)),
-                  pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))],
-        out_specs=pl.BlockSpec((br, bc), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
-        interpret=interpret,
-    )(wires, w2, s2)
+    # named scope: annotated span in jax.profiler traces; metadata only
+    with jax.named_scope("pallas:stale_accum_flat"):
+        return pl.pallas_call(
+            functools.partial(_stale_accum_kernel, num_wires=K),
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, br, bc), lambda i, j, k: (k, i, j)),
+                      pl.BlockSpec((1, 1), lambda i, j, k: (k, 0)),
+                      pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))],
+            out_specs=pl.BlockSpec((br, bc), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+            interpret=interpret,
+        )(wires, w2, s2)

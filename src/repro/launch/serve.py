@@ -11,7 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.models import transformer as T
 
 
@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace (annotated "
+                         "prefill/decode spans) into this directory")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -43,10 +46,13 @@ def main():
         prompt = {"tokens": jax.random.randint(key, (B, P), 0,
                                                cfg.vocab_size)}
 
+    prof = obs.profile_trace(args.profile_dir)
+    prof.__enter__()
     t0 = time.time()
-    logits, cache, _ = T.forward(params, cfg, prompt, want_cache=True,
-                                 remat=False)
-    cache = T.prefill_to_decode_cache(cfg, cache, P, max_len)
+    with obs.annotate("prefill"):
+        logits, cache, _ = T.forward(params, cfg, prompt, want_cache=True,
+                                     remat=False)
+        cache = T.prefill_to_decode_cache(cfg, cache, P, max_len)
     print(f"prefill ({B}x{P}): {time.time() - t0:.2f}s")
 
     decode = jax.jit(lambda p, b, c, pos: T.decode_step(p, cfg, b, c, pos))
@@ -60,11 +66,13 @@ def main():
             step_in = {"embeds": params["embed"][tok][:, None, :]}
         else:
             step_in = {"tokens": tok[:, None]}
-        lg, cache = decode(params, step_in, cache, pos)
+        with obs.annotate("decode_step"):
+            lg, cache = decode(params, step_in, cache, pos)
         tok = T.sample_labels(jax.random.fold_in(key, 100 + i),
                               lg[:, -1] / args.temperature, cfg.vocab_size)
         out_tokens.append(tok)
     dt = time.time() - t0
+    prof.__exit__(None, None, None)
     toks = jnp.stack(out_tokens, axis=1)
     print(f"decoded {G} tokens x {B} seqs in {dt:.2f}s "
           f"({G * B / max(dt, 1e-9):.1f} tok/s)")

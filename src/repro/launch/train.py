@@ -15,14 +15,16 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import ckpt
 from repro.comm import round_bytes
 from repro.comm import flat as cflat
 from repro.configs.base import (LATENCY_PROFILES, SCHED_DISCIPLINES,
-                                CommConfig, FedConfig, SchedConfig)
+                                CommConfig, FedConfig, ObsConfig,
+                                SchedConfig)
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
+from repro.metrics import energy
 from repro.models import transformer as T
 from repro.sched import VirtualScheduler
 
@@ -92,6 +94,20 @@ def main():
     ap.add_argument("--latency-profile", default="uniform",
                     choices=LATENCY_PROFILES,
                     help="per-client latency model of the virtual clock")
+    # structured telemetry (repro.obs; docs/observability.md)
+    ap.add_argument("--probes", action="store_true",
+                    help="device-side Sophia health probes in the round "
+                         "metrics (clip fraction, m/h norms, curvature "
+                         "freshness; fed_sophia only)")
+    ap.add_argument("--obs-log", default="",
+                    help="write schema-validated JSONL telemetry to this "
+                         "path (+ a .manifest.json on exit)")
+    ap.add_argument("--obs-flush-every", type=int, default=10,
+                    help="rounds per device-metrics flush (host syncs "
+                         "only at this boundary in obs runs)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (annotated round/kernel spans)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", action="store_true",
                     help="restore params from --ckpt-dir first "
@@ -122,7 +138,9 @@ def main():
                     optimizer=args.optimizer, lr=args.lr, tau=args.tau,
                     total_rounds=args.rounds, use_pallas=args.use_pallas,
                     schedule=over.get("schedule", "const"), comm=comm,
-                    sched=sched)
+                    sched=sched,
+                    obs=ObsConfig(probes=args.probes,
+                                  flush_every=args.obs_flush_every))
     task = T.LMTask(cfg)
     engine = FedEngine(task, fed)
     key = jax.random.PRNGKey(args.seed)
@@ -147,8 +165,8 @@ def main():
     round_fn = engine.round_fn(donate=not args.tree_state)
 
     n_params = engine.num_params(state)
-    # exact integers from the accounting model (the in-metrics float32
-    # mirror loses precision above ~16M params)
+    # exact integers from the accounting model; the obs record schema
+    # (repro.obs.schema) carries them downstream as exact int64 columns
     wire = round_bytes(comm, n_params, fed.num_clients)
     uplink_round = wire["uplink_bytes"]
     total_round = wire["total_bytes"]
@@ -172,6 +190,32 @@ def main():
           f"{comm.state_dtype} ({rt.spec.total:,} coords + "
           f"{rt.spec.padded - rt.spec.total} pad), "
           f"between-round residency: {residency}")
+
+    # per-round energy/carbon (paper Eq. 13-14 over the EXACT wire
+    # bytes; repro.metrics.energy): static in the config, so priced once
+    chan = energy.ChannelModel()
+    comm_J = energy.tx_energy_joules(wire["total_bytes"], chan)
+    # compute side: ~6*N FLOPs per trained token (fwd+bwd), J local
+    # iterations per participant per round
+    flops_iter = 6.0 * n_params * args.batch * args.seq
+    compute_J = (energy.ComputeModel().energy_per_iteration(flops_iter)
+                 * fed.local_iters * wire["participants"])
+    round_J = comm_J + compute_J
+    round_carbon = energy.footprint_kg_co2(round_J)
+
+    recorder = None
+    if args.obs_log:
+        recorder = obs.RunRecorder(
+            args.obs_log, ring_capacity=fed.obs.ring_capacity,
+            meta={"arch": cfg.name, "params": n_params,
+                  "clients": fed.num_clients,
+                  "local_iters": fed.local_iters,
+                  "optimizer": fed.optimizer,
+                  "compressor": comm.compressor,
+                  "schedule": args.schedule, "probes": fed.obs.probes,
+                  "residency": residency,
+                  "state_dtype": comm.state_dtype})
+
     def make_batches(r):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,
@@ -183,35 +227,99 @@ def main():
                 dtype=T.param_dtype(cfg)), "labels": batches["labels"]}
         return batches
 
-    if args.schedule == "sync":
-        # the existing synchronous loop, bit-identical to earlier builds
-        for r in range(args.rounds):
+    spans = obs.SpanLog()
+
+    def round_line(r, loss, lr, dt, row=None):
+        clip = (f" clip={row['clip_fraction']:.3f}"
+                if row and "clip_fraction" in row else "")
+        return (f"round {r:3d} loss={loss:.4f} lr={lr:.2e} "
+                f"uplink={uplink_round / 2**20:.2f}MiB "
+                f"total={total_round / 2**20:.2f}MiB "
+                f"(cum {(r + 1) * total_round / 2**20:.2f}MiB)"
+                f"{clip} ({dt:.1f}s)")
+
+    def emit_round(r, row, wall_s):
+        rec = {"record": "round", "round": r, "loss": row["loss"],
+               "lr": row["lr"], "participants": wire["participants"],
+               "cum_total_bytes": (r + 1) * total_round,
+               "energy_J": round_J, "comm_J": comm_J,
+               "compute_J": compute_J, "carbon_kg": round_carbon,
+               "wall_s": wall_s}
+        for k in ("uplink_bytes", "downlink_bytes",
+                  "hessian_uplink_bytes", "hessian_downlink_bytes",
+                  "total_bytes"):
+            rec[k] = wire[k]
+        for k in obs.PROBE_METRICS:
+            if k in row:
+                rec[k] = row[k]
+        recorder.emit(rec)
+
+    with obs.profile_trace(args.profile_dir):
+        if args.schedule == "sync" and recorder is None:
+            # the existing synchronous loop, bit-identical to earlier
+            # builds (the per-round host sync is the loss print itself)
+            for r in range(args.rounds):
+                t0 = time.time()
+                with spans.span("round"):
+                    state, metrics = round_fn(state, make_batches(r),
+                                              jax.random.fold_in(key, r))
+                print(round_line(r, float(metrics["loss"]),
+                                 float(metrics["lr"]),
+                                 time.time() - t0), flush=True)
+        elif args.schedule == "sync":
+            # obs loop: round metrics (incl. the in-jit Sophia health
+            # probes) accumulate in a device-side buffer; the host
+            # syncs, records and prints only at the flush boundary —
+            # strictly FEWER host syncs than the plain loop
+            acc = obs.MetricsAccumulator(fed.obs.flush_every)
+            pending = []
             t0 = time.time()
-            state, metrics = round_fn(state, make_batches(r),
-                                      jax.random.fold_in(key, r))
-            print(f"round {r:3d} loss={float(metrics['loss']):.4f} "
-                  f"lr={float(metrics['lr']):.2e} "
-                  f"uplink={uplink_round / 2**20:.2f}MiB "
-                  f"total={total_round / 2**20:.2f}MiB "
-                  f"(cum {(r + 1) * total_round / 2**20:.2f}MiB) "
-                  f"({time.time() - t0:.1f}s)",
-                  flush=True)
-    else:
-        # virtual-time event loop (repro.sched): --rounds counts
-        # aggregation events; the printed time is SIMULATED seconds.
-        # The apply jit donates the state unless --tree-state.
-        scheduler = VirtualScheduler(engine, make_batches,
-                                     donate=not args.tree_state)
-        state, trace = scheduler.run(state, args.rounds, key)
-        for ev in trace.events:
-            stale = max(ev.staleness) if ev.staleness else 0
-            print(f"event {ev.version:3d} t={ev.time:9.2f}s "
-                  f"loss={ev.loss:.4f} clients={list(ev.clients)} "
-                  f"max_stale={stale} "
-                  f"cum={ev.cum_bytes / 2**20:.2f}MiB", flush=True)
-        print(f"{args.schedule}: {len(trace.events)} events, "
-              f"simulated {trace.final_time:.2f}s, "
-              f"{trace.total_bytes / 2**20:.2f}MiB on the wire")
+            for r in range(args.rounds):
+                with spans.span("round"):
+                    state, metrics = round_fn(state, make_batches(r),
+                                              jax.random.fold_in(key, r))
+                acc.add(metrics)
+                pending.append(r)
+                if len(acc) == fed.obs.flush_every or r == args.rounds - 1:
+                    with spans.span("flush"):
+                        rows = acc.flush()
+                    dt = (time.time() - t0) / len(pending)
+                    for rr, row in zip(pending, rows):
+                        emit_round(rr, row, dt)
+                        print(round_line(rr, row["loss"], row["lr"], dt,
+                                         row), flush=True)
+                    pending = []
+                    t0 = time.time()
+        else:
+            # virtual-time event loop (repro.sched): --rounds counts
+            # aggregation events; the printed time is SIMULATED seconds.
+            # The apply jit donates the state unless --tree-state.
+            scheduler = VirtualScheduler(engine, make_batches,
+                                         donate=not args.tree_state)
+            state, trace = scheduler.run(state, args.rounds, key)
+            for ev in trace.events:
+                stale = max(ev.staleness) if ev.staleness else 0
+                clip = (f" clip={ev.probes['clip_fraction']:.3f}"
+                        if ev.probes else "")
+                print(f"event {ev.version:3d} t={ev.time:9.2f}s "
+                      f"loss={ev.loss:.4f} clients={list(ev.clients)} "
+                      f"max_stale={stale} "
+                      f"cum={ev.cum_bytes / 2**20:.2f}MiB{clip}",
+                      flush=True)
+            print(f"{args.schedule}: {len(trace.events)} events, "
+                  f"simulated {trace.final_time:.2f}s, "
+                  f"{trace.total_bytes / 2**20:.2f}MiB on the wire")
+            if recorder is not None:
+                # structured SchedEvent records (exact per-stream int64
+                # byte counters, staleness histogram, per-event
+                # energy), then the scheduler's own span timers
+                recorder.emit_all(trace.to_records(channel=chan))
+                recorder.emit_all(scheduler.spans.records())
+    if recorder is not None:
+        recorder.emit_all(spans.records())
+        recorder.close()
+        print(f"wrote {recorder.counts} obs records to {args.obs_log} "
+              f"(+ {recorder.manifest_path})")
     if args.ckpt_dir:
         extra = {"arch": args.arch,
                  "wire": engine.wire_headers(state["params"])}

@@ -34,6 +34,20 @@ class ChannelModel:
         return bits / self.rate() * self.p_t
 
 
+def tx_energy_joules(n_bytes: int,
+                     channel: ChannelModel = ChannelModel()) -> float:
+    """Eq. 14's transmission-energy term over EXACT wire bytes.
+
+    ``tx_energy_per_round`` prices a raw 32-bit parameter vector; the
+    comm layer's compressed streams transmit far fewer bytes, so
+    per-round telemetry (docs/observability.md) prices the accounting
+    model's exact per-stream byte counts instead:
+
+        E_t = 8 * n_bytes / R * P_t,   R = B log2(1 + P_t/(d B N0))
+    """
+    return 8.0 * n_bytes / channel.rate() * channel.p_t
+
+
 @dataclass(frozen=True)
 class ComputeModel:
     """Per-local-iteration energy: FLOPs / (device FLOP/s) * device power."""

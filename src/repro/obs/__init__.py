@@ -1,0 +1,32 @@
+"""Structured telemetry for the federated runtime (docs/observability.md).
+
+The subsystem has four layers, each usable on its own:
+
+* `repro.obs.schema`  — the versioned record schema: a registry of
+  metric names/dtypes/units, the per-record-type field sets, and
+  `validate_record` (exact int64 byte counters, no silent coercion).
+* `repro.obs.sinks`   — JSONL file sink, bounded in-memory ring, and
+  `RunRecorder`, which validates every record, fans it out to both
+  sinks and writes a CI-consumable run manifest on close.
+* `repro.obs.probes`  — device-side Sophia health metrics (clip
+  fraction, m/h norms, curvature freshness), computed INSIDE the
+  jitted round with no extra host syncs, plus `MetricsAccumulator`
+  (`repro.obs.buffer`), the packed device-side metrics buffer that
+  defers the host sync to the eval/checkpoint flush boundary.
+* `repro.obs.spans`   — host-side span timers correlated with the
+  scheduler's virtual clock, and the opt-in `jax.profiler` trace
+  hooks (`--profile-dir` in `repro.launch.train` / `serve`).
+"""
+from repro.obs.buffer import MetricsAccumulator
+from repro.obs.probes import PROBE_METRICS, sophia_health
+from repro.obs.schema import (SCHEMA_VERSION, ObsSchemaError, describe,
+                              fingerprint, validate_record)
+from repro.obs.sinks import JsonlSink, RingSink, RunRecorder
+from repro.obs.spans import SpanLog, annotate, profile_trace
+
+__all__ = [
+    "SCHEMA_VERSION", "ObsSchemaError", "describe", "fingerprint",
+    "validate_record", "JsonlSink", "RingSink", "RunRecorder",
+    "MetricsAccumulator", "PROBE_METRICS", "sophia_health",
+    "SpanLog", "annotate", "profile_trace",
+]

@@ -1,0 +1,71 @@
+"""Packed device-side metrics buffer (docs/observability.md).
+
+The round metrics dict (`FedEngine.round`) is a handful of float32
+device scalars per round.  Calling ``float(...)`` on them every round
+forces a host sync per metric per round; `MetricsAccumulator` instead
+stores each round's scalars into one preallocated (capacity, N)
+device buffer — enqueue-only device work, nothing is fetched — and
+transfers the whole window in ONE device->host copy at `flush`, the
+existing eval/checkpoint boundary.  Probed obs runs therefore sync
+the host strictly less often than the plain print loop, not more.
+
+The donation contract is untouched: the accumulator only holds the
+metrics OUTPUT of the round jit (fresh buffers, never the donated
+state argument).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MetricsAccumulator:
+    """Accumulates scalar-metric dicts on device; flushes as floats.
+
+    The metric name set is frozen by the first `add` (every round
+    emits the same dict shape); rows beyond ``capacity`` without a
+    flush are a caller bug and raise.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._names: tuple = ()
+        self._buf = None
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def add(self, metrics: Dict[str, jnp.ndarray]) -> None:
+        """Store one round's scalar metrics — device-side only (the
+        stack + row store dispatch asynchronously; no host sync)."""
+        if self._buf is None:
+            self._names = tuple(sorted(metrics))
+            self._buf = jnp.zeros((self.capacity, len(self._names)),
+                                  jnp.float32)
+        elif tuple(sorted(metrics)) != self._names:
+            raise ValueError(
+                f"metric names changed mid-run: "
+                f"{sorted(metrics)} != {list(self._names)}")
+        if self._n >= self.capacity:
+            raise ValueError(
+                f"metrics buffer full ({self.capacity} rows) — flush() "
+                f"at the eval/checkpoint boundary first")
+        row = jnp.stack([jnp.asarray(metrics[k], jnp.float32).reshape(())
+                         for k in self._names])
+        self._buf = self._buf.at[self._n].set(row)
+        self._n += 1
+
+    def flush(self) -> List[Dict[str, float]]:
+        """ONE device->host transfer: the buffered rows as plain-float
+        dicts, in insertion order.  Resets the buffer."""
+        if not self._n:
+            return []
+        host = np.asarray(jax.device_get(self._buf[:self._n]))
+        self._n = 0
+        return [dict(zip(self._names, map(float, row))) for row in host]

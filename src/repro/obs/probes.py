@@ -1,0 +1,75 @@
+"""Device-side Sophia health probes (docs/observability.md).
+
+`sophia_health` turns the persistent per-client Sophia state into the
+diagnostic scalars the paper's claims ride on — how often the Eq. 11
+clip binds, how large the m/h EMAs run, and how fresh the GNB
+curvature estimate is.  Everything here is elementwise/reduction math
+over buffers the round already produced:
+
+* computed INSIDE the jitted round (`FedEngine.round` appends the
+  probe scalars to the round metrics when ``ObsConfig.probes``) with
+  zero extra host syncs — the scalars stay on device until the caller
+  flushes them (`repro.obs.buffer.MetricsAccumulator`);
+* pure reads of the round's outputs: the probed round's ``state`` is
+  bitwise identical to the unprobed one (pinned by tests/test_obs.py);
+* no layout primitives (concatenate/slice/pad), so the gated
+  layout-op counts of `benchmarks/run.py --only engine` are unchanged.
+
+The clip fraction replays the Eq. 11 decision from the final EMAs:
+a coordinate was clipped iff ``|m / max(h, eps)| >= rho``.  The packed
+wire buffers carry a zero pad tail (`repro.comm.flat`) where m = h = 0
+gives |0/eps| < rho — pad coordinates never count as clipped, and the
+fraction divides by the TRUE coordinate count, not the padded one.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+
+#: the metric names `sophia_health` emits, in the registry
+#: (`repro.obs.schema.METRICS`) — sinks and reports key off this
+PROBE_METRICS = ("clip_fraction", "m_norm", "h_norm", "h_staleness",
+                 "gnb_refreshes")
+
+
+def sophia_health(opt, round_idx, fed: FedConfig,
+                  total: int) -> Dict[str, jnp.ndarray]:
+    """Health scalars from a `SophiaState` of wire-layout buffers.
+
+    ``opt.m`` / ``opt.h`` are (rows, cols) buffers or per-client
+    (C, rows, cols) stacks (any resident dtype — upcast to fp32 for
+    the reductions); ``round_idx`` is the 0-based round the EMAs were
+    last updated in (traced or static); ``total`` the true coordinate
+    count of the layout (pad excluded).  Returns float32 scalars —
+    pure reads, no layout ops, no host syncs.
+    """
+    m = opt.m.astype(jnp.float32)
+    h = opt.h.astype(jnp.float32)
+    C = m.shape[0] if m.ndim == 3 else 1
+    n = C * total
+    # Eq. 11 replay: was the preconditioned step at the +-rho bound?
+    # float32-accumulated count: exact below ~2^24 clipped coordinates
+    # per client, a <1e-7 relative error beyond — fine for a fraction.
+    at_bound = jnp.abs(m / jnp.maximum(h, fed.eps)) >= fed.rho
+    clip_fraction = jnp.sum(at_bound, dtype=jnp.float32) / n
+    # RMS over clients of the per-client L2 norms:
+    # sqrt(mean_c ||x_c||^2) — one reduction, no per-client stacking
+    m_norm = jnp.sqrt(jnp.sum(m * m) / C)
+    h_norm = jnp.sqrt(jnp.sum(h * h) / C)
+    # curvature freshness: the GNB estimator refreshes every tau
+    # refresh-units (rounds or local steps, FedConfig.hessian_every_
+    # unit); staleness is the sawtooth position after this round's
+    # last update, refreshes the cumulative estimator invocations
+    r = jnp.asarray(round_idx, jnp.int32)
+    if fed.hessian_every_unit == "round":
+        last = r
+    else:                       # step mode: J local steps per round
+        last = (r + 1) * fed.local_iters - 1
+    h_staleness = (last % fed.tau).astype(jnp.float32)
+    gnb_refreshes = (last // fed.tau + 1).astype(jnp.float32)
+    return {"clip_fraction": clip_fraction, "m_norm": m_norm,
+            "h_norm": h_norm, "h_staleness": h_staleness,
+            "gnb_refreshes": gnb_refreshes}

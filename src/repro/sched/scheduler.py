@@ -53,12 +53,20 @@ from repro.comm import flat as cflat
 from repro.configs.base import SCHED_DISCIPLINES
 from repro.core.schedules import lr_at_round
 from repro.kernels import INTERPRET as _INTERPRET
+from repro.obs.spans import SpanLog
 from repro.sched import latency
 
 
 @dataclasses.dataclass(frozen=True)
 class SchedEvent:
-    """One aggregation event of the virtual clock."""
+    """One aggregation event of the virtual clock.
+
+    Byte counters are EXACT Python ints from the accounting model
+    (`repro.comm.accounting.stream_bytes`) — ``cum_bytes`` is the
+    all-streams total and always equals the sum of the four per-stream
+    counters; ``probes`` carries the Sophia health scalars
+    (`repro.obs.probes`) when the engine runs with
+    ``ObsConfig.probes``."""
     time: float               # virtual seconds at which it was applied
     version: int              # server model version it produced
     kind: str                 # "round" (sync) | "aggregate"
@@ -68,6 +76,13 @@ class SchedEvent:
     loss: float               # mean local-training loss of the arrivals
     cum_bytes: int            # cumulative wire bytes, all streams
     eval_loss: Optional[float] = None
+    # exact cumulative per-stream wire bytes (all = 0 only before the
+    # first dispatch)
+    cum_uplink_bytes: int = 0
+    cum_downlink_bytes: int = 0
+    cum_hessian_uplink_bytes: int = 0
+    cum_hessian_downlink_bytes: int = 0
+    probes: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -99,6 +114,88 @@ class SchedTrace:
     def bytes_to_target(self, target_loss: float) -> Optional[int]:
         ev = self._target_event(target_loss)
         return None if ev is None else ev.cum_bytes
+
+    def staleness_hist(self) -> Dict[int, int]:
+        """staleness value -> arrival count, over the whole run (the
+        per-discipline staleness histogram of docs/observability.md)."""
+        hist: Dict[int, int] = {}
+        for ev in self.events:
+            for t in ev.staleness:
+                hist[t] = hist.get(t, 0) + 1
+        return hist
+
+    def to_records(self, channel=None) -> List[Dict[str, Any]]:
+        """The trace as obs schema records: one ``sched_event`` per
+        event (plus its probe scalars, when present) and one final
+        ``sched_summary`` with the staleness histogram.  With a
+        `repro.metrics.energy.ChannelModel`, each event also carries
+        the transmission energy/carbon of its byte DELTA at the
+        Shannon rate.  `from_records` inverts this exactly."""
+        from repro.metrics import energy as _energy
+        recs: List[Dict[str, Any]] = []
+        prev_bytes = 0
+        for ev in self.events:
+            r: Dict[str, Any] = {
+                "record": "sched_event", "time_s": ev.time,
+                "version": ev.version, "kind": ev.kind,
+                "clients": list(ev.clients),
+                "staleness": list(ev.staleness),
+                "weights": list(ev.weights), "loss": ev.loss,
+                "cum_uplink_bytes": ev.cum_uplink_bytes,
+                "cum_downlink_bytes": ev.cum_downlink_bytes,
+                "cum_hessian_uplink_bytes": ev.cum_hessian_uplink_bytes,
+                "cum_hessian_downlink_bytes":
+                    ev.cum_hessian_downlink_bytes,
+                "cum_total_bytes": ev.cum_bytes}
+            if ev.eval_loss is not None:
+                r["eval_loss"] = ev.eval_loss
+            if channel is not None:
+                r["energy_J"] = _energy.tx_energy_joules(
+                    ev.cum_bytes - prev_bytes, channel)
+                r["carbon_kg"] = _energy.footprint_kg_co2(r["energy_J"])
+            prev_bytes = ev.cum_bytes
+            if ev.probes:
+                r.update(ev.probes)
+            recs.append(r)
+        recs.append({
+            "record": "sched_summary", "discipline": self.discipline,
+            "events": len(self.events), "final_time_s": self.final_time,
+            "cum_total_bytes": self.total_bytes,
+            "staleness_hist": [[k, v] for k, v in
+                               sorted(self.staleness_hist().items())]})
+        return recs
+
+    @staticmethod
+    def from_records(records) -> "SchedTrace":
+        """Rebuild a trace from `to_records` output (e.g. a parsed
+        JSONL log).  Derived fields (energy/carbon) are recomputable,
+        so the round trip ``to_records(from_records(to_records(t)))``
+        is exact — pinned by tests/test_obs.py."""
+        from repro.obs.probes import PROBE_METRICS
+        events: List[SchedEvent] = []
+        discipline = None
+        for r in records:
+            if r.get("record") == "sched_summary":
+                discipline = r["discipline"]
+            elif r.get("record") == "sched_event":
+                probes = {k: r[k] for k in PROBE_METRICS if k in r}
+                events.append(SchedEvent(
+                    time=r["time_s"], version=r["version"],
+                    kind=r["kind"], clients=tuple(r["clients"]),
+                    staleness=tuple(r["staleness"]),
+                    weights=tuple(r["weights"]), loss=r["loss"],
+                    cum_bytes=r["cum_total_bytes"],
+                    eval_loss=r.get("eval_loss"),
+                    cum_uplink_bytes=r["cum_uplink_bytes"],
+                    cum_downlink_bytes=r["cum_downlink_bytes"],
+                    cum_hessian_uplink_bytes=r["cum_hessian_uplink_bytes"],
+                    cum_hessian_downlink_bytes=r[
+                        "cum_hessian_downlink_bytes"],
+                    probes=probes or None))
+        if discipline is None:
+            raise ValueError(
+                "no sched_summary record — not a to_records() trace")
+        return SchedTrace(discipline=discipline, events=events)
 
 
 @dataclasses.dataclass
@@ -181,6 +278,16 @@ class VirtualScheduler:
         self._apply_fn = jax.jit(self._apply_impl,
                                  donate_argnums=(0,) if donate else ())
         self._batch_cache: Tuple[int, Any] = (-1, None)
+        # host-side span timers (docs/observability.md): every
+        # dispatch/apply/round is timed and correlated with the
+        # virtual clock; launchers read `spans.records()`
+        self.spans = SpanLog()
+        # Sophia health probes per event (`repro.obs.probes`): the
+        # sync discipline reads them out of the round metrics; the
+        # event loop probes the post-apply state through this jit
+        self._probes_on = fed.obs.probes
+        self._probe_fn = (jax.jit(engine.probe_metrics)
+                          if self._probes_on else None)
 
     # ---------------------------------------------------------- jit bodies
     def _dispatch_impl(self, state, batches, idx, rng_v, round_idx):
@@ -312,6 +419,20 @@ class VirtualScheduler:
     def _weight(self, staleness: int) -> float:
         return float((1.0 + staleness) ** (-self.sched.staleness_power))
 
+    def _event_probes(self, state=None,
+                      metrics=None) -> Optional[Dict[str, float]]:
+        """Sophia health scalars of one event (None when probing is
+        off): sync rounds computed them inside the round jit already
+        (pass ``metrics``); the event loop probes the post-apply
+        ``state``.  The host sync this forces lands on values the
+        event record fetches anyway (loss is float()ed per event)."""
+        if not self._probes_on:
+            return None
+        if metrics is not None:
+            from repro.obs.probes import PROBE_METRICS
+            return {k: float(metrics[k]) for k in PROBE_METRICS}
+        return {k: float(v) for k, v in self._probe_fn(state).items()}
+
     # ----------------------------------------------------------------- run
     def run(self, state, num_events: int, rng, *,
             target_loss: Optional[float] = None,
@@ -336,13 +457,18 @@ class VirtualScheduler:
         per_round = accounting.round_bytes(comm, n_params, C)
         trace = SchedTrace(discipline="sync")
         now, cum_bytes = 0.0, 0
+        cum = {"uplink_bytes": 0, "downlink_bytes": 0,
+               "hessian_uplink_bytes": 0, "hessian_downlink_bytes": 0}
         for v in range(num_events):
             rng_v = jax.random.fold_in(rng, v)
-            state, metrics = self._round_fn(state, self._batches(v),
-                                            rng_v)
+            with self.spans.span("round", virtual_s=now):
+                state, metrics = self._round_fn(state, self._batches(v),
+                                                rng_v)
             part = np.asarray(self.engine.round_participants(rng_v))
             now += float(np.max(durations[part]))
             cum_bytes += per_round["total_bytes"]
+            for k in cum:
+                cum[k] += per_round[k]
             final = v == num_events - 1
             ev = SchedEvent(
                 time=now, version=v + 1, kind="round",
@@ -350,7 +476,12 @@ class VirtualScheduler:
                 staleness=(0,) * len(part),
                 weights=(1.0,) * len(part),
                 loss=float(metrics["loss"]), cum_bytes=cum_bytes,
-                eval_loss=self._maybe_eval(state, v + 1, final))
+                eval_loss=self._maybe_eval(state, v + 1, final),
+                cum_uplink_bytes=cum["uplink_bytes"],
+                cum_downlink_bytes=cum["downlink_bytes"],
+                cum_hessian_uplink_bytes=cum["hessian_uplink_bytes"],
+                cum_hessian_downlink_bytes=cum["hessian_downlink_bytes"],
+                probes=self._event_probes(metrics=metrics))
             trace.events.append(ev)
             if self._hit_target(ev, target_loss, stop_at_target):
                 break
@@ -363,34 +494,45 @@ class VirtualScheduler:
         n_params = self.engine.num_params(state)
         durations = latency.dispatch_seconds(fed, n_params, C)
         down_bytes, up_bytes = latency.leg_bytes(comm, n_params)
+        # per-stream pricing of one leg: the hessian payload rides both
+        # legs when enabled (`latency.leg_bytes`), so the lumped leg
+        # totals always decompose as down = dn + h, up = up + h
+        stream_dn = accounting.stream_bytes(comm, "downlink", n_params)
+        stream_up = accounting.stream_bytes(comm, "uplink", n_params)
+        stream_h = accounting.stream_bytes(comm, "hessian", n_params)
         trace = SchedTrace(discipline=self.sched.discipline)
         inflight: Dict[int, _InFlight] = {}
         buffer: List[Tuple[int, _InFlight]] = []
         now, version, cum_bytes = 0.0, 0, 0
+        cum = {"uplink_bytes": 0, "downlink_bytes": 0,
+               "hessian_uplink_bytes": 0, "hessian_downlink_bytes": 0}
 
         def dispatch(group, at_time):
             nonlocal cum_bytes
             group = sorted(group)
             idx = jnp.asarray(group, jnp.int32)
             rng_v = jax.random.fold_in(rng, version)
-            (wires, stats, ef_new, opt_new, losses, dnm_new, dnef_new,
-             _h, _hs) = self._dispatch_fn(
-                state, self._batches(version), idx, rng_v,
-                jnp.asarray(version, jnp.int32))
+            with self.spans.span("dispatch", virtual_s=at_time):
+                (wires, stats, ef_new, opt_new, losses, dnm_new,
+                 dnef_new, _h, _hs) = self._dispatch_fn(
+                    state, self._batches(version), idx, rng_v,
+                    jnp.asarray(version, jnp.int32))
 
-            def row(tree, pos):
-                return (None if tree is None
-                        else jax.tree.map(lambda x: x[pos], tree))
+                def row(tree, pos):
+                    return (None if tree is None
+                            else jax.tree.map(lambda x: x[pos], tree))
 
-            for pos, i in enumerate(group):
-                inflight[i] = _InFlight(
-                    arrival=at_time + float(durations[i]),
-                    version=version,
-                    wire=wires[pos], stat=stats[pos],
-                    loss=float(losses[pos]),
-                    ef=row(ef_new, pos), opt=row(opt_new, pos),
-                    dnm=row(dnm_new, pos), dnef=row(dnef_new, pos))
-                cum_bytes += down_bytes
+                for pos, i in enumerate(group):
+                    inflight[i] = _InFlight(
+                        arrival=at_time + float(durations[i]),
+                        version=version,
+                        wire=wires[pos], stat=stats[pos],
+                        loss=float(losses[pos]),
+                        ef=row(ef_new, pos), opt=row(opt_new, pos),
+                        dnm=row(dnm_new, pos), dnef=row(dnef_new, pos))
+                    cum_bytes += down_bytes
+                    cum["downlink_bytes"] += stream_dn
+                    cum["hessian_downlink_bytes"] += stream_h
 
         # initial cohort: the participation sample of version 0; the
         # same clients stay in flight for the whole run (delivering
@@ -409,6 +551,8 @@ class VirtualScheduler:
             rec = inflight.pop(i)
             now = rec.arrival
             cum_bytes += up_bytes
+            cum["uplink_bytes"] += stream_up
+            cum["hessian_uplink_bytes"] += stream_h
             buffer.append((i, rec))
             if len(buffer) < self.buffer_size:
                 continue
@@ -416,16 +560,17 @@ class VirtualScheduler:
             recs = [r for _, r in buffer]
             stale = [version - r.version for r in recs]
             weights = [self._weight(t) for t in stale]
-            state = self._apply_fn(
-                state,
-                jnp.stack([r.wire for r in recs]),
-                jnp.stack([r.stat for r in recs]),
-                jnp.asarray(weights, jnp.float32),
-                jnp.asarray(ids, jnp.int32),
-                stack([r.ef for r in recs]),
-                stack([r.opt for r in recs]),
-                stack([r.dnm for r in recs]),
-                stack([r.dnef for r in recs]))
+            with self.spans.span("apply", virtual_s=now):
+                state = self._apply_fn(
+                    state,
+                    jnp.stack([r.wire for r in recs]),
+                    jnp.stack([r.stat for r in recs]),
+                    jnp.asarray(weights, jnp.float32),
+                    jnp.asarray(ids, jnp.int32),
+                    stack([r.ef for r in recs]),
+                    stack([r.opt for r in recs]),
+                    stack([r.dnm for r in recs]),
+                    stack([r.dnef for r in recs]))
             version += 1
             final = version == num_events
             ev = SchedEvent(
@@ -434,7 +579,12 @@ class VirtualScheduler:
                 weights=tuple(weights),
                 loss=float(np.mean([r.loss for r in recs])),
                 cum_bytes=cum_bytes,
-                eval_loss=self._maybe_eval(state, version, final))
+                eval_loss=self._maybe_eval(state, version, final),
+                cum_uplink_bytes=cum["uplink_bytes"],
+                cum_downlink_bytes=cum["downlink_bytes"],
+                cum_hessian_uplink_bytes=cum["hessian_uplink_bytes"],
+                cum_hessian_downlink_bytes=cum["hessian_downlink_bytes"],
+                probes=self._event_probes(state=state))
             trace.events.append(ev)
             buffer = []
             if self._hit_target(ev, target_loss, stop_at_target):

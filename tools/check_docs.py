@@ -21,7 +21,11 @@ that no longer exist, so the docs cannot silently drift from the code:
 * ``make target`` references must name real Makefile targets;
 * ``docs/configuration.md`` must be byte-identical to what
   ``tools/gen_config_docs.py`` generates from the config dataclasses
-  (every field present, nothing stale).
+  (every field present, nothing stale);
+* the metric catalogue in ``docs/observability.md`` must list exactly
+  the metrics registered in ``src/repro/obs/schema.py`` (regex-parsed
+  ``Metric("name", ...)`` literals — no package import), so the obs
+  docs can't drift from the record schema.
 
 Pure stdlib + text matching — no imports of the package, so it runs in
 seconds on a bare checkout.
@@ -42,11 +46,16 @@ CLI_SOURCES = {
     "benchmarks.run": ROOT / "benchmarks" / "run.py",
 }
 CONFIG_SOURCE = ROOT / "src" / "repro" / "configs" / "base.py"
+OBS_SCHEMA_SOURCE = ROOT / "src" / "repro" / "obs" / "schema.py"
+OBS_DOC = ROOT / "docs" / "observability.md"
+#: the metric registry declares one Metric("name", ...) literal per
+#: line (the schema docstring mandates it) — regex-parseable here
+METRIC_DECL_RE = re.compile(r'\bMetric\(\s*"(\w+)"')
 
 PATH_RE = re.compile(r"[\w./-]+/[\w.-]+\.(?:py|md|json|yml|ini)\b")
 MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
 FIELD_RE = re.compile(
-    r"\b(CommConfig|FedConfig|ModelConfig|SchedConfig)\.(\w+)")
+    r"\b(CommConfig|FedConfig|ModelConfig|SchedConfig|ObsConfig)\.(\w+)")
 MAKE_RE = re.compile(r"\bmake ([\w-]+)")
 FLAG_RE = re.compile(r"(?<!-)--([\w-]+)")
 ONLY_RE = re.compile(r"--only[= ](\w+)")
@@ -162,6 +171,36 @@ def check_config_reference(errors) -> None:
             ".py`")
 
 
+def check_metric_catalogue(errors) -> None:
+    """The '## Metric catalogue' table in docs/observability.md must
+    list EXACTLY the metrics registered in repro.obs.schema — a metric
+    added/renamed without a doc update (or a doc row outliving its
+    metric) is a CI error."""
+    registered = set(METRIC_DECL_RE.findall(OBS_SCHEMA_SOURCE.read_text()))
+    if not registered:
+        errors.append("tools/check_docs.py: found no Metric(...) "
+                      "declarations in src/repro/obs/schema.py")
+        return
+    if not OBS_DOC.exists():
+        errors.append("docs/observability.md is missing (the obs metric "
+                      "catalogue lives there)")
+        return
+    text = OBS_DOC.read_text()
+    m = re.search(r"## Metric catalogue\n(.*?)(?:\n## |\Z)", text, re.S)
+    if not m:
+        errors.append("docs/observability.md: no '## Metric catalogue' "
+                      "section")
+        return
+    documented = set(re.findall(r"^\| `(\w+)` \|", m.group(1), re.M))
+    for name in sorted(registered - documented):
+        errors.append(f"docs/observability.md: metric `{name}` is "
+                      f"registered in repro.obs.schema but missing from "
+                      f"the catalogue")
+    for name in sorted(documented - registered):
+        errors.append(f"docs/observability.md: catalogue row `{name}` "
+                      f"is not a registered metric")
+
+
 def main() -> int:
     make_targets = set(re.findall(r"^([\w-]+):", (ROOT / "Makefile")
                                   .read_text(), re.M))
@@ -170,6 +209,7 @@ def main() -> int:
         if doc.exists():
             check_file(doc, make_targets, errors)
     check_config_reference(errors)
+    check_metric_catalogue(errors)
     if errors:
         print(f"docs-check: {len(errors)} stale reference(s)")
         for e in errors:

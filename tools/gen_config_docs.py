@@ -4,7 +4,7 @@
 Parses ``src/repro/configs/base.py`` with the stdlib ``ast`` module (no
 package import, mirroring tools/check_docs.py) and emits one reference
 table per runtime config class — `FedConfig`, `CommConfig`,
-`SchedConfig` — with every field's name, type, default, the
+`SchedConfig`, `ObsConfig` — with every field's name, type, default, the
 ``repro.launch.train`` flag that sets it (where one exists), and the
 description recovered from the source comments around the field.
 
@@ -28,7 +28,7 @@ TRAIN_SOURCE = ROOT / "src" / "repro" / "launch" / "train.py"
 OUT = ROOT / "docs" / "configuration.md"
 
 #: the runtime config classes the reference covers, in document order
-CLASSES = ("FedConfig", "CommConfig", "SchedConfig")
+CLASSES = ("FedConfig", "CommConfig", "SchedConfig", "ObsConfig")
 
 #: fields whose train.py flag does NOT follow the name == flag rule
 FLAG_OVERRIDES = {
@@ -36,6 +36,7 @@ FLAG_OVERRIDES = {
     ("FedConfig", "total_rounds"): "rounds",
     ("CommConfig", "use_pallas"): "comm-pallas",
     ("SchedConfig", "discipline"): "schedule",
+    ("ObsConfig", "flush_every"): "obs-flush-every",
 }
 #: fields that must NOT auto-match a same-named train.py flag (the
 #: flag exists but means something else)
@@ -59,7 +60,8 @@ HEADER = """\
 Every field of the federated runtime's config dataclasses
 (`repro.configs.base`).  `FedConfig` owns the round (Alg. 1
 hyper-parameters) and embeds one `CommConfig` (the client<->server
-wire model) and one `SchedConfig` (virtual-time round scheduling).
+wire model), one `SchedConfig` (virtual-time round scheduling) and
+one `ObsConfig` (structured telemetry — docs/observability.md).
 Model-architecture configs (`ModelConfig` and the zoo under
 `src/repro/configs/`) are intentionally out of scope: they describe
 networks, not the runtime.

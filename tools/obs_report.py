@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Render (or validate) an observability run log (repro.obs JSONL).
+
+Summary mode prints the run's trajectories — loss, exact wire bytes,
+energy/carbon, Sophia health probes — plus the staleness histogram and
+host-span timing aggregates, straight from the structured records:
+
+    python tools/obs_report.py runs/fed.jsonl
+
+Validation mode (`--validate`, the `make obs-smoke` CI gate) checks the
+manifest header line, re-validates every record against the frozen
+schema (repro.obs.schema), and requires at least one per-round record:
+
+    python tools/obs_report.py runs/fed.jsonl --validate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro import obs  # noqa: E402
+
+#: records that carry a per-aggregation trajectory point
+TRAJECTORY = ("round", "sched_event")
+
+
+def load(path: str):
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{i + 1}: not JSON ({e})")
+    if not records:
+        raise SystemExit(f"{path}: empty log")
+    return records
+
+
+def validate(path: str, records) -> int:
+    errors = []
+    first = records[0]
+    if first.get("record") != "manifest":
+        errors.append("line 1: first record must be the run manifest")
+    else:
+        if first.get("schema_version") != obs.SCHEMA_VERSION:
+            errors.append(
+                f"manifest: schema_version {first.get('schema_version')} "
+                f"!= library version {obs.SCHEMA_VERSION}")
+        if first.get("schema_sha256") != obs.fingerprint():
+            errors.append(
+                "manifest: schema_sha256 does not match this checkout's "
+                "metric registry (repro.obs.schema) — log and code "
+                "disagree about what the columns mean")
+    counts: dict = defaultdict(int)
+    for i, rec in enumerate(records):
+        try:
+            obs.validate_record(rec)
+            counts[rec["record"]] += 1
+        except obs.ObsSchemaError as e:
+            errors.append(f"line {i + 1}: {e}")
+    if not any(counts[k] for k in TRAJECTORY):
+        errors.append("no per-round records (`round` or `sched_event`) — "
+                      "the log carries no training trajectory")
+    if errors:
+        print(f"{path}: INVALID ({len(errors)} error(s))")
+        for e in errors[:20]:
+            print(f"  {e}")
+        return 1
+    print(f"{path}: valid — "
+          + ", ".join(f"{v} {k}" for k, v in sorted(counts.items())))
+    return 0
+
+
+def _fmt_bytes(n) -> str:
+    return f"{n / (1 << 20):.2f}MiB"
+
+
+def _traj_row(rec) -> str:
+    idx = rec.get("round", rec.get("version", "?"))
+    cum = rec.get("cum_total_bytes", 0)
+    cols = [f"loss={rec['loss']:.4f}", f"cum={_fmt_bytes(cum)}"]
+    if "eval_loss" in rec:
+        cols.append(f"eval={rec['eval_loss']:.4f}")
+    if "energy_J" in rec:
+        cols.append(f"E={rec['energy_J']:.3g}J")
+    if "carbon_kg" in rec:
+        cols.append(f"CO2={rec['carbon_kg']:.3g}kg")
+    for probe in ("clip_fraction", "m_norm", "h_norm"):
+        if probe in rec:
+            cols.append(f"{probe.split('_')[0]}={rec[probe]:.3g}")
+    if "h_staleness" in rec:
+        cols.append(f"stale_h={rec['h_staleness']:.0f}")
+    return f"  {idx:>5}  " + "  ".join(cols)
+
+
+def summarize(path: str, records) -> int:
+    by_kind: dict = defaultdict(list)
+    for rec in records:
+        by_kind[rec.get("record", "?")].append(rec)
+
+    if by_kind.get("manifest"):
+        meta = by_kind["manifest"][0].get("meta", {})
+        print(f"{path}: schema v{by_kind['manifest'][0]['schema_version']}"
+              + (f" — {json.dumps(meta, sort_keys=True)}" if meta else ""))
+
+    traj = [r for k in TRAJECTORY for r in by_kind.get(k, [])]
+    if traj:
+        print(f"\ntrajectory ({len(traj)} aggregation events):")
+        shown = traj if len(traj) <= 12 else traj[:6] + traj[-6:]
+        for i, rec in enumerate(shown):
+            if len(traj) > 12 and i == 6:
+                print(f"  ... {len(traj) - 12} more ...")
+            print(_traj_row(rec))
+
+    for summ in by_kind.get("sched_summary", []):
+        hist = dict(summ.get("staleness_hist", []))
+        print(f"\nscheduler: {summ['discipline']}, {summ['events']} events, "
+              f"simulated {summ['final_time_s']:.2f}s, "
+              f"{_fmt_bytes(summ['cum_total_bytes'])} on the wire")
+        if hist:
+            print("staleness histogram: "
+                  + "  ".join(f"{k}:{v}" for k, v in sorted(hist.items())))
+
+    spans = by_kind.get("span", [])
+    if spans:
+        agg: dict = defaultdict(lambda: [0, 0.0])
+        for s in spans:
+            agg[s["name"]][0] += 1
+            agg[s["name"]][1] += s["wall_s"]
+        print("\nhost spans (wall-clock):")
+        for name, (n, total) in sorted(agg.items(),
+                                       key=lambda kv: -kv[1][1]):
+            print(f"  {name:<12} n={n:<5} total={total:.3f}s "
+                  f"mean={total / n * 1e3:.1f}ms")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log", help="JSONL run log written by --obs-log")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-validate every record and exit nonzero "
+                         "on the first structural problem (CI mode)")
+    args = ap.parse_args()
+    records = load(args.log)
+    if args.validate:
+        return validate(args.log, records)
+    return summarize(args.log, records)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
