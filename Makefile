@@ -3,7 +3,7 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check docs-gen obs-smoke
+.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check docs-gen obs-smoke autotune autotune-check
 
 test-fast:
 	$(PY) -m pytest -q
@@ -18,6 +18,18 @@ docs-check:
 # regenerate docs/configuration.md from the config dataclasses
 docs-gen:
 	python tools/gen_config_docs.py
+
+# re-sweep the Pallas block-size table (src/repro/kernels/tuning.json)
+# at the committed benchmark sizes; commit the result
+autotune:
+	$(PY) tools/autotune_kernels.py
+
+# CI gate on the committed tuning table: keys must equal the
+# repro.kernels.KERNELS registry and every kernel must compile + run
+# with its committed blocks on CPU, bitwise equal to the default
+# launch geometry
+autotune-check:
+	$(PY) tools/autotune_kernels.py --check
 
 test-slow:
 	$(PY) -m pytest -q -m slow

@@ -144,6 +144,27 @@ class Compressor:
         xhat, stat = self.roundtrip(key, delta)
         return xhat, stat, (None if ef is None else delta - xhat)
 
+    def roundtrip_batched(self, keys, flat):
+        """`roundtrip` over a packed (N, rows, cols) client stack;
+        keys: the N per-client rng keys.  Returns ``(xhat, stat)``
+        with a leading client axis.  Default: vmap of the per-client
+        path (graph-identical to looping); the kernel-backed
+        subclasses override with ONE client-batched Pallas launch,
+        bitwise equal to the loop (tests/test_kernel_conformance.py).
+        """
+        return jax.vmap(self.roundtrip)(keys, flat)
+
+    def encode_delta_batched(self, keys, theta, start, ef):
+        """`encode_delta` over (N, rows, cols) client stacks in one
+        pass.  ``start`` may stay (rows, cols) when every client
+        trained from the same broadcast model (downlink replicas
+        off); ``ef=None`` means EF is off for the whole cohort.
+        Returns ``(xhat, stat, new_ef)`` stacked along clients."""
+        start_ax = None if start.ndim == 2 else 0
+        return jax.vmap(self.encode_delta,
+                        in_axes=(0, 0, start_ax, 0))(keys, theta,
+                                                     start, ef)
+
     def server_combine(self, agg, wstat):
         """Hook applied to the participation-weighted mean of decoded
         deltas (wstat = weighted mean of per-client stats)."""
@@ -222,6 +243,38 @@ class StochasticQuant(Compressor):
             interpret=_INTERPRET)
         return xhat, jnp.zeros((), jnp.float32), resid
 
+    def roundtrip_batched(self, keys, flat):
+        if not self.cfg.use_pallas:
+            return super().roundtrip_batched(keys, flat)
+        # ONE launch over the (N, R, C) stack; per-client noise/scales
+        # match the vmapped per-client path exactly
+        from repro.kernels.quantize import quant_roundtrip_batched
+        u = jax.vmap(lambda k: jax.random.uniform(k, flat.shape[1:]))(keys)
+        xhat = quant_roundtrip_batched(flat, u,
+                                       jax.vmap(self._scales)(flat),
+                                       qmax=self.qmax,
+                                       interpret=_INTERPRET)
+        return xhat, jnp.zeros((flat.shape[0],), jnp.float32)
+
+    def encode_delta_batched(self, keys, theta, start, ef):
+        if not self.cfg.use_pallas:
+            return super().encode_delta_batched(keys, theta, start, ef)
+        if ef is None:
+            # EF off (the "auto" default for unbiased quantizers, and
+            # the gated uplink-int8 bench regime): delta-code then the
+            # batched quant kernel — a shared 2D start broadcasts
+            delta = theta - start
+            xhat, stat = self.roundtrip_batched(keys, delta)
+            return xhat, stat, None
+        # fused: delta + EF + quant round-trip + residual, one launch
+        from repro.kernels.quantize import uplink_roundtrip_batched
+        delta = theta - start + ef
+        u = jax.vmap(lambda k: jax.random.uniform(k, theta.shape[1:]))(keys)
+        xhat, resid = uplink_roundtrip_batched(
+            theta, start, ef, u, jax.vmap(self._scales)(delta),
+            qmax=self.qmax, interpret=_INTERPRET)
+        return xhat, jnp.zeros((theta.shape[0],), jnp.float32), resid
+
 
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
@@ -269,6 +322,17 @@ class TopK(Compressor):
         xhat = topk_threshold_flat(flat, vals[-1], interpret=_INTERPRET)
         return xhat, jnp.zeros((), jnp.float32)
 
+    def roundtrip_batched(self, keys, flat):
+        if not self.cfg.use_pallas:
+            return super().roundtrip_batched(keys, flat)
+        from repro.kernels.quantize import topk_threshold_batched
+        vals = jax.vmap(
+            lambda f: jax.lax.top_k(jnp.abs(f.reshape(-1)), self.k)[0]
+        )(flat)
+        xhat = topk_threshold_batched(flat, vals[:, -1],
+                                      interpret=_INTERPRET)
+        return xhat, jnp.zeros((flat.shape[0],), jnp.float32)
+
 
 @dataclasses.dataclass(frozen=True)
 class SignSGD(Compressor):
@@ -311,6 +375,14 @@ class SignSGD(Compressor):
         from repro.kernels.quantize import sign_roundtrip_flat
         scale = self._scale(flat)
         xhat = sign_roundtrip_flat(flat, scale, interpret=_INTERPRET)
+        return xhat, scale
+
+    def roundtrip_batched(self, keys, flat):
+        if not self.cfg.use_pallas:
+            return super().roundtrip_batched(keys, flat)
+        from repro.kernels.quantize import sign_roundtrip_batched
+        scale = jax.vmap(self._scale)(flat)
+        xhat = sign_roundtrip_batched(flat, scale, interpret=_INTERPRET)
         return xhat, scale
 
     def server_combine(self, agg, wstat):

@@ -91,3 +91,32 @@ def broadcast(comp: Compressor, key, packed_theta: jnp.ndarray,
     new_model = model_row + xhat
     new_ef = None if ef_row is None else delta - xhat
     return new_model, new_ef
+
+
+def broadcast_batched(comp: Compressor, keys, packed_theta: jnp.ndarray,
+                      model_rows: jnp.ndarray,
+                      ef_rows: Optional[jnp.ndarray]
+                      ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """`broadcast` for the whole cohort in one pass.
+
+    keys: (N,) per-client rng keys; model_rows / ef_rows: the gathered
+    (N, rows, cols) replica / residual stacks (resident dtype — the
+    kernels upcast loads in-VMEM); packed_theta stays the one (rows,
+    cols) server model, shared across the client grid axis.  The
+    Pallas path is ONE client-batched launch; otherwise a vmap of the
+    per-client step (graph-identical to looping)."""
+    cfg = comp.cfg
+    if cfg.use_pallas and isinstance(comp, StochasticQuant):
+        from repro.kernels.quantize import broadcast_roundtrip_batched
+        ef = (jnp.zeros_like(model_rows) if ef_rows is None else ef_rows)
+        delta = packed_theta - model_rows + ef
+        u = jax.vmap(
+            lambda k: jax.random.uniform(k, delta.shape[1:]))(keys)
+        new_models, resid = broadcast_roundtrip_batched(
+            packed_theta, model_rows, ef, u,
+            jax.vmap(comp._scales)(delta), qmax=comp.qmax,
+            interpret=_INTERPRET)
+        return new_models, (None if ef_rows is None else resid)
+    return jax.vmap(
+        lambda k, m, e: broadcast(comp, k, packed_theta, m, e)
+    )(keys, model_rows, ef_rows)

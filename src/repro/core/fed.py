@@ -43,10 +43,21 @@ round"): the engine goes one step further than in-round flatness —
   returned state, as ``state, metrics = round_fn(state, ...)`` does.
 * **bf16 resident state.** ``CommConfig.state_dtype="bfloat16"``
   stores all resident wire-layout state in bf16 (half the HBM);
-  every round upcasts gathered rows to fp32, computes exactly as the
-  fp32 engine does, and downcasts on the scatter back — the Pallas
-  kernels carry the same load/store dtype contract
-  (`repro.kernels`).  Wire bytes are unaffected.
+  gathered rows feed the kernels *in their storage dtype* — the
+  kernels upcast loads to fp32 in-VMEM (`repro.kernels` dtype
+  contract), jnp promotion handles the mixed-dtype flat arithmetic
+  exactly, and rows downcast on the scatter back (`_store`).  No
+  bulk gather-side upcast ever materializes an fp32 copy of resident
+  state.  Wire bytes are unaffected; fp32 configs see only no-op
+  casts and stay bit-identical (tests/test_residency.py).
+
+* **Client-batched kernels.** The parallel strategy steps the whole
+  cohort through ONE client-batched pipeline (`comm_client_step_
+  batched`): downlink broadcast, the local Sophia scan, uplink
+  encode and the hessian round-trip each run as a single Pallas
+  launch over the packed (C, rows, cols) stacks instead of C vmapped
+  (rows, cols) launches — bitwise equal to the vmapped per-client
+  path (tests/test_residency.py pins it).
 
 Communication model (repro.comm): with the default CommConfig (lossless
 identity uplink/downlink, hessian stream off, full participation) the
@@ -176,14 +187,6 @@ class FedEngine:
         parameter pytree.  Model pytrees are containers, never a bare
         rank-2 array, so the array rank is the discriminator."""
         return getattr(params, "ndim", None) == 2
-
-    def _compute32(self, tree):
-        """Gather-side upcast: resident rows -> fp32 compute values.
-        A no-op (the identical array objects) for fp32 state, so the
-        default engine's traced graph is unchanged."""
-        if tree is None:
-            return None
-        return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
 
     def _store(self, tree):
         """Scatter-side downcast: fp32 compute values -> the resident
@@ -464,10 +467,11 @@ class FedEngine:
         coordinates in the downlink geometry, None when that stream is
         off), the received replica *is* the local-training start state,
         and the uplink delta is a flat subtraction inside
-        `Compressor.encode_delta`.  All buffer arguments are fp32
-        compute values — callers gathering bf16 resident rows upcast
-        first (`_compute32`) and downcast the returned rows on the
-        scatter back (`_store`).
+        `Compressor.encode_delta`.  Gathered resident rows flow in
+        UN-upcast (`CommConfig.state_dtype`): the kernels upcast loads
+        to fp32 in-VMEM and jnp promotion covers the flat arithmetic;
+        callers downcast the returned rows on the scatter back
+        (`_store`).  For fp32 state every cast is a no-op.
 
         Returns ``(xhat, stat, ef_new, opt_new, loss, dnm_new,
         dnef_new, h_hat, h_stat)`` with ``None`` for inactive pieces.
@@ -487,12 +491,58 @@ class FedEngine:
         if rt.h_on:
             # opt.h is already a wire buffer; only a geometry re-lay
             # (if the hessian stream packs its own quant_block) stands
-            # between it and the compressor
+            # between it and the compressor.  The explicit fp32 upcast
+            # keeps the wire semantics (scales, payload dtype) fixed
+            # when the resident EMAs are stored bf16 (no-op for fp32).
             h_hat, h_stat = rt.comp_h.roundtrip(
                 jax.random.fold_in(crng, 0x4E),
-                cflat.repack(opt_i.h, rt.spec, rt.spec_h))
+                cflat.repack(opt_i.h, rt.spec,
+                             rt.spec_h).astype(jnp.float32))
         return (xhat, stat, ef_new, opt_i, loss,
                 dnm_i if rt.dn_on else None, dnef_i, h_hat, h_stat)
+
+    def comm_client_step_batched(self, rt: CommRuntime, theta, theta_dn,
+                                 round_idx, lr, opts, efs, dnms, dnefs,
+                                 batches, crngs):
+        """`comm_client_step` for the whole cohort in one pass — the
+        parallel strategy's client step, and the scheduler's batched
+        dispatch.
+
+        Every per-client buffer argument carries a leading client axis
+        N (None when that piece is off); ``theta`` / ``theta_dn`` stay
+        the one shared packed server model; ``crngs``: (N,) per-client
+        rng keys.  Each stage — downlink broadcast, the local Sophia
+        scan, uplink encode, the hessian round-trip — runs as ONE
+        client-batched Pallas launch over the (N, rows, cols) stacks
+        (`repro.kernels`) instead of N per-client launches, and is
+        bitwise equal to ``jax.vmap(comm_client_step)`` over the same
+        rows (tests/test_residency.py pins it).  Returns the same
+        9-tuple as `comm_client_step`, stacked along clients.
+        """
+        if rt.dn_on:
+            keys = jax.vmap(
+                lambda k: jax.random.fold_in(k, 0xD0))(crngs)
+            dnms, dnefs = cdown.broadcast_batched(
+                rt.comp_dn, keys, theta_dn, dnms, dnefs)
+            starts = jax.vmap(
+                lambda b: cflat.repack(b, rt.spec_dn, rt.spec))(dnms)
+        else:
+            starts = theta
+        t, opt, losses = self._local_update_flat_batched(
+            rt.spec, starts, opts, batches, crngs, round_idx, lr)
+        xhat, stat, ef_new = rt.comp.encode_delta_batched(
+            jax.vmap(lambda k: jax.random.fold_in(k, 0xC0))(crngs),
+            t, starts, efs)
+        h_hat = h_stat = None
+        if rt.h_on:
+            h_rows = jax.vmap(
+                lambda hrow: cflat.repack(hrow, rt.spec, rt.spec_h)
+            )(opt.h).astype(jnp.float32)
+            h_hat, h_stat = rt.comp_h.roundtrip_batched(
+                jax.vmap(lambda k: jax.random.fold_in(k, 0x4E))(crngs),
+                h_rows)
+        return (xhat, stat, ef_new, opt, losses,
+                dnms if rt.dn_on else None, dnefs, h_hat, h_stat)
 
     # ------------------------------------------- local client training (flat)
     def _local_sophia_flat(self, spec, theta, m, h, batch, round_idx, rng,
@@ -546,6 +596,78 @@ class FedEngine:
             step, (theta, m, h), jnp.arange(fed.local_iters))
         return theta, m, h, jnp.mean(losses)
 
+    def _local_sophia_flat_batched(self, spec, theta, m, h, batches,
+                                   round_idx, rngs, lr):
+        """`_local_sophia_flat` for N clients at once: ONE scan over
+        local iterations whose body vmaps the loss/grad boundary and
+        feeds the (N, rows, cols) state stacks to a single batched
+        Sophia kernel launch per iteration.  ``theta`` may be the
+        shared (rows, cols) start model or a per-client (N, rows,
+        cols) stack (downlink replicas).  scan(vmap(grad)) computes
+        exactly what vmap(scan(grad)) would, so this is bitwise equal
+        to vmapping the per-client loop."""
+        fed = self.fed
+        task = self.task
+        N = rngs.shape[0]
+
+        round_mode = fed.hessian_every_unit == "round"
+        if round_mode:
+            do_h_round = (round_idx % fed.tau) == 0
+            if theta.ndim == 3:
+                def gnb_round():
+                    return jax.vmap(
+                        lambda t, b, r: cflat.pack(gnb_estimate(
+                            task, self._gathered(cflat.unpack(t, spec)),
+                            b, jax.random.fold_in(r, 0x7FFFFFFF),
+                            vg_fn=self._value_and_grad), spec)
+                    )(theta, batches, rngs)
+            else:
+                # shared start model: ONE unpacked view feeds every
+                # client's estimator (what vmap hoists anyway)
+                pg0 = self._gathered(cflat.unpack(theta, spec))
+
+                def gnb_round():
+                    return jax.vmap(
+                        lambda b, r: cflat.pack(gnb_estimate(
+                            task, pg0, b,
+                            jax.random.fold_in(r, 0x7FFFFFFF),
+                            vg_fn=self._value_and_grad), spec)
+                    )(batches, rngs)
+            h_hat_round = jax.lax.cond(
+                do_h_round, gnb_round, lambda: cflat.zeros(spec, (N,)))
+
+        def step(carry, j):
+            t, m_, h_ = carry
+            losses, g, pgs = jax.vmap(
+                lambda tt, bb: self._flat_value_and_grad(tt, bb, spec)
+            )(t, batches)
+            if round_mode:
+                do_h = do_h_round & (j == 0)
+                hh = h_hat_round
+            else:
+                tstep = round_idx * fed.local_iters + j
+                do_h = (tstep % fed.tau) == 0
+                hh = jax.lax.cond(
+                    do_h,
+                    lambda: jax.vmap(
+                        lambda pg, bb, r: cflat.pack(gnb_estimate(
+                            task, pg, bb, jax.random.fold_in(r, j),
+                            vg_fn=self._value_and_grad), spec)
+                    )(pgs, batches, rngs),
+                    lambda: cflat.zeros(spec, (N,)))
+            t, m_, h_ = sophia.sophia_step_flat(
+                t, m_, h_, g, hh, do_h,
+                lr=lr, beta1=fed.beta1, beta2=fed.beta2, rho=fed.rho,
+                eps=fed.eps, weight_decay=fed.weight_decay,
+                use_pallas=fed.use_pallas)
+            return (t, m_, h_), losses
+
+        t0 = (theta if theta.ndim == 3
+              else jnp.broadcast_to(theta[None], (N,) + theta.shape))
+        (theta, m, h), losses = jax.lax.scan(
+            step, (t0, m, h), jnp.arange(fed.local_iters))
+        return theta, m, h, jnp.mean(losses, axis=0)
+
     def _local_sgd_flat(self, spec, theta, batch, rng, lr):
         """Flat-resident local SGD: the update is one flat axpy."""
         def step(t, j):
@@ -555,6 +677,23 @@ class FedEngine:
         theta, losses = jax.lax.scan(step, theta,
                                      jnp.arange(self.fed.local_iters))
         return theta, jnp.mean(losses)
+
+    def _local_sgd_flat_batched(self, spec, theta, batches, rngs, lr):
+        """`_local_sgd_flat` for N clients at once (see
+        `_local_sophia_flat_batched` for the scan/vmap layout)."""
+        N = rngs.shape[0]
+
+        def step(t, j):
+            losses, g, _ = jax.vmap(
+                lambda tt, bb: self._flat_value_and_grad(tt, bb, spec)
+            )(t, batches)
+            return t - lr * g, losses
+
+        t0 = (theta if theta.ndim == 3
+              else jnp.broadcast_to(theta[None], (N,) + theta.shape))
+        theta, losses = jax.lax.scan(step, t0,
+                                     jnp.arange(self.fed.local_iters))
+        return theta, jnp.mean(losses, axis=0)
 
     def _local_sgd(self, params, batch, rng, lr):
         """Pytree local SGD — the reference twin of `_local_sgd_flat`
@@ -651,6 +790,36 @@ class FedEngine:
             return cflat.pack(p, spec), None, loss
         raise ValueError(fed.optimizer)
 
+    def _local_update_flat_batched(self, spec, theta, opts, batches,
+                                   crngs, round_idx, lr):
+        """`_local_update_flat` for the whole cohort: per-client state
+        carries a leading client axis N; ``theta`` may be the shared
+        (rows, cols) start model or a per-client (N, rows, cols)
+        stack.  fed_sophia / fedavg-family run the batched flat loops
+        (one kernel launch per iteration for the whole cohort); done
+        is inherently a pytree algorithm, so it stays a vmap of the
+        per-client step."""
+        fed = self.fed
+        N = crngs.shape[0]
+        if fed.optimizer == "fed_sophia":
+            if opts is None:   # stateless: fresh EMAs each round
+                opts = sophia.SophiaState(m=cflat.zeros(spec, (N,)),
+                                          h=cflat.zeros(spec, (N,)))
+            t, m, h, loss = self._local_sophia_flat_batched(
+                spec, theta, opts.m, opts.h, batches, round_idx, crngs,
+                lr)
+            opt = sophia.SophiaState(m=m, h=h)
+            return t, (opt if fed.persistent_client_state else None), loss
+        if fed.optimizer in ("fedavg", "fedadam", "fedyogi"):
+            t, loss = self._local_sgd_flat_batched(spec, theta, batches,
+                                                   crngs, lr)
+            return t, None, loss
+        theta_ax = None if theta.ndim == 2 else 0
+        return jax.vmap(
+            lambda t, b, r: self._local_update_flat(
+                spec, t, None, b, r, round_idx, lr),
+            in_axes=(theta_ax, 0, 0))(theta, batches, crngs)
+
     def _apply_aggregate(self, state, agg):
         """Server step on the aggregated params-space model `agg`."""
         if self.fed.optimizer in ("fedadam", "fedyogi"):
@@ -732,9 +901,9 @@ class FedEngine:
         """Original aggregation: server model <- mean of client params —
         computed entirely in wire layout (ONE pack of the server model
         in, ONE unpack of the aggregate out — and ZERO of either in
-        packed-resident mode).  Resident rows upcast to fp32 on entry
-        into each client's local loop and downcast on the store back
-        (no-ops for fp32 state)."""
+        packed-resident mode).  Resident rows feed the local loops in
+        their storage dtype (the kernels upcast loads in-VMEM) and
+        downcast on the store back (no-ops for fp32 state)."""
         fed = self.fed
         spec = rt.spec
         params = state["params"]
@@ -746,24 +915,17 @@ class FedEngine:
         opts = state.get("client_opt") if stateful else None
 
         if fed.strategy == "parallel":
-            if stateful:
-                new_t, new_opt, losses = jax.vmap(
-                    lambda o, b, r: self._local_update_flat(
-                        spec, theta, self._compute32(o), b, r, round_idx,
-                        lr)
-                )(opts, batches, client_rngs)
-            else:
-                new_t, new_opt, losses = jax.vmap(
-                    lambda b, r: self._local_update_flat(
-                        spec, theta, None, b, r, round_idx, lr)
-                )(batches, client_rngs)
+            # the whole cohort steps through the batched flat loop —
+            # one kernel launch per local iteration over (C, rows,
+            # cols) stacks
+            new_t, new_opt, losses = self._local_update_flat_batched(
+                spec, theta, opts, batches, client_rngs, round_idx, lr)
             agg_flat = jnp.mean(new_t, axis=0)
         else:
             def scan_body(acc, xs):
                 opt, batch, crng = xs
                 t_i, opt_i, loss = self._local_update_flat(
-                    spec, theta, self._compute32(opt), batch, crng,
-                    round_idx, lr)
+                    spec, theta, opt, batch, crng, round_idx, lr)
                 return acc + t_i / C, (opt_i, loss)
             agg_flat, (new_opt, losses) = jax.lax.scan(
                 scan_body, jnp.zeros_like(theta),
@@ -820,16 +982,13 @@ class FedEngine:
         dn_ef = state.get(cdown.EF_KEY)
 
         def take(tree):
+            # gathered rows stay in the resident storage dtype — the
+            # kernels upcast loads in-VMEM (no bulk fp32 copy)
             return (None if tree is None
                     else jax.tree.map(lambda x: x[idx], tree))
 
-        def take32(tree):
-            """Gather the participants' resident-state rows, upcast to
-            the fp32 compute dtype (no-op for fp32 resident state)."""
-            return self._compute32(take(tree))
-
-        opts_g, ef_g = take32(opts), take32(ef)
-        dnm_g, dnef_g = take32(dn_model), take32(dn_ef)
+        opts_g, ef_g = take(opts), take(ef)
+        dnm_g, dnef_g = take(dn_model), take(dn_ef)
         batches_g, rngs_g = take(batches), client_rngs[idx]
 
         client = functools.partial(self.comm_client_step, rt, theta,
@@ -837,7 +996,8 @@ class FedEngine:
 
         if fed.strategy == "parallel":
             (wires, stats, ef_new_g, opt_new_g, losses, dnm_new_g,
-             dnef_new_g, h_hat_g, h_stat_g) = jax.vmap(client)(
+             dnef_new_g, h_hat_g, h_stat_g) = self.comm_client_step_batched(
+                rt, theta, theta_dn, round_idx, lr,
                 opts_g, ef_g, dnm_g, dnef_g, batches_g, rngs_g)
             agg_flat = jnp.sum(wires, axis=0) / S
             wstat = jnp.sum(stats) / S

@@ -94,11 +94,19 @@ def sophia_step_flat(theta, m, h, grads, h_hat, do_h_update, *, lr, beta1,
     resident buffers (`CommConfig.state_dtype`) are upcast to fp32
     for the arithmetic and the results stored back in each input's
     dtype (no-op casts for fp32).  Returns ``(theta, m, h)``.
+
+    Also accepts packed (clients, rows, cols) stacks: the pure path
+    is elementwise and shape-agnostic, and the kernel path dispatches
+    to the client-batched launch (`sophia_update_batched`) — ONE
+    kernel call for the whole cohort, bitwise equal to per-client
+    calls.
     """
     if use_pallas:
         from repro.kernels import INTERPRET
-        from repro.kernels.sophia_update import sophia_update_flat
-        return sophia_update_flat(
+        from repro.kernels.sophia_update import (sophia_update_batched,
+                                                 sophia_update_flat)
+        fn = sophia_update_batched if theta.ndim == 3 else sophia_update_flat
+        return fn(
             theta, m, h, grads, h_hat, do_h_update, lr, beta1=beta1,
             beta2=beta2, rho=rho, eps=eps, weight_decay=weight_decay,
             interpret=INTERPRET)

@@ -30,6 +30,16 @@ outputs onto the donated inputs.  Kernel callers never need to think
 about aliasing; round callers do (docs/architecture.md "Memory
 layout: the life of a round").
 
+Client batching: every wire/optimizer kernel also has a ``*_batched``
+entry point that takes the packed (C, rows, cols) client stack and
+runs it as ONE launch with a leading client grid dimension, instead
+of C vmapped (rows, cols) launches.  The batched launches reuse the
+same kernel bodies over 3D blocks, so batched == per-client bitwise
+(pinned by tests/test_kernel_conformance.py).  Block shapes — the
+client block included — come from the committed ``tuning.json`` via
+`repro.kernels.tuning` (autotuned by tools/autotune_kernels.py, safe
+defaults when absent).
+
 This layer is OPTIONAL: add <name>.py + a ref oracle ONLY for compute
 hot-spots that are demonstrably HBM- or compute-bound; everything
 else belongs in plain jnp.
@@ -39,3 +49,16 @@ import jax
 # Pallas kernels execute in interpret mode everywhere but real TPUs
 # (this container is CPU-only); shared by ops.py and repro.comm.
 INTERPRET = jax.default_backend() != "tpu"
+
+# The kernel registry: one name per fused kernel family, used as the
+# key space of kernels/tuning.json (validated by tools/check_docs.py
+# and `make autotune-check`) and swept by tools/autotune_kernels.py.
+KERNELS = (
+    "quant_roundtrip",
+    "broadcast_roundtrip",
+    "uplink_roundtrip",
+    "sign_roundtrip",
+    "topk_threshold",
+    "sophia_update",
+    "stale_accum",
+)

@@ -23,6 +23,15 @@ resident buffer costs half the HBM traffic without changing the
 arithmetic.  Noise and scales are always fp32.  With fp32 inputs the
 casts are no-ops and the kernels are bit-identical to their pre-dtype
 versions.
+
+Client batching: each round-trip also has a ``*_batched`` entry point
+over the packed (N, rows, cols) client stack — ONE launch with a
+leading client grid dimension instead of N per-client launches.  The
+batched launches reuse the same elementwise kernel bodies over 3D
+blocks, so they are bitwise equal to the looped per-client results
+(tests/test_kernel_conformance.py).  Block shapes come from the
+committed `repro.kernels.tuning` table (``blocks=`` overrides, for
+the autotuner sweep).
 """
 from __future__ import annotations
 
@@ -32,17 +41,34 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning
+
 BLOCK_R = 256
 BLOCK_C = 1024
 
 
-def _grid_specs(R, C):
-    br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
+def _grid_specs(R, C, kernel="quant_roundtrip"):
+    br, bc = tuning.blocks_2d(kernel, R, C)
     grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
     tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
     rowcol = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
     scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     return grid, tile, rowcol, scalar
+
+
+def _grid_specs3(N, R, C, kernel, blocks):
+    """Launch geometry of a client-batched (N, R, C) kernel: the grid
+    gains a leading client axis; ``shared2`` maps an unbatched (R, C)
+    operand (e.g. the one server model every client receives) into the
+    same (br, bc) block for every client grid step, where the kernel
+    body broadcasts it against the (bn, br, bc) stacks."""
+    bn, br, bc = tuning.blocks_for(kernel, N, R, C, override=blocks)
+    grid = (pl.cdiv(N, bn), pl.cdiv(R, br), pl.cdiv(C, bc))
+    tile3 = pl.BlockSpec((bn, br, bc), lambda n, i, j: (n, i, j))
+    rowcol3 = pl.BlockSpec((bn, br, 1), lambda n, i, j: (n, i, 0))
+    client3 = pl.BlockSpec((bn, 1, 1), lambda n, i, j: (n, 0, 0))
+    shared2 = pl.BlockSpec((br, bc), lambda n, i, j: (i, j))
+    return grid, tile3, rowcol3, client3, shared2
 
 
 # ------------------------------------------------- stochastic quantization
@@ -108,7 +134,7 @@ def broadcast_roundtrip_flat(theta, ref, ef, noise, scale, *, qmax: int,
     delta.  Returns (new client model, new EF residual).
     """
     R, C = theta.shape
-    grid, tile, rowcol, _ = _grid_specs(R, C)
+    grid, tile, rowcol, _ = _grid_specs(R, C, "broadcast_roundtrip")
     return pl.pallas_call(
         functools.partial(_broadcast_kernel, qmax=qmax),
         grid=grid,
@@ -152,7 +178,7 @@ def uplink_roundtrip_flat(theta, start, ef, noise, scale, *, qmax: int,
     (decoded wire reconstruction, new EF residual).
     """
     R, C = theta.shape
-    grid, tile, rowcol, _ = _grid_specs(R, C)
+    grid, tile, rowcol, _ = _grid_specs(R, C, "uplink_roundtrip")
     return pl.pallas_call(
         functools.partial(_uplink_kernel, qmax=qmax),
         grid=grid,
@@ -175,7 +201,7 @@ def _sign_kernel(x_ref, f_ref, out_ref):
 def sign_roundtrip_flat(x, scale, *, interpret: bool = True):
     """out = scale * sign(x); scale is a traced scalar."""
     R, C = x.shape
-    grid, tile, _, scalar = _grid_specs(R, C)
+    grid, tile, _, scalar = _grid_specs(R, C, "sign_roundtrip")
     flags = jnp.asarray(scale, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         _sign_kernel,
@@ -199,7 +225,7 @@ def topk_threshold_flat(x, thr, *, interpret: bool = True):
     """Magnitude sparsifier: keep x where |x| >= thr (the k-th largest
     magnitude, computed outside), zero elsewhere."""
     R, C = x.shape
-    grid, tile, _, scalar = _grid_specs(R, C)
+    grid, tile, _, scalar = _grid_specs(R, C, "topk_threshold")
     flags = jnp.asarray(thr, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         _thresh_kernel,
@@ -207,5 +233,132 @@ def topk_threshold_flat(x, thr, *, interpret: bool = True):
         in_specs=[tile, scalar],
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, flags)
+
+
+# -------------------------------------------- client-batched launches
+#
+# One pallas_call over the packed (N, R, C) client stack.  The 2D
+# kernel bodies above are elementwise with numpy broadcasting, so
+# feeding them (bn, br, bc) blocks computes the identical value per
+# coordinate — batched == looped per-client bitwise by construction.
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "interpret",
+                                             "blocks"))
+def quant_roundtrip_batched(x, noise, scale, *, qmax: int,
+                            interpret: bool = True, blocks=None):
+    """`quant_roundtrip_flat` over an (N, R, C) client stack in one
+    launch.  scale: (N, R, 1) per-client per-row scales; blocks: an
+    optional static (bn, br, bc) override of the tuned geometry."""
+    N, R, C = x.shape
+    grid, tile3, rowcol3, _, _ = _grid_specs3(N, R, C,
+                                              "quant_roundtrip", blocks)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[tile3, tile3, rowcol3],
+        out_specs=tile3,
+        out_shape=jax.ShapeDtypeStruct((N, R, C), x.dtype),
+        interpret=interpret,
+    )(x, noise, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "interpret",
+                                             "blocks"))
+def broadcast_roundtrip_batched(theta, ref, ef, noise, scale, *,
+                                qmax: int, interpret: bool = True,
+                                blocks=None):
+    """`broadcast_roundtrip_flat` over (N, R, C) per-client replica /
+    EF stacks in one launch.  theta may stay (R, C) — the one server
+    model is shared across the client grid axis (broadcast in-VMEM)
+    — or be a (N, R, C) stack; scale: (N, R, 1)."""
+    N, R, C = ref.shape
+    grid, tile3, rowcol3, _, shared2 = _grid_specs3(
+        N, R, C, "broadcast_roundtrip", blocks)
+    t_spec = shared2 if theta.ndim == 2 else tile3
+    return pl.pallas_call(
+        functools.partial(_broadcast_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[t_spec, tile3, tile3, tile3, rowcol3],
+        out_specs=[tile3, tile3],
+        out_shape=[jax.ShapeDtypeStruct((N, R, C), theta.dtype),
+                   jax.ShapeDtypeStruct((N, R, C), theta.dtype)],
+        interpret=interpret,
+    )(theta, ref, ef, noise, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "interpret",
+                                             "blocks"))
+def uplink_roundtrip_batched(theta, start, ef, noise, scale, *,
+                             qmax: int, interpret: bool = True,
+                             blocks=None):
+    """`uplink_roundtrip_flat` over (N, R, C) locally-trained client
+    stacks in one launch.  start may stay (R, C) — every client
+    trained from the same broadcast model (downlink replicas off) —
+    or be a (N, R, C) per-client replica stack; scale: (N, R, 1)."""
+    N, R, C = theta.shape
+    grid, tile3, rowcol3, _, shared2 = _grid_specs3(
+        N, R, C, "uplink_roundtrip", blocks)
+    s_spec = shared2 if start.ndim == 2 else tile3
+    return pl.pallas_call(
+        functools.partial(_uplink_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[tile3, s_spec, tile3, tile3, rowcol3],
+        out_specs=[tile3, tile3],
+        out_shape=[jax.ShapeDtypeStruct((N, R, C), theta.dtype),
+                   jax.ShapeDtypeStruct((N, R, C), theta.dtype)],
+        interpret=interpret,
+    )(theta, start, ef, noise, scale)
+
+
+def _sign_kernel_batched(x_ref, f_ref, out_ref):
+    # per-client scale block (bn, 1, 1) broadcasts over (bn, br, bc)
+    out_ref[...] = (f_ref[...]
+                    * jnp.sign(x_ref[...].astype(jnp.float32))
+                    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "blocks"))
+def sign_roundtrip_batched(x, scale, *, interpret: bool = True,
+                           blocks=None):
+    """`sign_roundtrip_flat` over an (N, R, C) stack in one launch;
+    scale: (N,) per-client scales."""
+    N, R, C = x.shape
+    grid, tile3, _, client3, _ = _grid_specs3(N, R, C,
+                                              "sign_roundtrip", blocks)
+    flags = jnp.asarray(scale, jnp.float32).reshape(N, 1, 1)
+    return pl.pallas_call(
+        _sign_kernel_batched,
+        grid=grid,
+        in_specs=[tile3, client3],
+        out_specs=tile3,
+        out_shape=jax.ShapeDtypeStruct((N, R, C), x.dtype),
+        interpret=interpret,
+    )(x, flags)
+
+
+def _thresh_kernel_batched(x_ref, f_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.where(jnp.abs(x) >= f_ref[...], x,
+                             0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "blocks"))
+def topk_threshold_batched(x, thr, *, interpret: bool = True,
+                           blocks=None):
+    """`topk_threshold_flat` over an (N, R, C) stack in one launch;
+    thr: (N,) per-client magnitude thresholds."""
+    N, R, C = x.shape
+    grid, tile3, _, client3, _ = _grid_specs3(N, R, C,
+                                              "topk_threshold", blocks)
+    flags = jnp.asarray(thr, jnp.float32).reshape(N, 1, 1)
+    return pl.pallas_call(
+        _thresh_kernel_batched,
+        grid=grid,
+        in_specs=[tile3, client3],
+        out_specs=tile3,
+        out_shape=jax.ShapeDtypeStruct((N, R, C), x.dtype),
         interpret=interpret,
     )(x, flags)

@@ -58,16 +58,25 @@ def broadcast_roundtrip_ref(theta, ref, ef, noise, scale, *, qmax):
     return (r + xhat).astype(theta.dtype), (d - xhat).astype(theta.dtype)
 
 
+def _per_client(s, x):
+    """Align a scalar (2D launch) or (N,) per-client (batched launch)
+    scale against x for broadcasting."""
+    s = jnp.asarray(s, jnp.float32)
+    return s.reshape(s.shape + (1,) * (x.ndim - s.ndim))
+
+
 def sign_roundtrip_ref(x, scale):
-    """Reference for kernels.quantize.sign_roundtrip_flat."""
-    return (jnp.asarray(scale, jnp.float32)
-            * jnp.sign(_f32(x))).astype(x.dtype)
+    """Reference for kernels.quantize.sign_roundtrip_flat /
+    sign_roundtrip_batched (scale scalar or (N,))."""
+    return (_per_client(scale, x) * jnp.sign(_f32(x))).astype(x.dtype)
 
 
 def topk_threshold_ref(x, thr):
-    """Reference for kernels.quantize.topk_threshold_flat."""
+    """Reference for kernels.quantize.topk_threshold_flat /
+    topk_threshold_batched (thr scalar or (N,))."""
     xf = _f32(x)
-    return jnp.where(jnp.abs(xf) >= thr, xf, 0.0).astype(x.dtype)
+    return jnp.where(jnp.abs(xf) >= _per_client(thr, x), xf,
+                     0.0).astype(x.dtype)
 
 
 def stale_accum_ref(wires, weights, inv_norm):

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning
+
 BLOCK_R = 256
 BLOCK_C = 1024
 
@@ -62,7 +64,7 @@ def sophia_update_flat(theta, m, h, g, h_hat, do_h, lr, *, beta1, beta2,
     container); on a real TPU pass interpret=False.
     """
     R, C = theta.shape
-    br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
+    br, bc = tuning.blocks_2d("sophia_update", R, C)
     grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
     flags = jnp.stack([jnp.asarray(do_h, jnp.float32).reshape(()),
                        jnp.asarray(lr, jnp.float32).reshape(())]
@@ -85,6 +87,46 @@ def sophia_update_flat(theta, m, h, g, h_hat, do_h, lr, *, beta1, beta2,
             grid=grid,
             in_specs=[tile, tile, tile, tile, tile, smem],
             out_specs=[tile, tile, tile],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(theta, m, h, g, h_hat, flags)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "rho",
+                                             "eps", "weight_decay",
+                                             "interpret", "blocks"))
+def sophia_update_batched(theta, m, h, g, h_hat, do_h, lr, *, beta1,
+                          beta2, rho, eps, weight_decay,
+                          interpret: bool = True, blocks=None):
+    """`sophia_update_flat` over packed (N, R, C) client stacks in ONE
+    launch with a leading client grid dimension.  Reuses the same
+    elementwise kernel body over 3D blocks, so results are bitwise
+    equal to N per-client launches (tests/test_kernel_conformance.py).
+    do_h / lr stay shared scalars — every client steps the same local
+    iteration of the same round.  blocks: optional static (bn, br, bc)
+    override of the tuned geometry."""
+    N, R, C = theta.shape
+    bn, br, bc = tuning.blocks_for("sophia_update", N, R, C,
+                                   override=blocks)
+    grid = (pl.cdiv(N, bn), pl.cdiv(R, br), pl.cdiv(C, bc))
+    flags = jnp.stack([jnp.asarray(do_h, jnp.float32).reshape(()),
+                       jnp.asarray(lr, jnp.float32).reshape(())]
+                      ).reshape(1, 2)
+
+    tile3 = pl.BlockSpec((bn, br, bc), lambda n, i, j: (n, i, j))
+    smem = pl.BlockSpec((1, 2), lambda n, i, j: (0, 0))
+
+    kernel = functools.partial(
+        _sophia_kernel, beta1=beta1, beta2=beta2, rho=rho, eps=eps,
+        weight_decay=weight_decay)
+    out_shape = [jax.ShapeDtypeStruct((N, R, C), x.dtype)
+                 for x in (theta, m, h)]
+    with jax.named_scope("pallas:sophia_update_batched"):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[tile3, tile3, tile3, tile3, tile3, smem],
+            out_specs=[tile3, tile3, tile3],
             out_shape=out_shape,
             interpret=interpret,
         )(theta, m, h, g, h_hat, flags)

@@ -3,9 +3,10 @@
 A deterministic discrete-event simulator: the *virtual clock* is pure
 host arithmetic over the latency model (`repro.sched.latency`), while
 all model math stays in jitted JAX calls that reuse the engine's own
-comm-path client step (`FedEngine.comm_client_step`) — the same
-downlink-replica / error-feedback / compressor bookkeeping as the
-synchronous round, driven one dispatch at a time.
+comm-path client step (`FedEngine.comm_client_step_batched`) — the
+same downlink-replica / error-feedback / compressor bookkeeping as
+the synchronous round, driven one dispatch group at a time through
+the client-batched kernel launches.
 
 Disciplines (``SchedConfig.discipline``):
 
@@ -292,10 +293,13 @@ class VirtualScheduler:
     # ---------------------------------------------------------- jit bodies
     def _dispatch_impl(self, state, batches, idx, rng_v, round_idx):
         """Run the comm-path client step for the dispatch group ``idx``
-        against the current server model (vmapped, same math as
+        against the current server model (client-batched, same math as
         `_round_comm`).  The server model is packed ONCE into the
-        canonical wire layout; the per-client step is flat-resident
-        end-to-end (`FedEngine.comm_client_step`)."""
+        canonical wire layout; the dispatch group runs as ONE
+        client-batched step (`FedEngine.comm_client_step_batched`) —
+        gathered rows keep the resident dtype (the kernels upcast
+        loads in-VMEM), and the Pallas path is one launch per fused
+        op with the dispatch group as a grid axis."""
         engine = self.engine
         params = state["params"]
         rt = engine.runtime_for(params)
@@ -310,25 +314,17 @@ class VirtualScheduler:
             return (None if tree is None
                     else jax.tree.map(lambda x: x[idx], tree))
 
-        def take32(tree):
-            # resident rows -> fp32 compute values (no-op for fp32)
-            return engine._compute32(take(tree))
-
-        opts_g = take32(state.get("client_opt") if self._stateful
-                        else None)
-        ef_g = take32(state.get("comm_ef"))
-        dnm_g = take32(state.get(cdown.MODEL_KEY))
-        dnef_g = take32(state.get(cdown.EF_KEY))
+        opts_g = take(state.get("client_opt") if self._stateful
+                      else None)
+        ef_g = take(state.get("comm_ef"))
+        dnm_g = take(state.get(cdown.MODEL_KEY))
+        dnef_g = take(state.get(cdown.EF_KEY))
         batches_g = take(batches)
         rngs_g = jax.vmap(lambda i: jax.random.fold_in(rng_v, i))(idx)
 
-        def client(opt, ef_i, dnm_i, dnef_i, batch, crng):
-            return engine.comm_client_step(
-                rt, theta, theta_dn, round_idx, lr,
-                opt, ef_i, dnm_i, dnef_i, batch, crng)
-
-        return jax.vmap(client)(opts_g, ef_g, dnm_g, dnef_g,
-                                batches_g, rngs_g)
+        return engine.comm_client_step_batched(
+            rt, theta, theta_dn, round_idx, lr,
+            opts_g, ef_g, dnm_g, dnef_g, batches_g, rngs_g)
 
     def _apply_impl(self, state, wires, stats, weights, idx,
                     ef_rows, opt_rows, dnm_rows, dnef_rows):

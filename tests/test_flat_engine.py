@@ -37,6 +37,7 @@ import numpy as np
 import pytest
 
 from repro.comm import downlink as cdown, flat as cflat
+from repro.kernels import tuning as ktuning
 from repro.comm.compressors import (make_compressor, make_stream_compressor,
                                     participation_indices,
                                     wants_error_feedback)
@@ -512,12 +513,35 @@ def test_flat_round_jit_sophia_close(setup):
                                    rtol=1e-3, atol=1e-3)
 
 
-def test_flat_round_bit_identical_jit_pallas_kernels(setup):
+@pytest.fixture
+def default_kernel_geometry(monkeypatch, tmp_path):
+    """Force the safe default launch geometry (one client per grid
+    step) regardless of the committed tuning table.  Kernel VALUES are
+    block-invariant (pinned per kernel x dtype x geometry by
+    tests/test_kernel_conformance.py), but in interpret mode a
+    different grid restructures the surrounding jitted program enough
+    for XLA:CPU's per-fusion FMA contraction to seed a last-ulp
+    difference vs the tree reference (the module-docstring caveat) —
+    so the flat-vs-tree BITWISE pin runs on the fixed historical
+    geometry."""
+    monkeypatch.setattr(ktuning, "TUNING_PATH",
+                        str(tmp_path / "absent.json"))
+    ktuning.load_tuning.cache_clear()
+    yield
+    ktuning.load_tuning.cache_clear()
+
+
+def test_flat_round_bit_identical_jit_pallas_kernels(
+        setup, default_kernel_geometry):
     """The fused-kernel path: flat-resident state feeds the Sophia and
     quantize kernels directly; the reference packs/unpacks around the
     same kernels per iteration (the historical behaviour).  The kernel
     is one opaque unit in both programs, so this is bitwise even under
-    jit — the production path carries the strongest guarantee."""
+    jit — the production path carries the strongest guarantee.  Pinned
+    on the default launch geometry (see `default_kernel_geometry`);
+    the tuned batched geometry's value-equivalence is pinned by the
+    kernel conformance suite and
+    tests/test_residency.py::test_comm_client_step_batched_matches_vmap."""
     task, batches = setup
     fed = FedConfig(num_clients=4, local_iters=2, optimizer="fed_sophia",
                     strategy="parallel", lr=0.01, tau=2, use_pallas=True,

@@ -10,11 +10,27 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
+from repro.comm import compressors as ccomp
+from repro.comm import flat as cflat
+from repro.configs.base import CommConfig
 from repro.core import sophia
 from repro.kernels.ref import sophia_update_ref
 from repro.kernels.sophia_update import sophia_update_flat
 
 SETTINGS = dict(max_examples=25, deadline=None)
+
+#: small fixed geometry pool: every (total, cols) is a distinct jit
+#: compile, so the strategies sample shapes from here and let the
+#: seeds/dtypes/paths roam free
+GEOMETRIES = [(40, 8), (100, 32), (7, 5)]
+
+
+def _make(compressor: str, total: int, cols: int, use_pallas: bool,
+          **kw) -> ccomp.Compressor:
+    spec = cflat.flat_spec({"w": jnp.zeros((total,))}, cols=cols)
+    return ccomp.make_compressor(
+        CommConfig(compressor=compressor, use_pallas=use_pallas, **kw),
+        spec)
 
 floats = st.floats(min_value=-100.0, max_value=100.0, allow_nan=False,
                    width=32)
@@ -79,6 +95,173 @@ def test_update_bounded_step_property(theta, lr, rho):
     delta = np.abs(np.asarray(out["t"]) - theta)
     # allow one ulp of theta for the float32 subtract
     assert np.all(delta <= lr * rho * (1 + 1e-5) + 1e-5 * np.abs(theta) + 1e-6)
+
+
+# --------------------------- compressor round-trip invariants
+#
+# Random geometries / seeds / dtypes / lowering paths, asserting the
+# algebraic contracts every stream compressor must keep: dequant
+# values live on the quantization lattice, EF residuals reconstruct
+# the delta exactly, sparsifier/sign codebooks are what the wire
+# format claims — and the client-batched entry points agree with the
+# per-client ones.
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       bits=st.sampled_from([8, 4]),
+       use_pallas=st.booleans(),
+       dtype=st.sampled_from([np.float32, "bfloat16"]))
+def test_quant_dequant_lattice_invariant(geom, seed, bits, use_pallas,
+                                         dtype):
+    """int8/int4 reconstructions are integral multiples of the per-row
+    scale, with |code| <= qmax — for both lowering paths and both
+    storage dtypes."""
+    total, cols = geom
+    comp = _make(f"int{bits}", total, cols, use_pallas)
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.normal(jax.random.fold_in(key, 1),
+                             (comp.spec.rows, comp.spec.cols)
+                             ).astype(jnp.dtype(dtype))
+    xhat, _ = comp.roundtrip(key, flat)
+    scale = np.asarray(comp._scales(flat), np.float32)
+    safe = np.where(scale > 0, scale, 1.0)
+    q = np.asarray(xhat, np.float32) / safe
+    # a bf16 store rounds the reconstruction off the exact lattice by
+    # up to one bf16 ulp of the code magnitude; fp32 is exact
+    ulp = 2.0 ** -8 if dtype == "bfloat16" else 0.0
+    assert np.all(np.abs(q - np.round(q)) <= ulp * np.abs(q) + 1e-3)
+    assert np.all(np.abs(q) <= comp.qmax * (1 + ulp) + 1e-3)
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       use_pallas=st.booleans())
+def test_uplink_ef_residual_reconstructs_delta(geom, seed, use_pallas):
+    """EF invariant: xhat + new_ef == (theta - start) + ef, so nothing
+    the quantizer drops is ever lost (the residual carries it)."""
+    total, cols = geom
+    comp = _make("int8", total, cols, use_pallas, error_feedback=True)
+    key = jax.random.PRNGKey(seed)
+    shape = (comp.spec.rows, comp.spec.cols)
+    theta = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    start = theta + 0.05 * jax.random.normal(jax.random.fold_in(key, 2),
+                                             shape)
+    ef = 0.01 * jax.random.normal(jax.random.fold_in(key, 3), shape)
+    xhat, _, new_ef = comp.encode_delta(key, theta, start, ef)
+    delta = np.asarray(theta - start + ef)
+    np.testing.assert_allclose(np.asarray(xhat) + np.asarray(new_ef),
+                               delta, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       use_pallas=st.booleans(),
+       ratio=st.sampled_from([0.01, 0.1, 0.5]))
+def test_topk_sparsity_and_value_preservation(geom, seed, use_pallas,
+                                              ratio):
+    """top-k keeps at most k coordinates and passes their values
+    through untouched (zero elsewhere)."""
+    total, cols = geom
+    comp = _make("topk", total, cols, use_pallas, topk_ratio=ratio)
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.normal(jax.random.fold_in(key, 1),
+                             (comp.spec.rows, comp.spec.cols))
+    xhat, _ = comp.roundtrip(key, flat)
+    xh = np.asarray(xhat)
+    nz = xh != 0
+    assert nz.sum() <= comp.k
+    np.testing.assert_array_equal(xh[nz], np.asarray(flat)[nz])
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       use_pallas=st.booleans())
+def test_signsgd_codebook(geom, seed, use_pallas):
+    """signsgd reconstructions take exactly the values {-s, 0, +s}
+    with s the reported aggregation stat (mean |x|)."""
+    total, cols = geom
+    comp = _make("signsgd", total, cols, use_pallas)
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.normal(jax.random.fold_in(key, 1),
+                             (comp.spec.rows, comp.spec.cols))
+    xhat, stat = comp.roundtrip(key, flat)
+    s = np.float32(stat)
+    xh = np.asarray(xhat)
+    assert np.all(np.isin(xh, [-s, np.float32(0.0), s]))
+    np.testing.assert_allclose(s, np.abs(np.asarray(flat)).sum()
+                               / comp.spec.total, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       compressor=st.sampled_from(["int8", "int4", "topk", "signsgd"]),
+       use_pallas=st.booleans())
+def test_roundtrip_batched_matches_unbatched(geom, seed, compressor,
+                                             use_pallas):
+    """`roundtrip_batched` over an (N, rows, cols) stack == the N
+    per-client round-trips, for every compressor family and both
+    lowering paths (the Pallas path is ONE client-batched launch)."""
+    total, cols = geom
+    n = 3
+    comp = _make(compressor, total, cols, use_pallas)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    stack = jax.random.normal(jax.random.fold_in(keys[0], 99),
+                              (n, comp.spec.rows, comp.spec.cols))
+    bx, bs = comp.roundtrip_batched(keys, stack)
+    for i in range(n):
+        xi, si = comp.roundtrip(keys[i], stack[i])
+        np.testing.assert_allclose(np.asarray(bx[i]), np.asarray(xi),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(bs[i]), np.asarray(si),
+                                   rtol=1e-6, atol=0)
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       use_pallas=st.booleans(),
+       with_ef=st.booleans(),
+       shared_start=st.booleans())
+def test_encode_delta_batched_matches_unbatched(geom, seed, use_pallas,
+                                                with_ef, shared_start):
+    """`encode_delta_batched` == the per-client uplink encodes, for a
+    shared 2D start (replicas off) and per-client start stacks, with
+    and without EF — and the EF invariant holds row by row."""
+    total, cols = geom
+    n = 3
+    comp = _make("int8", total, cols, use_pallas,
+                 error_feedback=with_ef)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, n)
+    shape3 = (n, comp.spec.rows, comp.spec.cols)
+    theta = jax.random.normal(jax.random.fold_in(key, 1), shape3)
+    start = (jax.random.normal(jax.random.fold_in(key, 2),
+                               shape3[1:]) if shared_start
+             else jax.random.normal(jax.random.fold_in(key, 2), shape3))
+    ef = (0.01 * jax.random.normal(jax.random.fold_in(key, 3), shape3)
+          if with_ef else None)
+    bx, bs, bef = comp.encode_delta_batched(keys, theta, start, ef)
+    assert (bef is None) == (ef is None)
+    for i in range(n):
+        si = start if shared_start else start[i]
+        xi, _, efi = comp.encode_delta(keys[i], theta[i], si,
+                                       None if ef is None else ef[i])
+        np.testing.assert_allclose(np.asarray(bx[i]), np.asarray(xi),
+                                   rtol=1e-6, atol=1e-7)
+        if ef is not None:
+            np.testing.assert_allclose(np.asarray(bef[i]),
+                                       np.asarray(efi),
+                                       rtol=1e-6, atol=1e-7)
+            delta = np.asarray(theta[i] - si + ef[i])
+            np.testing.assert_allclose(
+                np.asarray(bx[i]) + np.asarray(bef[i]), delta,
+                rtol=1e-5, atol=1e-5)
 
 
 @settings(**SETTINGS)

@@ -123,6 +123,65 @@ def test_pack_unpack_state_roundtrip(task_data):
     assert e.num_params(packed) == e.num_params(state) == rt.spec.total
 
 
+# ------------------------------------- client-batched comm step (tentpole)
+BATCHED_STEP_MATRIX = [
+    ("int8-pallas", CommConfig(compressor="int8", use_pallas=True,
+                               downlink_compressor="int8",
+                               hessian_compressor="int4")),
+    ("int8", CommConfig(compressor="int8")),
+    ("ef-topk", CommConfig(compressor="topk")),
+    ("int8-pallas-bf16", CommConfig(compressor="int8", use_pallas=True,
+                                    state_dtype="bfloat16")),
+]
+
+
+@pytest.mark.parametrize("name,comm", BATCHED_STEP_MATRIX,
+                         ids=[c[0] for c in BATCHED_STEP_MATRIX])
+def test_comm_client_step_batched_matches_vmap(task_data, name, comm):
+    """`FedEngine.comm_client_step_batched` (ONE client-batched pass:
+    batched kernels, scan-of-vmap local training) is BITWISE the
+    vmapped per-client `comm_client_step` — fp32 and bf16 resident
+    rows (gathered rows flow to the kernels un-upcast), with and
+    without the Pallas lowering (op-by-op execution)."""
+    from repro.comm import downlink as cdown
+    task, batches, key = task_data
+    e = _engine(task, comm)
+    state = e.pack_state(e.init(key))
+    params = state["params"]
+    rt = e.runtime_for(params)
+    theta = params.astype(jnp.float32)
+    theta_dn = (cflat.repack(theta, rt.spec, rt.spec_dn)
+                if rt.dn_on else None)
+    round_idx = jnp.asarray(0, jnp.int32)
+    rng = jax.random.fold_in(key, 21)
+    crngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(4))
+    opts = state.get("client_opt")
+    efs = state.get("comm_ef")
+    dnms = state.get(cdown.MODEL_KEY)
+    dnefs = state.get(cdown.EF_KEY)
+
+    def run_batched():
+        return e.comm_client_step_batched(
+            rt, theta, theta_dn, round_idx, 0.02, opts, efs, dnms,
+            dnefs, batches, crngs)
+
+    def run_looped():
+        return jax.vmap(
+            lambda opt, ef_i, dnm, dnef, b, r: e.comm_client_step(
+                rt, theta, theta_dn, round_idx, 0.02, opt, ef_i, dnm,
+                dnef, b, r))(opts, efs, dnms, dnefs, batches, crngs)
+
+    if comm.use_pallas:
+        # Pallas interpret mode cannot run under disable_jit (its
+        # interpreter lowers through jit); the jitted comparison is
+        # what the engine actually executes anyway
+        batched, looped = jax.jit(run_batched)(), jax.jit(run_looped)()
+    else:
+        with jax.disable_jit():
+            batched, looped = run_batched(), run_looped()
+    _assert_bitwise(batched, looped, name)
+
+
 # ------------------------------------------------------ donation contract
 def test_donated_round_bitwise_and_invalidating(task_data):
     """Donated vs undonated jitted rounds are bitwise identical, under

@@ -1,0 +1,239 @@
+#!/usr/bin/env python
+"""Block-size autotuner for the Pallas kernels.
+
+Sweep mode (default)::
+
+    PYTHONPATH=src python tools/autotune_kernels.py
+
+times every kernel in `repro.kernels.KERNELS` at the committed
+benchmark sizes (the `benchmarks.run` engine workload: a 4-client
+cohort over the packed (54, 1024) wire buffer) across a small grid of
+candidate (block_n, block_r, block_c) launch geometries, and writes
+the per-kernel winners to ``src/repro/kernels/tuning.json`` — the
+table `repro.kernels.tuning` consults at trace time.  Block shape
+never changes kernel values (every entry point is elementwise per
+coordinate), only launch geometry, so re-tuning is always safe.
+
+Check mode (CI: `make autotune-check`)::
+
+    PYTHONPATH=src python tools/autotune_kernels.py --check
+
+validates the COMMITTED table: it must parse, carry ``version: 1``,
+its keys must equal the `repro.kernels.KERNELS` registry exactly, and
+every entry's block fields must be ints >= 1.  Then every kernel is
+compiled and run on CPU (interpret mode) at a deliberately ragged
+size with its committed blocks, and the result asserted bitwise equal
+to the safe-default geometry — a committed entry that fails to
+compile, or that somehow changed values, is a CI error.  Exits
+nonzero on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import INTERPRET, KERNELS, tuning
+from repro.kernels.quantize import (broadcast_roundtrip_batched,
+                                    quant_roundtrip_batched,
+                                    sign_roundtrip_batched,
+                                    topk_threshold_batched,
+                                    uplink_roundtrip_batched)
+from repro.kernels.sophia_update import sophia_update_batched
+from repro.kernels.stale_accum import stale_accum_flat
+
+#: the engine benchmark workload (benchmarks/run.py `fig_engine`):
+#: 4 clients, MLP packed to a (54, 1024) wire buffer
+SWEEP_N, SWEEP_R, SWEEP_C = 4, 54, 1024
+#: ragged check size: nothing divides the committed blocks evenly
+CHECK_N, CHECK_R, CHECK_C = 3, 20, 100
+
+QMAX = 127
+
+
+def _flatten(tree):
+    return jax.tree.leaves(tree)
+
+
+def make_runners(N: int, R: int, C: int):
+    """kernel name -> fn(blocks3) running that kernel's client-batched
+    launch on fixed deterministic inputs, returning the output leaves
+    (blocked until ready).  ``blocks3`` is the (bn, br, bc) override
+    handed to the kernel; None runs the tuned/default path."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    x = jax.random.normal(ks[0], (N, R, C), jnp.float32)
+    y = jax.random.normal(ks[1], (N, R, C), jnp.float32)
+    z = jax.random.normal(ks[2], (N, R, C), jnp.float32)
+    g = jax.random.normal(ks[3], (N, R, C), jnp.float32)
+    noise = jax.random.uniform(ks[4], (N, R, C), jnp.float32)
+    scale = 0.1 + jax.random.uniform(ks[5], (N, R, 1), jnp.float32)
+    theta2 = jax.random.normal(ks[6], (R, C), jnp.float32)
+    wires = jax.random.normal(ks[7], (N, R, C), jnp.float32)
+    weights = jnp.linspace(0.5, 1.0, N)
+    cscale = jnp.linspace(0.9, 1.1, N)
+
+    def run(fn, *args, **kw):
+        out = fn(*args, **kw)
+        leaves = _flatten(out)
+        jax.block_until_ready(leaves)
+        return leaves
+
+    return {
+        "quant_roundtrip": lambda b: run(
+            quant_roundtrip_batched, x, noise, scale, qmax=QMAX,
+            interpret=INTERPRET, blocks=b),
+        "broadcast_roundtrip": lambda b: run(
+            broadcast_roundtrip_batched, theta2, y, z, noise, scale,
+            qmax=QMAX, interpret=INTERPRET, blocks=b),
+        "uplink_roundtrip": lambda b: run(
+            uplink_roundtrip_batched, x, theta2, z, noise, scale,
+            qmax=QMAX, interpret=INTERPRET, blocks=b),
+        "sign_roundtrip": lambda b: run(
+            sign_roundtrip_batched, x, cscale, interpret=INTERPRET,
+            blocks=b),
+        "topk_threshold": lambda b: run(
+            topk_threshold_batched, x, cscale, interpret=INTERPRET,
+            blocks=b),
+        "sophia_update": lambda b: run(
+            sophia_update_batched, x, y, z, g, noise, True, 0.01,
+            beta1=0.9, beta2=0.99, rho=0.05, eps=1e-12,
+            weight_decay=0.0, interpret=INTERPRET, blocks=b),
+        # the tuned stale_accum path pins block_k=1 (bitwise add
+        # order); the sweep/check only exercise (1, br, bc)
+        "stale_accum": lambda b: run(
+            stale_accum_flat, wires, weights, jnp.float32(1.0),
+            interpret=INTERPRET,
+            blocks=None if b is None else (1, b[1], b[2])),
+    }
+
+
+def candidates(N: int):
+    """The sweep grid: client-axis batching is the interpret-mode
+    lever (fewer grid steps), tile shape matters on real hardware."""
+    bns = sorted({1, 2, N})
+    tiles = [(tuning.DEFAULT_BLOCK_R, tuning.DEFAULT_BLOCK_C), (64, 256)]
+    return [(bn, br, bc) for bn in bns for (br, bc) in tiles]
+
+
+def time_blocks(runner, blocks, repeats: int) -> float:
+    runner(blocks)                      # compile + warm up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        runner(blocks)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(out_path: str, repeats: int) -> int:
+    runners = make_runners(SWEEP_N, SWEEP_R, SWEEP_C)
+    entries = {}
+    for kernel in KERNELS:
+        runner = runners[kernel]
+        results = []
+        for blocks in candidates(SWEEP_N):
+            us = time_blocks(runner, blocks, repeats) * 1e6
+            results.append((us, blocks))
+            print(f"  {kernel:>20s}  bn={blocks[0]:<2d} "
+                  f"br={blocks[1]:<4d} bc={blocks[2]:<4d} "
+                  f"{us:10.1f} us")
+        best_us, (bn, br, bc) = min(results)
+        if kernel == "stale_accum":
+            bn = 1                      # tuned path never blocks K
+        entries[kernel] = {"block_n": bn, "block_r": br, "block_c": bc}
+        print(f"  {kernel:>20s}  -> bn={bn} br={br} bc={bc} "
+              f"({best_us:.1f} us)\n")
+    table = {"version": 1,
+             "backend": ("cpu-interpret" if INTERPRET
+                         else jax.default_backend()),
+             "entries": {k: entries[k] for k in sorted(entries)}}
+    with open(out_path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return 0
+
+
+def check(path: str) -> int:
+    errors = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"autotune-check: cannot read {path}: {e}")
+        return 1
+    if data.get("version") != 1:
+        errors.append(f"version is {data.get('version')!r}, want 1")
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        print(f"autotune-check: {path} has no 'entries' dict")
+        return 1
+    got, want = set(entries), set(KERNELS)
+    for k in sorted(want - got):
+        errors.append(f"kernel `{k}` has no tuning entry")
+    for k in sorted(got - want):
+        errors.append(f"entry `{k}` is not a registered kernel")
+    for k, e in sorted(entries.items()):
+        for field in ("block_n", "block_r", "block_c"):
+            v = e.get(field) if isinstance(e, dict) else None
+            if not isinstance(v, int) or v < 1:
+                errors.append(f"{k}.{field} = {v!r} (want int >= 1)")
+    if errors:
+        print(f"autotune-check: {len(errors)} problem(s) in {path}")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+
+    # compile + run every kernel at a ragged size with the committed
+    # blocks, and pin bitwise equality vs the safe-default geometry
+    runners = make_runners(CHECK_N, CHECK_R, CHECK_C)
+    default = (tuning.DEFAULT_BLOCK_N, tuning.DEFAULT_BLOCK_R,
+               tuning.DEFAULT_BLOCK_C)
+    for kernel in KERNELS:
+        e = entries[kernel]
+        blocks = (e["block_n"], e["block_r"], e["block_c"])
+        try:
+            tuned = runners[kernel](blocks)
+            base = runners[kernel](default)
+        except Exception as exc:   # noqa: BLE001 - report, don't crash
+            errors.append(f"{kernel}: blocks={blocks} failed to "
+                          f"compile/run: {exc}")
+            continue
+        for t, b in zip(tuned, base):
+            if not np.array_equal(np.asarray(t), np.asarray(b)):
+                errors.append(f"{kernel}: blocks={blocks} changed "
+                              f"values vs default geometry")
+                break
+        print(f"  {kernel:>20s}  blocks={blocks} ok")
+    if errors:
+        print(f"autotune-check: {len(errors)} kernel failure(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"autotune-check: {path} ok ({len(KERNELS)} kernels)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="validate the committed tuning.json instead "
+                         "of sweeping")
+    ap.add_argument("--out", default=tuning.TUNING_PATH,
+                    help="tuning table path (default: the committed "
+                         "src/repro/kernels/tuning.json)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per candidate (sweep mode)")
+    args = ap.parse_args()
+    if args.check:
+        return check(args.out)
+    return sweep(args.out, args.repeats)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

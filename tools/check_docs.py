@@ -25,7 +25,12 @@ that no longer exist, so the docs cannot silently drift from the code:
 * the metric catalogue in ``docs/observability.md`` must list exactly
   the metrics registered in ``src/repro/obs/schema.py`` (regex-parsed
   ``Metric("name", ...)`` literals — no package import), so the obs
-  docs can't drift from the record schema.
+  docs can't drift from the record schema;
+* the committed kernel tuning table ``src/repro/kernels/tuning.json``
+  must parse and its entry keys must equal the ``KERNELS`` registry in
+  ``src/repro/kernels/__init__.py`` (regex-parsed — no package
+  import), so a kernel rename can't silently orphan its tuning entry
+  (``make autotune-check`` additionally compiles each entry).
 
 Pure stdlib + text matching — no imports of the package, so it runs in
 seconds on a bare checkout.
@@ -47,6 +52,10 @@ CLI_SOURCES = {
 }
 CONFIG_SOURCE = ROOT / "src" / "repro" / "configs" / "base.py"
 OBS_SCHEMA_SOURCE = ROOT / "src" / "repro" / "obs" / "schema.py"
+KERNELS_SOURCE = ROOT / "src" / "repro" / "kernels" / "__init__.py"
+TUNING_JSON = ROOT / "src" / "repro" / "kernels" / "tuning.json"
+#: the KERNELS registry is a tuple of one string literal per line
+KERNELS_RE = re.compile(r"^KERNELS = \((.*?)\)", re.S | re.M)
 OBS_DOC = ROOT / "docs" / "observability.md"
 #: the metric registry declares one Metric("name", ...) literal per
 #: line (the schema docstring mandates it) — regex-parseable here
@@ -201,6 +210,41 @@ def check_metric_catalogue(errors) -> None:
                       f"is not a registered metric")
 
 
+def check_tuning_table(errors) -> None:
+    """The committed kernel tuning table (src/repro/kernels/
+    tuning.json) must parse and its entry keys must EQUAL the KERNELS
+    registry (regex-parsed from the kernels package __init__) — a
+    renamed kernel whose tuning entry survives, or a kernel missing
+    from the table, is a CI error.  Compile-level validation lives in
+    `make autotune-check`; this is the no-import text check."""
+    import json
+    m = KERNELS_RE.search(KERNELS_SOURCE.read_text())
+    registered = set(re.findall(r'"(\w+)"', m.group(1))) if m else set()
+    if not registered:
+        errors.append("tools/check_docs.py: found no KERNELS registry "
+                      "in src/repro/kernels/__init__.py")
+        return
+    if not TUNING_JSON.exists():
+        errors.append("src/repro/kernels/tuning.json is missing — run "
+                      "`make autotune`")
+        return
+    try:
+        data = json.loads(TUNING_JSON.read_text())
+    except ValueError as e:
+        errors.append(f"src/repro/kernels/tuning.json: bad JSON ({e})")
+        return
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        errors.append("src/repro/kernels/tuning.json: no 'entries' dict")
+        return
+    for name in sorted(registered - set(entries)):
+        errors.append(f"src/repro/kernels/tuning.json: kernel `{name}` "
+                      f"has no tuning entry — run `make autotune`")
+    for name in sorted(set(entries) - registered):
+        errors.append(f"src/repro/kernels/tuning.json: entry `{name}` "
+                      f"is not in the repro.kernels.KERNELS registry")
+
+
 def main() -> int:
     make_targets = set(re.findall(r"^([\w-]+):", (ROOT / "Makefile")
                                   .read_text(), re.M))
@@ -210,6 +254,7 @@ def main() -> int:
             check_file(doc, make_targets, errors)
     check_config_reference(errors)
     check_metric_catalogue(errors)
+    check_tuning_table(errors)
     if errors:
         print(f"docs-check: {len(errors)} stale reference(s)")
         for e in errors:
