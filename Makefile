@@ -3,7 +3,7 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke example-comm docs-check docs-gen obs-smoke autotune autotune-check
+.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke bench-records-check example-comm docs-check docs-gen obs-smoke obs-trace-smoke autotune autotune-check
 
 test-fast:
 	$(PY) -m pytest -q
@@ -64,6 +64,29 @@ obs-smoke:
 		--schedule semisync --latency-profile straggler \
 		--probes --obs-log /tmp/obs_smoke.jsonl
 	python tools/obs_report.py /tmp/obs_smoke.jsonl --validate
+
+# CI gate on the tracing + observatory layer: the same 2-round
+# semisync run with per-dispatch trace contexts on, exported as
+# Chrome Trace / Perfetto JSON and structurally validated (required
+# keys per event, non-negative durations, monotonic timestamps per
+# lane), then an obs_diff self-compare that must report zero drift
+obs-trace-smoke:
+	$(PY) -m repro.launch.train --arch minicpm-2b --reduced --rounds 2 \
+		--clients 2 --local-iters 1 --batch 1 --seq 16 \
+		--schedule semisync --latency-profile straggler \
+		--probes --trace --obs-log /tmp/obs_trace_smoke.jsonl
+	python tools/obs_trace.py /tmp/obs_trace_smoke.jsonl --validate
+	python tools/obs_diff.py /tmp/obs_trace_smoke.jsonl \
+		/tmp/obs_trace_smoke.jsonl
+
+# CI gate on the committed benchmark trajectories: every row of
+# experiments/bench_*.json and BENCH_engine.json must be a
+# schema-valid obs `bench` record behind a current-version manifest
+# (they are regenerated through the recorder by benchmarks.run)
+bench-records-check:
+	python tools/obs_report.py experiments/bench_comm.json --validate
+	python tools/obs_report.py experiments/bench_sched.json --validate
+	python tools/obs_report.py BENCH_engine.json --validate
 
 example-comm:
 	$(PY) examples/comm_compression.py

@@ -27,10 +27,73 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: committed perf trajectory of the engine benchmark (baseline = the
 #: pre-flat-resident tree engine; current = this checkout)
 BENCH_ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
+#: committed comm / sched benchmark rows — schema-validated `bench`
+#: records (manifest first), regenerated through the recorder
+BENCH_COMM_JSON = os.path.join(ROOT, "experiments", "bench_comm.json")
+BENCH_SCHED_JSON = os.path.join(ROOT, "experiments", "bench_sched.json")
 
 
 def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _opt(rec: dict, **fields) -> dict:
+    """Attach the non-None fields — records omit absent metrics
+    instead of writing nulls the schema would reject."""
+    for k, v in fields.items():
+        if v is not None:
+            rec[k] = v
+    return rec
+
+
+def _write_bench_records(path: str, rows: list, bench: str,
+                         write: bool = True) -> None:
+    """Emit benchmark rows through the recorder — every row validated
+    against the obs schema at emit time, manifest header first — and
+    (unless ``write=False``, the smoke path: validate only) commit
+    them as the pretty JSON array under experiments/ that
+    `tools/obs_report.py --validate` gates in CI and
+    `tools/obs_diff.py` aligns by row name across checkouts."""
+    rec = obs.RunRecorder(meta={"bench": bench})
+    rec.emit_all(rows)
+    rec.close()
+    if not write:
+        return
+    with open(path, "w") as f:
+        json.dump(rec.ring.records(), f, indent=1)
+        f.write("\n")
+    print(f"# wrote {len(rows)} bench records to {path}", flush=True)
+
+
+#: the schema-registered engine columns a committed record keeps; the
+#: in-run annotations (gate flags, ratios) stay in bench_results.json
+_ENGINE_FIELDS = ("layout_ops", "us_per_round", "state_copy_bytes",
+                  "resident_state_bytes")
+
+
+def _engine_record(name: str, row: dict) -> dict:
+    rec = {"record": "bench", "name": name}
+    for f in _ENGINE_FIELDS:
+        v = row.get(f)
+        if v is not None:
+            rec[f] = float(v) if f == "us_per_round" else int(v)
+    return rec
+
+
+def _load_engine_hist(data) -> dict:
+    """The committed engine trajectory as ``{"baseline" | "current":
+    {regime: row}}``.  The committed format is a JSON array of bench
+    records named ``<group>/<regime>`` (manifest first); the legacy
+    pre-v2 dict-of-dicts shape still loads for old checkouts."""
+    if isinstance(data, dict):      # legacy {"baseline": {name: row}}
+        return data
+    hist: dict = {"baseline": {}, "current": {}}
+    for r in data:
+        if r.get("record") != "bench":
+            continue
+        group, _, name = r["name"].partition("/")
+        hist.setdefault(group, {})[name] = r
+    return hist
 
 
 # ---------------------------------------------------------------- Fig. 2
@@ -159,6 +222,7 @@ def fig_comm_bytes(paper_scale: bool, out: dict):
                                  hessian_compressor="int4"),
     }
     base_total = None
+    recs = []
     for name, comm in comms.items():
         res = common.run_federated("cnn", "mnist", "fed_sophia",
                                    clients=clients, rounds=rounds,
@@ -183,6 +247,17 @@ def fig_comm_bytes(paper_scale: bool, out: dict):
             "bytes_to_75": res.bytes_to_target,
             "accs": res.accs,
         }
+        recs.append(_opt(
+            {"record": "bench", "name": f"comm/cnn/mnist/{name}",
+             "uplink_bytes": int(res.uplink_bytes_per_round),
+             "downlink_bytes": int(res.downlink_bytes_per_round),
+             "hessian_bytes": int(res.hessian_bytes_per_round),
+             "total_bytes": int(res.total_bytes_per_round),
+             "reduction_x": float(ratio),
+             "accs": [float(a) for a in res.accs]},
+            bytes_to_target=None if res.bytes_to_target is None
+            else int(res.bytes_to_target)))
+    _write_bench_records(BENCH_COMM_JSON, recs, "comm")
 
 
 # ------------------------------------------------------------ Fig. sched
@@ -218,6 +293,7 @@ def fig_sched(paper_scale: bool, out: dict, smoke: bool = False):
     }
     target = None
     sync_t = None
+    recs = []
     for name, (sched, budget) in runs.items():
         res = common.run_scheduled(
             "mlp", "mnist", "fed_sophia", sched=sched, events=budget,
@@ -254,6 +330,24 @@ def fig_sched(paper_scale: bool, out: dict, smoke: bool = False):
             "eval_losses": [e.eval_loss for e in trace.events],
             "cum_bytes": [e.cum_bytes for e in trace.events],
         }
+        recs.append(_opt(
+            {"record": "bench",
+             "name": f"sched/mlp/mnist/straggler/{name}",
+             "target_loss": float(target),
+             "events": len(trace.events),
+             "max_staleness": int(max_stale),
+             "event_times_s": [float(e.time) for e in trace.events],
+             "event_eval_losses": [float(e.eval_loss)
+                                   for e in trace.events],
+             "event_cum_bytes": [int(e.cum_bytes)
+                                 for e in trace.events]},
+            sim_s_to_target=float(t_target) if t_target else None,
+            bytes_to_target=None if b_target is None else int(b_target),
+            speedup_x=float(speedup) if speedup else None))
+    # --smoke validates the record construction path without touching
+    # the committed rows (its budgets are CI-sized, not the benchmark)
+    _write_bench_records(BENCH_SCHED_JSON, recs, "sched",
+                         write=not smoke)
 
 
 # ----------------------------------------------------- engine micro-bench
@@ -303,8 +397,9 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     resident buffer in place; from `compiled.memory_analysis()`), and
     the bf16 regime on ``resident_state_bytes`` ≤ 0.55x its fp32 twin
     (`CommConfig.state_dtype`).  Results append to the committed perf
-    trajectory in BENCH_engine.json ("baseline" = the pre-flat-
-    resident tree engine, frozen; "current" = this checkout) and the
+    trajectory in BENCH_engine.json — schema-validated ``bench``
+    records named ``baseline/<regime>`` (the pre-flat-resident tree
+    engine, frozen) and ``current/<regime>`` (this checkout) — and the
     run FAILS if a gated regime's op count (or a residency gate)
     regresses — `make bench-engine-smoke` runs the same gates in CI
     (`--smoke`: few-iteration timing, no file write).  Wall-clock
@@ -412,17 +507,12 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
                          "aliased_bytes": aliased,
                          "state_copy_bytes": copy_bytes}
         # every row doubles as a schema-validated obs `bench` record
-        rec = {"record": "bench", "name": name, "layout_ops": ops,
-               "state_copy_bytes": copy_bytes,
-               "resident_state_bytes": resident}
-        if us is not None:
-            rec["us_per_round"] = us
-        obs.validate_record(rec)
+        obs.validate_record(_engine_record(name, results[name]))
 
     hist = {}
     if os.path.exists(BENCH_ENGINE_JSON):
         with open(BENCH_ENGINE_JSON) as f:
-            hist = json.load(f)
+            hist = _load_engine_hist(json.load(f))
     elif smoke:
         # the smoke run exists to gate against the COMMITTED trajectory;
         # without it the comparison degenerates to self-vs-self and CI
@@ -528,10 +618,13 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
             "engine benchmark: layout-conversion op count regressed:\n  "
             + "\n  ".join(regressions))
     if not smoke:
-        with open(BENCH_ENGINE_JSON, "w") as f:
-            json.dump({"baseline": baseline, "current": results}, f,
-                      indent=1)
-            f.write("\n")
+        _write_bench_records(
+            BENCH_ENGINE_JSON,
+            [_engine_record(f"{group}/{name}", r)
+             for group, rows in (("baseline", baseline),
+                                 ("current", results))
+             for name, r in rows.items()],
+            "engine")
 
 
 # ----------------------------------------------------- kernel micro-bench

@@ -312,6 +312,8 @@ class ObsConfig:
     """
     probes: bool = False              # device-side Sophia health probes
     #                                   in the round metrics dict
+    trace: bool = False               # per-dispatch trace contexts on
+    #                                   the virtual clock (repro.obs.trace)
     flush_every: int = 10             # rounds between metric-buffer
     #                                   flushes (host syncs) in obs runs
     ring_capacity: int = 1024         # in-memory ring sink capacity

@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--profile-dir", default="",
                     help="capture a jax.profiler trace (annotated "
                          "prefill/decode spans) into this directory")
+    ap.add_argument("--obs-log", default="",
+                    help="write structured `serve` records (tokens/sec, "
+                         "prefill/decode latency percentiles) to this "
+                         "JSONL; render with tools/obs_dashboard.py")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -46,6 +50,13 @@ def main():
         prompt = {"tokens": jax.random.randint(key, (B, P), 0,
                                                cfg.vocab_size)}
 
+    recorder = None
+    if args.obs_log:
+        recorder = obs.RunRecorder(
+            args.obs_log,
+            meta={"arch": cfg.name, "batch": B, "prompt_len": P,
+                  "gen": G, "mode": "serve"})
+
     prof = obs.profile_trace(args.profile_dir)
     prof.__enter__()
     t0 = time.time()
@@ -53,14 +64,19 @@ def main():
         logits, cache, _ = T.forward(params, cfg, prompt, want_cache=True,
                                      remat=False)
         cache = T.prefill_to_decode_cache(cfg, cache, P, max_len)
-    print(f"prefill ({B}x{P}): {time.time() - t0:.2f}s")
+        if recorder is not None:
+            jax.block_until_ready(cache)
+    prefill_s = time.time() - t0
+    print(f"prefill ({B}x{P}): {prefill_s:.2f}s")
 
     decode = jax.jit(lambda p, b, c, pos: T.decode_step(p, cfg, b, c, pos))
     tok = T.sample_labels(jax.random.fold_in(key, 99),
                           logits[:, -1] / args.temperature, cfg.vocab_size)
     out_tokens = [tok]
+    step_ms = []
     t0 = time.time()
     for i in range(G - 1):
+        ts = time.time()
         pos = jnp.asarray(P + i, jnp.int32)
         if cfg.embedding_inputs:
             step_in = {"embeds": params["embed"][tok][:, None, :]}
@@ -71,12 +87,32 @@ def main():
         tok = T.sample_labels(jax.random.fold_in(key, 100 + i),
                               lg[:, -1] / args.temperature, cfg.vocab_size)
         out_tokens.append(tok)
+        if recorder is not None:
+            # per-step percentiles need a per-step sync; the unlogged
+            # loop keeps its fully-async dispatch
+            jax.block_until_ready(tok)
+            step_ms.append((time.time() - ts) * 1e3)
     dt = time.time() - t0
     prof.__exit__(None, None, None)
     toks = jnp.stack(out_tokens, axis=1)
+    tok_s = G * B / max(dt, 1e-9)
     print(f"decoded {G} tokens x {B} seqs in {dt:.2f}s "
-          f"({G * B / max(dt, 1e-9):.1f} tok/s)")
+          f"({tok_s:.1f} tok/s)")
     print("sampled token ids:", toks.tolist())
+    if recorder is not None:
+        rec = {"record": "serve", "tokens_per_s": tok_s,
+               "prefill_s": prefill_s, "decode_steps": G, "batch": B}
+        if step_ms:
+            q = sorted(step_ms)
+
+            def pct(p):
+                return q[min(len(q) - 1, int(round(p * (len(q) - 1))))]
+
+            rec.update(decode_p50_ms=pct(0.50), decode_p95_ms=pct(0.95),
+                       decode_p99_ms=pct(0.99))
+        recorder.emit(rec)
+        recorder.close()
+        print(f"wrote {recorder.counts} obs records to {args.obs_log}")
 
 
 if __name__ == "__main__":

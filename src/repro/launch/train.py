@@ -99,6 +99,10 @@ def main():
                     help="device-side Sophia health probes in the round "
                          "metrics (clip fraction, m/h norms, curvature "
                          "freshness; fed_sophia only)")
+    ap.add_argument("--trace", action="store_true",
+                    help="per-dispatch trace contexts on the virtual "
+                         "clock (sched_dispatch records + trace_ids; "
+                         "export with tools/obs_trace.py)")
     ap.add_argument("--obs-log", default="",
                     help="write schema-validated JSONL telemetry to this "
                          "path (+ a .manifest.json on exit)")
@@ -139,7 +143,7 @@ def main():
                     total_rounds=args.rounds, use_pallas=args.use_pallas,
                     schedule=over.get("schedule", "const"), comm=comm,
                     sched=sched,
-                    obs=ObsConfig(probes=args.probes,
+                    obs=ObsConfig(probes=args.probes, trace=args.trace,
                                   flush_every=args.obs_flush_every))
     task = T.LMTask(cfg)
     engine = FedEngine(task, fed)
@@ -213,7 +217,7 @@ def main():
                   "optimizer": fed.optimizer,
                   "compressor": comm.compressor,
                   "schedule": args.schedule, "probes": fed.obs.probes,
-                  "residency": residency,
+                  "trace": fed.obs.trace, "residency": residency,
                   "state_dtype": comm.state_dtype})
 
     def make_batches(r):

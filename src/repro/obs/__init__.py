@@ -16,17 +16,29 @@ The subsystem has four layers, each usable on its own:
 * `repro.obs.spans`   — host-side span timers correlated with the
   scheduler's virtual clock, and the opt-in `jax.profiler` trace
   hooks (`--profile-dir` in `repro.launch.train` / `serve`).
+* `repro.obs.trace`   — Chrome Trace Event / Perfetto export of a
+  run's trace contexts (`ObsConfig.trace`), plus the structural
+  validator `make obs-trace-smoke` gates on.
+* `repro.obs.logio`   — tolerant record readers for finished or
+  still-growing logs (JSONL, record arrays, legacy bench dicts),
+  shared by every tool under tools/.
 """
 from repro.obs.buffer import MetricsAccumulator
+from repro.obs.logio import ObsLogError, read_records
 from repro.obs.probes import PROBE_METRICS, sophia_health
-from repro.obs.schema import (SCHEMA_VERSION, ObsSchemaError, describe,
-                              fingerprint, validate_record)
+from repro.obs.schema import (SCHEMA_VERSION, SUPPORTED_SCHEMA_VERSIONS,
+                              ObsSchemaError, describe, fingerprint,
+                              validate_record)
 from repro.obs.sinks import JsonlSink, RingSink, RunRecorder
 from repro.obs.spans import SpanLog, annotate, profile_trace
+from repro.obs.trace import chrome_trace, validate_chrome_trace
 
 __all__ = [
-    "SCHEMA_VERSION", "ObsSchemaError", "describe", "fingerprint",
-    "validate_record", "JsonlSink", "RingSink", "RunRecorder",
+    "SCHEMA_VERSION", "SUPPORTED_SCHEMA_VERSIONS", "ObsSchemaError",
+    "describe", "fingerprint", "validate_record",
+    "JsonlSink", "RingSink", "RunRecorder",
     "MetricsAccumulator", "PROBE_METRICS", "sophia_health",
     "SpanLog", "annotate", "profile_trace",
+    "ObsLogError", "read_records",
+    "chrome_trace", "validate_chrome_trace",
 ]

@@ -27,7 +27,14 @@ import hashlib
 import json
 from typing import Any, Dict, NamedTuple, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+
+#: schema versions this checkout can still LOAD.  v1 logs lack the
+#: trace context (``trace_id`` / ``sched_dispatch``) and the
+#: ``serve`` record type but every v1 field survives unchanged, so
+#: readers (tools/obs_report.py, tools/obs_diff.py) accept them; the
+#: manifest fingerprint is only enforced on current-version logs.
+SUPPORTED_SCHEMA_VERSIONS = (1, 2)
 
 #: int64 range of the exact byte/count columns
 _I64_MIN, _I64_MAX = -(2 ** 63), 2 ** 63 - 1
@@ -139,12 +146,44 @@ METRICS: Dict[str, Metric] = _registry(
            "virtual clock at the last event"),
     Metric("staleness_hist", "hist", "",
            "[staleness, arrival-count] pairs over the whole run"),
+    # ---- trace contexts (repro.obs.trace): one id per scheduler
+    # ---- dispatch, threading compute -> transfer -> arrival -> apply
+    Metric("trace_id", "int64", "",
+           "per-dispatch trace context id on the virtual clock"),
+    Metric("trace_ids", "list[int]", "",
+           "trace ids of the arrivals folded into the event, aligned "
+           "with clients"),
+    Metric("client", "int64", "", "client id of the dispatch"),
+    Metric("arrival_s", "float64", "s",
+           "virtual seconds at which the uplink payload reaches the "
+           "server"),
+    Metric("compute_s", "float64", "s",
+           "local-training compute leg of the dispatch, virtual "
+           "seconds"),
+    Metric("downlink_s", "float64", "s",
+           "downlink transfer leg of the dispatch, virtual seconds"),
+    Metric("uplink_s", "float64", "s",
+           "uplink transfer leg of the dispatch, virtual seconds"),
     # ---- host-side span timers (repro.obs.spans)
     Metric("name", "str", "", "span / benchmark regime name"),
     Metric("t_wall_s", "float64", "s",
            "span start, host wall-clock relative to the span log"),
     Metric("virtual_s", "float64", "s",
            "scheduler virtual clock when the span opened"),
+    # ---- serving loop (repro.launch.serve)
+    Metric("tokens_per_s", "float64", "tok/s",
+           "decode throughput over the whole generation loop"),
+    Metric("prefill_s", "float64", "s",
+           "wall-clock of the batched prefill (including cache build)"),
+    Metric("decode_steps", "int64", "steps",
+           "timed decode steps in the generation loop"),
+    Metric("batch", "int64", "seqs", "concurrent sequences served"),
+    Metric("decode_p50_ms", "float64", "ms",
+           "median per-step decode latency"),
+    Metric("decode_p95_ms", "float64", "ms",
+           "95th-percentile per-step decode latency"),
+    Metric("decode_p99_ms", "float64", "ms",
+           "99th-percentile per-step decode latency"),
     # ---- engine benchmark rows (benchmarks/run.py --only engine)
     Metric("layout_ops", "int64", "ops",
            "layout-conversion primitives in the round jaxpr"),
@@ -154,6 +193,30 @@ METRICS: Dict[str, Metric] = _registry(
            "resident state not aliased in place under donation"),
     Metric("resident_state_bytes", "int64", "bytes",
            "device-resident engine state"),
+    # ---- comm / sched benchmark rows (benchmarks/run.py --only
+    # ---- comm|sched; committed under experiments/bench_*.json)
+    Metric("hessian_bytes", "int64", "bytes",
+           "hessian stream bytes, both legs, per round"),
+    Metric("reduction_x", "float64", "x",
+           "total wire-byte reduction vs the uncompressed baseline"),
+    Metric("bytes_to_target", "int64", "bytes",
+           "cumulative wire bytes when the target metric was reached"),
+    Metric("target_loss", "float64", "nats",
+           "loss target of the scheduled benchmark comparison"),
+    Metric("sim_s_to_target", "float64", "s",
+           "virtual seconds until the target loss was reached"),
+    Metric("speedup_x", "float64", "x",
+           "simulated wall-clock speedup vs the sync discipline"),
+    Metric("max_staleness", "int64", "versions",
+           "largest per-arrival staleness seen in the run"),
+    Metric("accs", "list[float]", "",
+           "per-eval test accuracies of the benchmark run"),
+    Metric("event_times_s", "list[float]", "s",
+           "per-event virtual timestamps of the benchmark trace"),
+    Metric("event_eval_losses", "list[float]", "nats",
+           "per-event eval losses of the benchmark trace"),
+    Metric("event_cum_bytes", "list[int]", "bytes",
+           "per-event cumulative wire bytes of the benchmark trace"),
 )
 
 
@@ -185,7 +248,15 @@ RECORDS: Dict[str, RecordType] = {
                   "staleness", "weights", "loss", "cum_uplink_bytes",
                   "cum_downlink_bytes", "cum_hessian_uplink_bytes",
                   "cum_hessian_downlink_bytes", "cum_total_bytes"),
-        optional=("eval_loss", "energy_J", "carbon_kg") + _PROBE_FIELDS),
+        optional=("eval_loss", "energy_J", "carbon_kg", "trace_ids")
+        + _PROBE_FIELDS),
+    # one scheduler dispatch: trace context for the compute ->
+    # transfer -> arrival -> apply chain (repro.sched.SchedDispatch)
+    "sched_dispatch": RecordType(
+        required=("record", "trace_id", "client", "version", "time_s",
+                  "arrival_s", "compute_s", "downlink_s", "uplink_s"),
+        optional=("downlink_bytes", "uplink_bytes",
+                  "hessian_uplink_bytes", "hessian_downlink_bytes")),
     # one per scheduler run, after its events
     "sched_summary": RecordType(
         required=("record", "discipline", "events", "final_time_s",
@@ -194,12 +265,25 @@ RECORDS: Dict[str, RecordType] = {
     # host-side span timer (repro.obs.spans.SpanLog)
     "span": RecordType(
         required=("record", "name", "t_wall_s", "wall_s"),
-        optional=("virtual_s",)),
-    # engine benchmark regime row (benchmarks/run.py)
+        optional=("virtual_s", "trace_id")),
+    # benchmark regime row (benchmarks/run.py): engine rows carry the
+    # layout/us/copy gates, comm rows the per-stream byte columns,
+    # sched rows the time-to-target trajectory
     "bench": RecordType(
-        required=("record", "name", "layout_ops"),
-        optional=("us_per_round", "state_copy_bytes",
-                  "resident_state_bytes")),
+        required=("record", "name"),
+        optional=("layout_ops", "us_per_round", "state_copy_bytes",
+                  "resident_state_bytes",
+                  "uplink_bytes", "downlink_bytes", "hessian_bytes",
+                  "total_bytes", "reduction_x", "bytes_to_target",
+                  "accs", "target_loss", "sim_s_to_target",
+                  "speedup_x", "events", "max_staleness",
+                  "event_times_s", "event_eval_losses",
+                  "event_cum_bytes")),
+    # serving-loop throughput sample (repro.launch.serve)
+    "serve": RecordType(
+        required=("record", "tokens_per_s", "prefill_s",
+                  "decode_steps", "batch"),
+        optional=("decode_p50_ms", "decode_p95_ms", "decode_p99_ms")),
 }
 
 

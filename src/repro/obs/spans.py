@@ -36,7 +36,8 @@ class SpanLog:
         self._spans: List[dict] = []
 
     @contextmanager
-    def span(self, name: str, virtual_s: Optional[float] = None):
+    def span(self, name: str, virtual_s: Optional[float] = None,
+             trace_id: Optional[int] = None):
         start = time.perf_counter()
         try:
             with annotate(name):
@@ -47,6 +48,8 @@ class SpanLog:
                    "wall_s": time.perf_counter() - start}
             if virtual_s is not None:
                 rec["virtual_s"] = float(virtual_s)
+            if trace_id is not None:
+                rec["trace_id"] = int(trace_id)
             self._spans.append(rec)
 
     def records(self) -> List[dict]:

@@ -20,11 +20,13 @@ loop.  Configuration lives in `repro.configs.base.SchedConfig`; see
 docs/scheduling.md for the data flow and `benchmarks/run.py --only
 sched` for the wall-clock-to-target-loss comparison.
 """
-from repro.sched.latency import (client_multipliers, dispatch_seconds,
-                                 leg_bytes, stragglers)
-from repro.sched.scheduler import SchedEvent, SchedTrace, VirtualScheduler
+from repro.sched.latency import (client_multipliers, dispatch_legs,
+                                 dispatch_seconds, leg_bytes, stragglers)
+from repro.sched.scheduler import (SchedDispatch, SchedEvent, SchedTrace,
+                                   VirtualScheduler)
 
 __all__ = [
-    "client_multipliers", "dispatch_seconds", "leg_bytes", "stragglers",
-    "SchedEvent", "SchedTrace", "VirtualScheduler",
+    "client_multipliers", "dispatch_legs", "dispatch_seconds",
+    "leg_bytes", "stragglers",
+    "SchedDispatch", "SchedEvent", "SchedTrace", "VirtualScheduler",
 ]

@@ -78,3 +78,22 @@ def dispatch_seconds(fed: FedConfig, n_params: int,
     bytes_per_s = sched.bandwidth_bps / 8.0 / mult
     compute = fed.local_iters * sched.compute_s * mult
     return (down + up) / bytes_per_s + compute
+
+
+def dispatch_legs(fed: FedConfig, n_params: int, num_clients: int):
+    """Per-leg durations of one dispatch: ``(downlink_s, compute_s,
+    uplink_s)``, each (C,).
+
+    Trace-context decomposition of `dispatch_seconds` for the
+    Chrome/Perfetto exporter (repro.obs.trace).  The virtual clock
+    stays on `dispatch_seconds`' lumped arithmetic — its float
+    evaluation order is pinned by committed trajectories — so the leg
+    sum may differ from it in the last ulps; the arrival timestamp is
+    always authoritative.
+    """
+    sched = fed.sched
+    mult = client_multipliers(sched, num_clients)
+    down, up = leg_bytes(fed.comm, n_params)
+    bytes_per_s = sched.bandwidth_bps / 8.0 / mult
+    compute = fed.local_iters * sched.compute_s * mult
+    return down / bytes_per_s, compute, up / bytes_per_s

@@ -84,6 +84,57 @@ class SchedEvent:
     cum_hessian_uplink_bytes: int = 0
     cum_hessian_downlink_bytes: int = 0
     probes: Optional[Dict[str, float]] = None
+    # trace ids of the arrivals folded into this event, aligned with
+    # ``clients`` — populated only under ``ObsConfig.trace``
+    trace_ids: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedDispatch:
+    """One dispatch's trace context (``ObsConfig.trace``): the
+    compute -> transfer -> arrival chain of a single client on the
+    virtual clock, with its exact per-leg byte prices.
+
+    Leg durations come from `latency.dispatch_legs` — a decomposition
+    of the lumped `latency.dispatch_seconds` the clock runs on, so
+    their sum may differ from ``arrival - time`` in the last ulps;
+    ``arrival`` is authoritative."""
+    trace_id: int             # unique per run, 1-based, dispatch order
+    client: int
+    version: int              # server version it trained against
+    time: float               # virtual seconds at dispatch
+    arrival: float            # virtual seconds at delivery
+    compute_s: float
+    downlink_s: float
+    uplink_s: float
+    downlink_bytes: int = 0
+    uplink_bytes: int = 0
+    hessian_uplink_bytes: int = 0
+    hessian_downlink_bytes: int = 0
+
+    def to_record(self) -> Dict[str, Any]:
+        return {
+            "record": "sched_dispatch", "trace_id": self.trace_id,
+            "client": self.client, "version": self.version,
+            "time_s": self.time, "arrival_s": self.arrival,
+            "compute_s": self.compute_s,
+            "downlink_s": self.downlink_s, "uplink_s": self.uplink_s,
+            "downlink_bytes": self.downlink_bytes,
+            "uplink_bytes": self.uplink_bytes,
+            "hessian_uplink_bytes": self.hessian_uplink_bytes,
+            "hessian_downlink_bytes": self.hessian_downlink_bytes}
+
+    @staticmethod
+    def from_record(r: Dict[str, Any]) -> "SchedDispatch":
+        return SchedDispatch(
+            trace_id=r["trace_id"], client=r["client"],
+            version=r["version"], time=r["time_s"],
+            arrival=r["arrival_s"], compute_s=r["compute_s"],
+            downlink_s=r["downlink_s"], uplink_s=r["uplink_s"],
+            downlink_bytes=r.get("downlink_bytes", 0),
+            uplink_bytes=r.get("uplink_bytes", 0),
+            hessian_uplink_bytes=r.get("hessian_uplink_bytes", 0),
+            hessian_downlink_bytes=r.get("hessian_downlink_bytes", 0))
 
 
 @dataclasses.dataclass
@@ -91,6 +142,9 @@ class SchedTrace:
     """The full event log of one scheduler run."""
     discipline: str
     events: List[SchedEvent] = dataclasses.field(default_factory=list)
+    # per-dispatch trace contexts (empty unless ``ObsConfig.trace``)
+    dispatches: List[SchedDispatch] = dataclasses.field(
+        default_factory=list)
 
     @property
     def final_time(self) -> float:
@@ -157,7 +211,10 @@ class SchedTrace:
             prev_bytes = ev.cum_bytes
             if ev.probes:
                 r.update(ev.probes)
+            if ev.trace_ids:
+                r["trace_ids"] = list(ev.trace_ids)
             recs.append(r)
+        recs.extend(d.to_record() for d in self.dispatches)
         recs.append({
             "record": "sched_summary", "discipline": self.discipline,
             "events": len(self.events), "final_time_s": self.final_time,
@@ -174,10 +231,13 @@ class SchedTrace:
         is exact — pinned by tests/test_obs.py."""
         from repro.obs.probes import PROBE_METRICS
         events: List[SchedEvent] = []
+        dispatches: List[SchedDispatch] = []
         discipline = None
         for r in records:
             if r.get("record") == "sched_summary":
                 discipline = r["discipline"]
+            elif r.get("record") == "sched_dispatch":
+                dispatches.append(SchedDispatch.from_record(r))
             elif r.get("record") == "sched_event":
                 probes = {k: r[k] for k in PROBE_METRICS if k in r}
                 events.append(SchedEvent(
@@ -192,11 +252,13 @@ class SchedTrace:
                     cum_hessian_uplink_bytes=r["cum_hessian_uplink_bytes"],
                     cum_hessian_downlink_bytes=r[
                         "cum_hessian_downlink_bytes"],
-                    probes=probes or None))
+                    probes=probes or None,
+                    trace_ids=tuple(r.get("trace_ids", ()))))
         if discipline is None:
             raise ValueError(
                 "no sched_summary record — not a to_records() trace")
-        return SchedTrace(discipline=discipline, events=events)
+        return SchedTrace(discipline=discipline, events=events,
+                          dispatches=dispatches)
 
 
 @dataclasses.dataclass
@@ -211,6 +273,7 @@ class _InFlight:
     opt: Any = None
     dnm: Any = None
     dnef: Any = None
+    trace_id: int = 0         # 0 when tracing is off
 
 
 class VirtualScheduler:
@@ -289,6 +352,11 @@ class VirtualScheduler:
         self._probes_on = fed.obs.probes
         self._probe_fn = (jax.jit(engine.probe_metrics)
                           if self._probes_on else None)
+        # per-dispatch trace contexts (`ObsConfig.trace`): pure host
+        # bookkeeping — ids, leg durations and byte prices ride the
+        # trace/spans, never the jitted math, so the traced run's
+        # state is bitwise identical to the untraced one
+        self._trace_on = fed.obs.trace
 
     # ---------------------------------------------------------- jit bodies
     def _dispatch_impl(self, state, batches, idx, rng_v, round_idx):
@@ -451,16 +519,40 @@ class VirtualScheduler:
         n_params = self.engine.num_params(state)
         durations = latency.dispatch_seconds(fed, n_params, C)
         per_round = accounting.round_bytes(comm, n_params, C)
+        legs = (latency.dispatch_legs(fed, n_params, C)
+                if self._trace_on else None)
+        stream_dn = accounting.stream_bytes(comm, "downlink", n_params)
+        stream_up = accounting.stream_bytes(comm, "uplink", n_params)
+        stream_h = accounting.stream_bytes(comm, "hessian", n_params)
         trace = SchedTrace(discipline="sync")
-        now, cum_bytes = 0.0, 0
+        now, cum_bytes, next_tid = 0.0, 0, 1
         cum = {"uplink_bytes": 0, "downlink_bytes": 0,
                "hessian_uplink_bytes": 0, "hessian_downlink_bytes": 0}
         for v in range(num_events):
             rng_v = jax.random.fold_in(rng, v)
-            with self.spans.span("round", virtual_s=now):
+            # participation is a pure function of rng_v (the round jit
+            # re-derives the same sample), so reading it pre-round for
+            # the trace context changes nothing downstream
+            part = np.asarray(self.engine.round_participants(rng_v))
+            tids: Tuple[int, ...] = ()
+            if self._trace_on:
+                tids = tuple(range(next_tid, next_tid + len(part)))
+                next_tid += len(part)
+                for tid, i in zip(tids, part):
+                    trace.dispatches.append(SchedDispatch(
+                        trace_id=tid, client=int(i), version=v,
+                        time=now, arrival=now + float(durations[i]),
+                        downlink_s=float(legs[0][i]),
+                        compute_s=float(legs[1][i]),
+                        uplink_s=float(legs[2][i]),
+                        downlink_bytes=stream_dn,
+                        uplink_bytes=stream_up,
+                        hessian_uplink_bytes=stream_h,
+                        hessian_downlink_bytes=stream_h))
+            with self.spans.span("round", virtual_s=now,
+                                 trace_id=tids[0] if tids else None):
                 state, metrics = self._round_fn(state, self._batches(v),
                                                 rng_v)
-            part = np.asarray(self.engine.round_participants(rng_v))
             now += float(np.max(durations[part]))
             cum_bytes += per_round["total_bytes"]
             for k in cum:
@@ -477,7 +569,8 @@ class VirtualScheduler:
                 cum_downlink_bytes=cum["downlink_bytes"],
                 cum_hessian_uplink_bytes=cum["hessian_uplink_bytes"],
                 cum_hessian_downlink_bytes=cum["hessian_downlink_bytes"],
-                probes=self._event_probes(metrics=metrics))
+                probes=self._event_probes(metrics=metrics),
+                trace_ids=tids)
             trace.events.append(ev)
             if self._hit_target(ev, target_loss, stop_at_target):
                 break
@@ -496,19 +589,24 @@ class VirtualScheduler:
         stream_dn = accounting.stream_bytes(comm, "downlink", n_params)
         stream_up = accounting.stream_bytes(comm, "uplink", n_params)
         stream_h = accounting.stream_bytes(comm, "hessian", n_params)
+        legs = (latency.dispatch_legs(fed, n_params, C)
+                if self._trace_on else None)
         trace = SchedTrace(discipline=self.sched.discipline)
         inflight: Dict[int, _InFlight] = {}
         buffer: List[Tuple[int, _InFlight]] = []
         now, version, cum_bytes = 0.0, 0, 0
+        next_tid = 1
         cum = {"uplink_bytes": 0, "downlink_bytes": 0,
                "hessian_uplink_bytes": 0, "hessian_downlink_bytes": 0}
 
         def dispatch(group, at_time):
-            nonlocal cum_bytes
+            nonlocal cum_bytes, next_tid
             group = sorted(group)
             idx = jnp.asarray(group, jnp.int32)
             rng_v = jax.random.fold_in(rng, version)
-            with self.spans.span("dispatch", virtual_s=at_time):
+            with self.spans.span("dispatch", virtual_s=at_time,
+                                 trace_id=(next_tid if self._trace_on
+                                           else None)):
                 (wires, stats, ef_new, opt_new, losses, dnm_new,
                  dnef_new, _h, _hs) = self._dispatch_fn(
                     state, self._batches(version), idx, rng_v,
@@ -519,13 +617,28 @@ class VirtualScheduler:
                             else jax.tree.map(lambda x: x[pos], tree))
 
                 for pos, i in enumerate(group):
+                    tid = 0
+                    if self._trace_on:
+                        tid, next_tid = next_tid, next_tid + 1
+                        trace.dispatches.append(SchedDispatch(
+                            trace_id=tid, client=i, version=version,
+                            time=at_time,
+                            arrival=at_time + float(durations[i]),
+                            downlink_s=float(legs[0][i]),
+                            compute_s=float(legs[1][i]),
+                            uplink_s=float(legs[2][i]),
+                            downlink_bytes=stream_dn,
+                            uplink_bytes=stream_up,
+                            hessian_uplink_bytes=stream_h,
+                            hessian_downlink_bytes=stream_h))
                     inflight[i] = _InFlight(
                         arrival=at_time + float(durations[i]),
                         version=version,
                         wire=wires[pos], stat=stats[pos],
                         loss=float(losses[pos]),
                         ef=row(ef_new, pos), opt=row(opt_new, pos),
-                        dnm=row(dnm_new, pos), dnef=row(dnef_new, pos))
+                        dnm=row(dnm_new, pos), dnef=row(dnef_new, pos),
+                        trace_id=tid)
                     cum_bytes += down_bytes
                     cum["downlink_bytes"] += stream_dn
                     cum["hessian_downlink_bytes"] += stream_h
@@ -556,7 +669,11 @@ class VirtualScheduler:
             recs = [r for _, r in buffer]
             stale = [version - r.version for r in recs]
             weights = [self._weight(t) for t in stale]
-            with self.spans.span("apply", virtual_s=now):
+            tids = (tuple(r.trace_id for r in recs)
+                    if self._trace_on else ())
+            with self.spans.span("apply", virtual_s=now,
+                                 trace_id=(min(tids) if tids
+                                           else None)):
                 state = self._apply_fn(
                     state,
                     jnp.stack([r.wire for r in recs]),
@@ -580,7 +697,8 @@ class VirtualScheduler:
                 cum_downlink_bytes=cum["downlink_bytes"],
                 cum_hessian_uplink_bytes=cum["hessian_uplink_bytes"],
                 cum_hessian_downlink_bytes=cum["hessian_downlink_bytes"],
-                probes=self._event_probes(state=state))
+                probes=self._event_probes(state=state),
+                trace_ids=tids)
             trace.events.append(ev)
             buffer = []
             if self._hit_target(ev, target_loss, stop_at_target):

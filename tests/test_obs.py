@@ -364,6 +364,68 @@ def test_span_log_records():
         assert r["wall_s"] >= 0.0
 
 
+# ------------------------------------------------- trace contexts
+def _traced_fed(disc, trace=True):
+    return _fed(obs=ObsConfig(probes=True, trace=trace),
+                sched=SchedConfig(discipline=disc))
+
+
+@pytest.mark.parametrize("disc", ["sync", "semisync", "async"])
+def test_trace_ids_roundtrip_byte_identical(setup, disc):
+    """trace_id survives to_records/from_records byte-identically, ids
+    are contiguous 1-based in dispatch order, and every event's folded
+    trace_ids point at a real dispatch."""
+    task, batch_fn = setup
+    _, trace = _run_sched(task, batch_fn, _traced_fed(disc), 3)
+    assert trace.dispatches, "tracing on but no dispatch contexts"
+    tids = [d.trace_id for d in trace.dispatches]
+    assert tids == list(range(1, len(tids) + 1))
+    recs = trace.to_records()
+    for r in recs:
+        obs.validate_record(r)
+    lines = [json.dumps(r, sort_keys=True) for r in recs]
+    back = SchedTrace.from_records(recs)
+    assert [json.dumps(r, sort_keys=True)
+            for r in back.to_records()] == lines
+    by_id = {d.trace_id for d in trace.dispatches}
+    for ev in trace.events:
+        assert ev.trace_ids and set(ev.trace_ids) <= by_id
+
+
+def test_tracing_off_keeps_v1_serialization(setup):
+    """With tracing off the record stream is byte-compatible with v1
+    consumers: no sched_dispatch records, no trace_ids field."""
+    task, batch_fn = setup
+    _, trace = _run_sched(task, batch_fn,
+                          _traced_fed("semisync", trace=False), 3)
+    assert not trace.dispatches
+    for r in trace.to_records():
+        assert r["record"] != "sched_dispatch"
+        assert "trace_ids" not in r
+
+
+@pytest.mark.parametrize("disc", ["semisync", "async"])
+def test_tracing_on_state_bitwise_identical(setup, disc):
+    """The acceptance bar: trace contexts are pure host bookkeeping —
+    the scheduler's state trajectory and event stream are bitwise
+    unchanged, tracing on vs off."""
+    task, batch_fn = setup
+    s_off, t_off = _run_sched(task, batch_fn,
+                              _traced_fed(disc, trace=False), 3)
+    s_on, t_on = _run_sched(task, batch_fn,
+                            _traced_fed(disc, trace=True), 3)
+    for a, b in zip(jax.tree.leaves(s_off), jax.tree.leaves(s_on)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    off_lines = [json.dumps(r, sort_keys=True)
+                 for r in t_off.to_records()]
+    on_recs = [r for r in t_on.to_records()
+               if r["record"] != "sched_dispatch"]
+    for r in on_recs:
+        r.pop("trace_ids", None)
+    assert [json.dumps(r, sort_keys=True) for r in on_recs] == off_lines
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()

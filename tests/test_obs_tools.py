@@ -1,0 +1,390 @@
+"""Observatory-tool tests: tolerant log readers (repro.obs.logio),
+the Chrome Trace / Perfetto exporter golden (repro.obs.trace),
+obs_report hardening against degenerate logs, obs_diff drift bands,
+the dashboard renderer, and the committed bench record files.
+
+The Perfetto golden freezes the exporter's full event layout over a
+HAND-BUILT record stream (no jit anywhere, so the fixture is
+byte-identical on every platform).  Regenerate after a deliberate
+exporter change:
+
+    PYTHONPATH=src python tests/test_obs_tools.py --regen
+"""
+import copy
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs import logio, schema
+from repro.obs import trace as obs_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(ROOT, "tests", "golden", "perfetto_trace.json")
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(ROOT, "tools", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+obs_report = _load_tool("obs_report")
+obs_diff = _load_tool("obs_diff")
+obs_dashboard = _load_tool("obs_dashboard")
+
+
+def _manifest(**meta):
+    rec = {"record": "manifest", "schema_version": schema.SCHEMA_VERSION,
+           "schema_sha256": schema.fingerprint()}
+    if meta:
+        rec["meta"] = meta
+    return rec
+
+
+def _traced_records():
+    """A hand-built traced semisync log: 3 dispatches over 2 clients,
+    2 aggregation events, a host span, the summary.  Every record is
+    schema-valid (asserted below) and platform-independent — the
+    input both the exporter golden and the diff tests pin."""
+    disp = [
+        {"record": "sched_dispatch", "trace_id": 1, "client": 0,
+         "version": 0, "time_s": 0.0, "arrival_s": 1.25,
+         "downlink_s": 0.25, "compute_s": 0.5, "uplink_s": 0.5,
+         "downlink_bytes": 1000, "uplink_bytes": 500,
+         "hessian_uplink_bytes": 64, "hessian_downlink_bytes": 32},
+        {"record": "sched_dispatch", "trace_id": 2, "client": 1,
+         "version": 0, "time_s": 0.0, "arrival_s": 2.5,
+         "downlink_s": 0.5, "compute_s": 1.0, "uplink_s": 1.0,
+         "downlink_bytes": 1000, "uplink_bytes": 500},
+        {"record": "sched_dispatch", "trace_id": 3, "client": 0,
+         "version": 1, "time_s": 1.25, "arrival_s": 2.75,
+         "downlink_s": 0.25, "compute_s": 0.5, "uplink_s": 0.5,
+         "downlink_bytes": 1000, "uplink_bytes": 500},
+    ]
+    events = [
+        {"record": "sched_event", "time_s": 1.25, "version": 1,
+         "kind": "aggregate", "clients": [0], "staleness": [0],
+         "weights": [1.0], "loss": 1.5, "eval_loss": 1.4,
+         "clip_fraction": 0.25, "h_staleness": 1.0,
+         "cum_uplink_bytes": 500, "cum_downlink_bytes": 1000,
+         "cum_hessian_uplink_bytes": 64,
+         "cum_hessian_downlink_bytes": 32, "cum_total_bytes": 1596,
+         "trace_ids": [1]},
+        {"record": "sched_event", "time_s": 2.75, "version": 2,
+         "kind": "aggregate", "clients": [1, 0], "staleness": [1, 0],
+         "weights": [0.5, 1.0], "loss": 1.2, "eval_loss": 1.1,
+         "clip_fraction": 0.5, "h_staleness": 0.0,
+         "cum_uplink_bytes": 1500, "cum_downlink_bytes": 3000,
+         "cum_hessian_uplink_bytes": 64,
+         "cum_hessian_downlink_bytes": 32, "cum_total_bytes": 4596,
+         "trace_ids": [2, 3]},
+    ]
+    span = {"record": "span", "name": "dispatch", "t_wall_s": 0.001,
+            "wall_s": 0.002, "virtual_s": 1.25, "trace_id": 3}
+    summary = {"record": "sched_summary", "discipline": "semisync",
+               "events": 2, "final_time_s": 2.75,
+               "cum_total_bytes": 4596,
+               "staleness_hist": [[0, 2], [1, 1]]}
+    return disp + events + [span, summary]
+
+
+def test_traced_fixture_records_are_schema_valid():
+    for r in [_manifest()] + _traced_records():
+        schema.validate_record(r)
+
+
+# --------------------------------------------------- logio robustness
+def test_read_records_missing_and_empty(tmp_path):
+    with pytest.raises(logio.ObsLogError, match="no such file"):
+        logio.read_records(str(tmp_path / "gone.jsonl"))
+    p = tmp_path / "empty.jsonl"
+    p.write_text("  \n")
+    with pytest.raises(logio.ObsLogError, match="empty log"):
+        logio.read_records(str(p))
+
+
+def test_read_records_drops_truncated_final_line(tmp_path, capsys):
+    """The tail of a live or killed run is not corruption: the final
+    partial line is dropped with a warning, the rest loads."""
+    p = tmp_path / "live.jsonl"
+    good = [_manifest(), _traced_records()[0]]
+    lines = [json.dumps(r, sort_keys=True) for r in good]
+    p.write_text("\n".join(lines) + '\n{"record": "sched_ev')
+    recs = logio.read_records(str(p))
+    assert recs == good
+    assert "truncated final line" in capsys.readouterr().err
+
+
+def test_read_records_rejects_mid_log_corruption(tmp_path):
+    p = tmp_path / "corrupt.jsonl"
+    m = json.dumps(_manifest())
+    p.write_text(f"{m}\nNOT JSON\n{m}\n")
+    with pytest.raises(logio.ObsLogError, match="line 2"):
+        logio.read_records(str(p))
+
+
+def test_read_records_json_array_and_single_record(tmp_path):
+    recs = [_manifest(), _traced_records()[0]]
+    p = tmp_path / "arr.json"
+    p.write_text(json.dumps(recs, indent=1))
+    assert logio.read_records(str(p)) == recs
+    p2 = tmp_path / "one.json"
+    p2.write_text(json.dumps(_manifest()))
+    assert logio.read_records(str(p2)) == [_manifest()]
+
+
+def test_read_records_legacy_bench_dicts(tmp_path):
+    """Pre-v2 bench files still load: {name: row} and the two-level
+    {"baseline": {name: row}} shape become bench-shaped records."""
+    one = tmp_path / "one_level.json"
+    one.write_text(json.dumps({"regime-a": {"layout_ops": 3}},
+                              indent=1))
+    recs = logio.read_records(str(one))
+    assert recs == [{"record": "bench", "name": "regime-a",
+                     "layout_ops": 3}]
+    two = tmp_path / "two_level.json"
+    two.write_text(json.dumps(
+        {"baseline": {"regime-a": {"layout_ops": 3}},
+         "current": {"regime-a": {"layout_ops": 2}}}, indent=1))
+    names = {r["name"] for r in logio.read_records(str(two))}
+    assert names == {"baseline/regime-a", "current/regime-a"}
+
+
+def test_manifest_of():
+    recs = _traced_records()
+    assert logio.manifest_of(recs) == {}
+    assert logio.manifest_of([_manifest()] + recs) == _manifest()
+
+
+# ----------------------------------------------- Perfetto export golden
+def test_chrome_trace_matches_golden():
+    doc = obs_trace.chrome_trace([_manifest()] + _traced_records())
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert doc == golden, (
+        "Perfetto export diverged from the committed golden — if the "
+        "exporter change is deliberate, regenerate with "
+        "`PYTHONPATH=src python tests/test_obs_tools.py --regen`")
+
+
+def test_chrome_trace_is_structurally_valid_and_deterministic():
+    recs = _traced_records()
+    doc = obs_trace.chrome_trace(recs)
+    assert obs_trace.validate_chrome_trace(doc) == []
+    assert json.dumps(doc, sort_keys=True) == json.dumps(
+        obs_trace.chrome_trace(list(recs)), sort_keys=True)
+    # 3 slices per dispatch + 1 apply per event + the host span
+    slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(slices) == 3 * 3 + 2 + 1
+    # uplink slices end exactly at the authoritative arrival_s
+    ups = [e for e in slices if e["name"] == "uplink"]
+    assert {round(e["ts"] + e["dur"], 3) for e in ups} == {
+        1.25e6, 2.5e6, 2.75e6}
+    # counter tracks: loss + both probes per event
+    assert sum(1 for e in doc["traceEvents"] if e["ph"] == "C") == 6
+
+
+def test_chrome_trace_without_contexts_degrades_to_instants():
+    """A tracing-off log (events without trace_ids) still exports: the
+    apply slices degrade to instant markers."""
+    evs = [dict(e) for e in _traced_records()
+           if e["record"] == "sched_event"]
+    for e in evs:
+        del e["trace_ids"]
+    doc = obs_trace.chrome_trace(evs)
+    assert obs_trace.validate_chrome_trace(doc) == []
+    applies = [e for e in doc["traceEvents"] if e["name"] == "apply"]
+    assert applies and all(e["ph"] == "i" for e in applies)
+
+
+def test_validate_chrome_trace_catches_breakage():
+    assert obs_trace.validate_chrome_trace({}) == [
+        "not a Chrome trace: missing top-level 'traceEvents'"]
+    assert obs_trace.validate_chrome_trace({"traceEvents": []})
+    bad = obs_trace.chrome_trace(_traced_records())
+    bad["traceEvents"][-1] = {k: v
+                              for k, v in bad["traceEvents"][-1].items()
+                              if k != "ts"}
+    assert any("missing keys" in e
+               for e in obs_trace.validate_chrome_trace(bad))
+    neg = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1, "tid": 0,
+                            "ts": 5.0, "dur": -1.0}]}
+    assert any("negative dur" in e
+               for e in obs_trace.validate_chrome_trace(neg))
+    back = {"traceEvents": [
+        {"name": "a", "ph": "i", "pid": 1, "tid": 0, "ts": 5.0},
+        {"name": "b", "ph": "i", "pid": 1, "tid": 0, "ts": 4.0}]}
+    assert any("goes backwards" in e
+               for e in obs_trace.validate_chrome_trace(back))
+
+
+# ------------------------------------------------ obs_report hardening
+def test_obs_report_validate_accepts_current_log(capsys):
+    rc = obs_report.validate("log", [_manifest()] + _traced_records())
+    assert rc == 0
+    assert "valid" in capsys.readouterr().out
+
+
+def test_obs_report_validate_missing_manifest(capsys):
+    rc = obs_report.validate("log", _traced_records())
+    assert rc == 1
+    assert "first record must be the run manifest" \
+        in capsys.readouterr().out
+
+
+def test_obs_report_validate_no_content_records(capsys):
+    """A log with zero sched_event/round records is a setup-only run —
+    validation names the problem instead of crashing on it."""
+    rc = obs_report.validate("log", [_manifest()])
+    assert rc == 1
+    assert "no content records" in capsys.readouterr().out
+
+
+def test_obs_report_validate_versions(capsys):
+    bench = {"record": "bench", "name": "x", "layout_ops": 1}
+    old = {"record": "manifest", "schema_version": 1,
+           "schema_sha256": "0" * 64}
+    # supported old version: fingerprint mismatch tolerated
+    assert obs_report.validate("log", [old, bench]) == 0
+    unsupported = dict(old, schema_version=99)
+    assert obs_report.validate("log", [unsupported, bench]) == 1
+    drifted = dict(old, schema_version=schema.SCHEMA_VERSION)
+    assert obs_report.validate("log", [drifted, bench]) == 1
+    out = capsys.readouterr().out
+    assert "not supported" in out and "schema_sha256" in out
+
+
+def test_obs_report_summarize_degenerate_logs(capsys):
+    """Summary mode renders best-effort on manifest-less and
+    trajectory-less logs — satellite: no tracebacks on degenerate
+    input."""
+    assert obs_report.summarize("log", [{"record": "bench",
+                                         "name": "x"}]) == 0
+    assert "no manifest record" in capsys.readouterr().out
+    assert obs_report.summarize("log", [_manifest()]) == 0
+    assert "no trajectory records" in capsys.readouterr().out
+    assert obs_report.summarize(
+        "log", [_manifest()] + _traced_records()) == 0
+    out = capsys.readouterr().out
+    assert "trace contexts: 3 dispatches" in out
+    assert "staleness histogram" in out
+
+
+def test_obs_report_load_exits_cleanly_on_missing_file(tmp_path):
+    with pytest.raises(SystemExit, match="no such file"):
+        obs_report.load(str(tmp_path / "gone.jsonl"))
+
+
+# ------------------------------------------------------- obs_diff bands
+def test_obs_diff_self_compare_is_zero_drift():
+    recs = [_manifest()] + _traced_records()
+    rows, failures = obs_diff.diff(recs, recs, {}, 0.0)
+    assert failures == []
+    assert rows and all(worst == 0.0 for _, _, _, worst, _ in rows)
+
+
+def test_obs_diff_int_counters_are_exact_despite_bands():
+    a = [_manifest(), {"record": "bench", "name": "x",
+                       "total_bytes": 100}]
+    b = copy.deepcopy(a)
+    b[1]["total_bytes"] = 101
+    _, failures = obs_diff.diff(a, b, {"total_bytes": 1.0}, 1.0)
+    assert any("total_bytes" in f for f in failures)
+
+
+def test_obs_diff_float_metrics_respect_bands():
+    a = [_manifest(), {"record": "bench", "name": "x",
+                       "us_per_round": 100.0}]
+    b = copy.deepcopy(a)
+    b[1]["us_per_round"] = 100.1
+    _, strict = obs_diff.diff(a, b, {}, 0.0)
+    assert any("us_per_round" in f for f in strict)
+    _, banded = obs_diff.diff(a, b, {"us_per_round": 0.01}, 0.0)
+    assert banded == []
+
+
+def test_obs_diff_reports_unmatched_and_schema_drift():
+    recs = _traced_records()
+    a = [_manifest()] + recs
+    b = [dict(_manifest(), schema_sha256="f" * 64)] + recs[:-2]
+    _, failures = obs_diff.diff(a, b, {}, 0.0)
+    assert any("fingerprints differ" in f for f in failures)
+    assert any("only in run A" in f for f in failures)
+
+
+def test_obs_diff_aligns_bench_rows_by_name_not_position():
+    row = {"record": "bench", "name": "x", "layout_ops": 5}
+    other = {"record": "bench", "name": "y", "layout_ops": 9}
+    a = [_manifest(), row, other]
+    b = [_manifest(), other, row]          # same rows, reordered
+    rows, failures = obs_diff.diff(a, b, {}, 0.0)
+    assert failures == []
+    assert all(worst == 0.0 for _, _, _, worst, _ in rows)
+
+
+# -------------------------------------------------- dashboard renderer
+def test_dashboard_sparkline():
+    assert obs_dashboard.sparkline([]) == "(no data)"
+    line = obs_dashboard.sparkline([0, 1, 2, 3])
+    assert line[0] == obs_dashboard.SPARK[0]
+    assert line[-1] == obs_dashboard.SPARK[-1]
+    assert len(obs_dashboard.sparkline(list(range(500)), width=48)) == 48
+
+
+def test_dashboard_render_sections():
+    txt = obs_dashboard.render(
+        [_manifest(arch="mlp")] + _traced_records(), "run.jsonl")
+    assert "loss" in txt and "streams:" in txt
+    assert "staleness histogram" in txt
+    assert "3 dispatch contexts" in txt
+    serve = {"record": "serve", "tokens_per_s": 12.5, "prefill_s": 0.5,
+             "decode_steps": 8, "batch": 2, "decode_p50_ms": 1.0,
+             "decode_p95_ms": 2.0, "decode_p99_ms": 3.0}
+    txt = obs_dashboard.render([_manifest(), serve], "serve.jsonl")
+    assert "tok/s" in txt and "p50/p95/p99" in txt
+
+
+# -------------------------------------- committed bench record files
+BENCH_FILES = ("experiments/bench_comm.json",
+               "experiments/bench_sched.json",
+               "BENCH_engine.json")
+
+
+@pytest.mark.parametrize("rel", BENCH_FILES)
+def test_committed_bench_files_are_validated_record_logs(rel):
+    """The committed benchmark trajectories are obs record logs:
+    manifest first (current fingerprint — they are regenerated through
+    the recorder), every row a schema-valid `bench` record with a
+    unique name (what obs_diff aligns on)."""
+    recs = logio.read_records(os.path.join(ROOT, rel))
+    assert recs[0]["record"] == "manifest"
+    assert recs[0]["schema_sha256"] == schema.fingerprint()
+    names = set()
+    for r in recs[1:]:
+        schema.validate_record(r)
+        assert r["record"] == "bench"
+        names.add(r["name"])
+    assert len(names) == len(recs) - 1
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the committed Perfetto export golden")
+    if ap.parse_args().regen:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        doc = obs_trace.chrome_trace([_manifest()] + _traced_records())
+        errors = obs_trace.validate_chrome_trace(doc)
+        if errors:
+            sys.exit("refusing to freeze an invalid trace:\n  "
+                     + "\n  ".join(errors))
+        with open(GOLDEN, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN}")

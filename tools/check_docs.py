@@ -26,6 +26,8 @@ that no longer exist, so the docs cannot silently drift from the code:
   the metrics registered in ``src/repro/obs/schema.py`` (regex-parsed
   ``Metric("name", ...)`` literals — no package import), so the obs
   docs can't drift from the record schema;
+* the record-type table in the same doc's "Record schema" section
+  must list exactly the ``RECORDS`` registry's record types;
 * the committed kernel tuning table ``src/repro/kernels/tuning.json``
   must parse and its entry keys must equal the ``KERNELS`` registry in
   ``src/repro/kernels/__init__.py`` (regex-parsed — no package
@@ -60,6 +62,9 @@ OBS_DOC = ROOT / "docs" / "observability.md"
 #: the metric registry declares one Metric("name", ...) literal per
 #: line (the schema docstring mandates it) — regex-parseable here
 METRIC_DECL_RE = re.compile(r'\bMetric\(\s*"(\w+)"')
+#: record types are declared as `"name": RecordType(` entries of the
+#: RECORDS dict in the schema module
+RECORD_DECL_RE = re.compile(r'"(\w+)": RecordType\(')
 
 PATH_RE = re.compile(r"[\w./-]+/[\w.-]+\.(?:py|md|json|yml|ini)\b")
 MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
@@ -210,6 +215,34 @@ def check_metric_catalogue(errors) -> None:
                       f"is not a registered metric")
 
 
+def check_record_table(errors) -> None:
+    """The record-type table in docs/observability.md's '## Record
+    schema' section must list exactly the record types registered in
+    repro.obs.schema.RECORDS — a new record type without a doc row
+    (or a row outliving its type) is a CI error."""
+    registered = set(RECORD_DECL_RE.findall(OBS_SCHEMA_SOURCE.read_text()))
+    if not registered:
+        errors.append("tools/check_docs.py: found no RecordType "
+                      "declarations in src/repro/obs/schema.py")
+        return
+    if not OBS_DOC.exists():
+        return                      # already reported by the catalogue
+    text = OBS_DOC.read_text()
+    m = re.search(r"## Record schema\n(.*?)(?:\n## |\Z)", text, re.S)
+    if not m:
+        errors.append("docs/observability.md: no '## Record schema' "
+                      "section")
+        return
+    documented = set(re.findall(r"^\| `(\w+)` \|", m.group(1), re.M))
+    for name in sorted(registered - documented):
+        errors.append(f"docs/observability.md: record type `{name}` is "
+                      f"registered in repro.obs.schema but missing from "
+                      f"the record table")
+    for name in sorted(documented - registered):
+        errors.append(f"docs/observability.md: record table row "
+                      f"`{name}` is not a registered record type")
+
+
 def check_tuning_table(errors) -> None:
     """The committed kernel tuning table (src/repro/kernels/
     tuning.json) must parse and its entry keys must EQUAL the KERNELS
@@ -254,6 +287,7 @@ def main() -> int:
             check_file(doc, make_targets, errors)
     check_config_reference(errors)
     check_metric_catalogue(errors)
+    check_record_table(errors)
     check_tuning_table(errors)
     if errors:
         print(f"docs-check: {len(errors)} stale reference(s)")

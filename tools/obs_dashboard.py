@@ -1,0 +1,234 @@
+#!/usr/bin/env python
+"""Terminal dashboard over an obs run log — live or post-hoc.
+
+Renders the structured record stream (repro.obs) as a compact text
+dashboard: loss / clip-fraction sparklines, rounds per second, exact
+per-stream byte and energy rates, the staleness histogram, host-span
+aggregates, and the serving loop's throughput when the log carries
+``serve`` records (`repro.launch.serve --obs-log`).
+
+    python tools/obs_dashboard.py runs/fed.jsonl            # one shot
+    python tools/obs_dashboard.py runs/fed.jsonl --follow   # live tail
+
+Follow mode re-reads complete JSONL lines as the run appends them
+(a partial final line is simply not yet a record) and redraws every
+``--interval`` seconds until interrupted.  Pure stdlib on top of
+`repro.obs.logio` — no jax import on the hot path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import defaultdict
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import logio  # noqa: E402
+
+SPARK = "▁▂▃▄▅▆▇█"
+TRAJECTORY = ("round", "sched_event")
+
+
+def sparkline(values, width=48) -> str:
+    """Unicode sparkline of the series, subsampled to ``width``."""
+    vals = [float(v) for v in values if v is not None]
+    if not vals:
+        return "(no data)"
+    if len(vals) > width:
+        # keep the tail exact: the most recent points matter most
+        step = len(vals) / width
+        vals = [vals[int(i * step)] for i in range(width - 1)] + vals[-1:]
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    return "".join(SPARK[int((v - lo) / span * (len(SPARK) - 1))]
+                   for v in vals)
+
+
+def _fmt_bytes(n) -> str:
+    for unit, scale in (("GiB", 1 << 30), ("MiB", 1 << 20),
+                        ("KiB", 1 << 10)):
+        if abs(n) >= scale:
+            return f"{n / scale:.2f}{unit}"
+    return f"{n}B"
+
+
+def _series(traj, key):
+    return [r[key] for r in traj if key in r]
+
+
+def render(records, path: str) -> str:
+    """The full dashboard as one string (idempotent on the records)."""
+    by_kind = defaultdict(list)
+    for r in records:
+        by_kind[r.get("record", "?")].append(r)
+    lines = []
+
+    man = logio.manifest_of(records)
+    meta = man.get("meta", {})
+    head = f"== {path} — schema v{man.get('schema_version', '?')}"
+    if meta:
+        head += " — " + ", ".join(
+            f"{k}={meta[k]}" for k in ("arch", "schedule", "optimizer",
+                                       "clients") if k in meta)
+    lines.append(head)
+
+    traj = [r for k in TRAJECTORY for r in by_kind.get(k, [])]
+    if traj:
+        losses = _series(traj, "loss")
+        lines.append(f"\nloss      {sparkline(losses)}  "
+                     f"last={losses[-1]:.4f} (n={len(losses)})")
+        evals = _series(traj, "eval_loss")
+        if evals:
+            lines.append(f"eval      {sparkline(evals)}  "
+                         f"last={evals[-1]:.4f}")
+        clips = _series(traj, "clip_fraction")
+        if clips:
+            lines.append(f"clip_frac {sparkline(clips)}  "
+                         f"last={clips[-1]:.3f}")
+        stale = _series(traj, "h_staleness")
+        if stale:
+            lines.append(f"h_stale   {sparkline(stale)}  "
+                         f"last={stale[-1]:.0f}")
+
+        # rates: virtual-time for scheduler runs, wall-time for sync
+        # rounds that logged wall_s
+        n = len(traj)
+        last = traj[-1]
+        if "time_s" in last and last["time_s"] > 0:
+            lines.append(f"\nrounds/sec (virtual): "
+                         f"{n / last['time_s']:.3f}  "
+                         f"({n} events / {last['time_s']:.2f}s)")
+        walls = _series(traj, "wall_s")
+        if walls and sum(walls) > 0:
+            lines.append(f"rounds/sec (wall):    "
+                         f"{len(walls) / sum(walls):.3f}")
+
+        # per-stream byte rates over the run, exact int64 counters
+        streams = (("uplink", "cum_uplink_bytes", "uplink_bytes"),
+                   ("downlink", "cum_downlink_bytes", "downlink_bytes"),
+                   ("hessian_up", "cum_hessian_uplink_bytes",
+                    "hessian_uplink_bytes"),
+                   ("hessian_dn", "cum_hessian_downlink_bytes",
+                    "hessian_downlink_bytes"))
+        parts = []
+        for label, cum_key, per_key in streams:
+            if cum_key in last:
+                total = last[cum_key]
+            elif per_key in traj[0]:
+                total = sum(_series(traj, per_key))
+            else:
+                continue
+            parts.append(f"{label}={_fmt_bytes(total)}"
+                         f" ({_fmt_bytes(total // n)}/ev)")
+        if parts:
+            lines.append("streams:  " + "  ".join(parts))
+        energies = _series(traj, "energy_J")
+        if energies:
+            lines.append(f"energy:   {sum(energies):.3g}J total, "
+                         f"{sum(energies) / len(energies):.3g}J/event")
+
+    for summ in by_kind.get("sched_summary", []):
+        hist = dict(summ.get("staleness_hist", []))
+        lines.append(f"\nscheduler {summ['discipline']}: "
+                     f"{summ['events']} events, simulated "
+                     f"{summ['final_time_s']:.2f}s, "
+                     f"{_fmt_bytes(summ['cum_total_bytes'])} on the wire")
+        if hist:
+            hi = max(hist.values())
+            lines.append("staleness histogram:")
+            for k in sorted(hist):
+                bar = "#" * max(1, round(hist[k] / hi * 30))
+                lines.append(f"  tau={k:<3} {bar} {hist[k]}")
+
+    serve = by_kind.get("serve", [])
+    if serve:
+        tps = [r["tokens_per_s"] for r in serve]
+        last = serve[-1]
+        lines.append(f"\nserving   {sparkline(tps)}  "
+                     f"last={tps[-1]:.1f} tok/s, batch {last['batch']}, "
+                     f"prefill {last['prefill_s'] * 1e3:.0f}ms")
+        if "decode_p50_ms" in last:
+            lines.append(f"decode latency p50/p95/p99: "
+                         f"{last['decode_p50_ms']:.2f}/"
+                         f"{last['decode_p95_ms']:.2f}/"
+                         f"{last['decode_p99_ms']:.2f} ms")
+
+    spans = by_kind.get("span", [])
+    if spans:
+        agg = defaultdict(lambda: [0, 0.0])
+        for s in spans:
+            agg[s["name"]][0] += 1
+            agg[s["name"]][1] += s["wall_s"]
+        lines.append("\nspans: " + "  ".join(
+            f"{name} n={n} mean={tot / n * 1e3:.0f}ms"
+            for name, (n, tot) in sorted(agg.items(),
+                                         key=lambda kv: -kv[1][1])))
+
+    ndisp = len(by_kind.get("sched_dispatch", []))
+    if ndisp:
+        lines.append(f"\ntrace: {ndisp} dispatch contexts "
+                     f"(tools/obs_trace.py renders the timeline)")
+    return "\n".join(lines)
+
+
+def follow(path: str, interval: float) -> int:
+    """Tail the log: parse newly completed lines, redraw, repeat."""
+    offset = 0
+    records = []
+    try:
+        while True:
+            try:
+                with open(path) as f:
+                    f.seek(offset)
+                    chunk = f.read()
+            except OSError:
+                chunk = ""
+            if chunk:
+                lines = chunk.splitlines(keepends=True)
+                for line in lines:
+                    if not line.endswith("\n"):
+                        break          # partial tail: not yet a record
+                    offset += len(line)
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        records.append(json.loads(line))
+                    except ValueError:
+                        pass           # torn write; re-read next pass
+            sys.stdout.write("\x1b[2J\x1b[H")   # clear + home
+            if records:
+                print(render(records, path))
+            else:
+                print(f"{path}: waiting for records ...")
+            print(f"\n[following, every {interval:g}s — Ctrl-C to stop]",
+                  flush=True)
+            time.sleep(interval)
+    except KeyboardInterrupt:
+        return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log", help="obs JSONL run log")
+    ap.add_argument("--follow", action="store_true",
+                    help="tail a growing log and redraw continuously")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="redraw period in follow mode (seconds)")
+    args = ap.parse_args()
+    if args.follow:
+        return follow(args.log, args.interval)
+    try:
+        records = logio.read_records(args.log)
+    except logio.ObsLogError as e:
+        raise SystemExit(str(e))
+    print(render(records, args.log))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

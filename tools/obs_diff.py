@@ -1,0 +1,196 @@
+#!/usr/bin/env python
+"""Cross-run regression diff over two obs logs (the run observatory).
+
+Compares two runs record-by-record: the manifests first (schema
+version, registry fingerprint, run meta), then every aligned record
+pair per metric, with per-metric drift bands:
+
+    python tools/obs_diff.py runs/a.jsonl runs/b.jsonl
+    python tools/obs_diff.py a.jsonl b.jsonl --rtol 1e-4 \
+        --band loss=1e-2 --band eval_loss=1e-2
+
+Alignment keys: ``round`` records by round index, ``sched_event`` by
+version, ``sched_dispatch`` by trace id, ``bench`` rows by name;
+everything else by position.  Integer metrics (the exact byte
+counters) must match EXACTLY regardless of bands — a byte drift is a
+wire-accounting change, never noise.  Float metrics pass within
+``--band <metric>=<rtol>`` (falling back to ``--rtol``, default 0).
+
+Exit status: 0 when every compared metric is within its band and the
+record counts line up ("zero drift" when everything matched exactly —
+the `make obs-trace-smoke` self-compare gate), 1 otherwise.  Degenerate
+logs fail with a one-line diagnosis (repro.obs.logio), never a
+traceback.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import logio, schema  # noqa: E402
+
+#: alignment key per record type (fallback: position in the log)
+ALIGN_KEYS = {"round": "round", "sched_event": "version",
+              "sched_dispatch": "trace_id", "bench": "name"}
+#: fields that identify a record rather than measure it, plus host
+#: wall-clock timings (machine noise, not regression signal — the
+#: virtual clock and byte counters carry the reproducible run)
+SKIP_FIELDS = {"record", "round", "version", "trace_id", "name",
+               "kind", "discipline", "schema_sha256", "schema_version",
+               "meta", "t_wall_s", "wall_s"}
+
+
+def _is_int_metric(field: str) -> bool:
+    m = schema.METRICS.get(field)
+    return m is not None and m.dtype in ("int64", "list[int]", "hist")
+
+
+def _values(v):
+    """Flatten a record value into a list of leaf scalars."""
+    if isinstance(v, (list, tuple)):
+        out = []
+        for x in v:
+            out.extend(_values(x))
+        return out
+    return [v]
+
+
+def _rel_drift(a, b) -> float:
+    av, bv = _values(a), _values(b)
+    if len(av) != len(bv):
+        return float("inf")
+    worst = 0.0
+    for x, y in zip(av, bv):
+        if isinstance(x, str) or isinstance(y, str):
+            if x != y:
+                return float("inf")
+            continue
+        denom = max(abs(float(x)), abs(float(y)), 1e-12)
+        worst = max(worst, abs(float(x) - float(y)) / denom)
+    return worst
+
+
+def _align(records):
+    """{(rtype, key): record} with positional keys where no natural
+    alignment key exists."""
+    out, counters = {}, defaultdict(int)
+    for r in records:
+        rt = r.get("record", "?")
+        key_field = ALIGN_KEYS.get(rt)
+        key = r.get(key_field) if key_field else None
+        if key is None:
+            key = counters[rt]
+            counters[rt] += 1
+        out[(rt, key)] = r
+    return out
+
+
+def diff(recs_a, recs_b, bands, rtol):
+    """Returns (per-metric rows, failure list).  A row is
+    ``(record_type, metric, n, max_drift, band)``."""
+    failures = []
+
+    man_a, man_b = logio.manifest_of(recs_a), logio.manifest_of(recs_b)
+    if man_a.get("schema_sha256") != man_b.get("schema_sha256"):
+        failures.append(
+            "manifest: schema fingerprints differ "
+            f"({str(man_a.get('schema_sha256'))[:12]} vs "
+            f"{str(man_b.get('schema_sha256'))[:12]}) — the runs "
+            "recorded under different schemas; metric comparison is "
+            "best-effort")
+
+    a, b = _align(recs_a), _align(recs_b)
+    only_a, only_b = set(a) - set(b), set(b) - set(a)
+    for rt, key in sorted(only_a, key=str)[:5]:
+        failures.append(f"{rt}[{key}]: only in run A")
+    for rt, key in sorted(only_b, key=str)[:5]:
+        failures.append(f"{rt}[{key}]: only in run B")
+    if len(only_a) > 5 or len(only_b) > 5:
+        failures.append(f"... {max(len(only_a), len(only_b)) - 5} more "
+                        f"unmatched records")
+
+    drift = defaultdict(lambda: [0, 0.0])     # (rt, metric) -> [n, max]
+    for k in sorted(set(a) & set(b), key=str):
+        ra, rb = a[k], b[k]
+        rt = k[0]
+        for f in sorted(set(ra) | set(rb)):
+            if f in SKIP_FIELDS:
+                continue
+            if (f in ra) != (f in rb):
+                failures.append(f"{rt}[{k[1]}].{f}: present in only "
+                                f"one run")
+                continue
+            d = _rel_drift(ra[f], rb[f])
+            ent = drift[(rt, f)]
+            ent[0] += 1
+            ent[1] = max(ent[1], d)
+
+    rows = []
+    for (rt, f), (n, worst) in sorted(drift.items()):
+        band = bands.get(f, 0.0 if _is_int_metric(f) else rtol)
+        if _is_int_metric(f):
+            band = 0.0                 # exact counters: bands never apply
+        rows.append((rt, f, n, worst, band))
+        if worst > band:
+            failures.append(
+                f"{rt}.{f}: max drift {worst:.3g} exceeds band "
+                f"{band:.3g} (over {n} aligned records)")
+    return rows, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("run_a", help="obs log A (baseline)")
+    ap.add_argument("run_b", help="obs log B (candidate)")
+    ap.add_argument("--rtol", type=float, default=0.0,
+                    help="default relative drift band for float "
+                         "metrics (int64 counters are always exact)")
+    ap.add_argument("--band", action="append", default=[],
+                    metavar="METRIC=RTOL",
+                    help="per-metric band override, repeatable")
+    args = ap.parse_args()
+
+    bands = {}
+    for spec in args.band:
+        if "=" not in spec:
+            raise SystemExit(f"--band {spec}: want METRIC=RTOL")
+        name, val = spec.split("=", 1)
+        bands[name] = float(val)
+
+    try:
+        recs_a = logio.read_records(args.run_a)
+        recs_b = logio.read_records(args.run_b)
+    except logio.ObsLogError as e:
+        raise SystemExit(str(e))
+
+    rows, failures = diff(recs_a, recs_b, bands, args.rtol)
+
+    if rows:
+        w = max(len(f"{rt}.{f}") for rt, f, *_ in rows)
+        print(f"{'metric':<{w}}  {'n':>4}  {'max drift':>10}  "
+              f"{'band':>8}  status")
+        for rt, f, n, worst, band in rows:
+            status = "ok" if worst <= band else "FAIL"
+            print(f"{rt + '.' + f:<{w}}  {n:>4}  {worst:>10.3g}  "
+                  f"{band:>8.3g}  {status}")
+    if failures:
+        print(f"\n{args.run_a} vs {args.run_b}: "
+              f"DRIFT ({len(failures)} failure(s))")
+        for msg in failures[:20]:
+            print(f"  {msg}")
+        return 1
+    total = sum(n for _, _, n, _, _ in rows)
+    exact = all(worst == 0.0 for _, _, _, worst, _ in rows)
+    print(f"\n{args.run_a} vs {args.run_b}: "
+          + ("zero drift" if exact else "within bands")
+          + f" across {total} aligned metric comparisons")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,11 +7,20 @@ host-span timing aggregates, straight from the structured records:
 
     python tools/obs_report.py runs/fed.jsonl
 
-Validation mode (`--validate`, the `make obs-smoke` CI gate) checks the
-manifest header line, re-validates every record against the frozen
-schema (repro.obs.schema), and requires at least one per-round record:
+Validation mode (`--validate`, the `make obs-smoke` /
+`make bench-records-check` CI gate) checks the manifest header,
+re-validates every record against the frozen schema
+(repro.obs.schema), and requires at least one content record:
 
     python tools/obs_report.py runs/fed.jsonl --validate
+
+Degenerate logs — missing file, empty file, a truncated final JSONL
+line (a live or killed run), a missing manifest — produce a one-line
+diagnosis and a nonzero exit, never a traceback (tested in
+tests/test_obs_tools.py).  Logs from older supported schema versions
+(`repro.obs.schema.SUPPORTED_SCHEMA_VERSIONS`) validate without the
+fingerprint check; only a current-version manifest must match this
+checkout's registry byte-for-byte.
 """
 from __future__ import annotations
 
@@ -28,35 +37,36 @@ from repro import obs  # noqa: E402
 
 #: records that carry a per-aggregation trajectory point
 TRAJECTORY = ("round", "sched_event")
+#: record types that count as "this log has content"
+CONTENT = TRAJECTORY + ("bench", "serve")
 
 
 def load(path: str):
-    records = []
-    with open(path) as f:
-        for i, line in enumerate(f):
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                records.append(json.loads(line))
-            except json.JSONDecodeError as e:
-                raise SystemExit(f"{path}:{i + 1}: not JSON ({e})")
-    if not records:
-        raise SystemExit(f"{path}: empty log")
-    return records
+    """Tolerant record load (`repro.obs.logio`); exits with the
+    reader's one-line diagnosis instead of a traceback."""
+    try:
+        return obs.read_records(path)
+    except obs.ObsLogError as e:
+        raise SystemExit(str(e))
 
 
 def validate(path: str, records) -> int:
     errors = []
     first = records[0]
     if first.get("record") != "manifest":
-        errors.append("line 1: first record must be the run manifest")
+        errors.append(
+            "line 1: first record must be the run manifest — is this "
+            "a legacy pre-schema file?  Regenerate it through "
+            "repro.obs.RunRecorder")
     else:
-        if first.get("schema_version") != obs.SCHEMA_VERSION:
+        ver = first.get("schema_version")
+        if ver not in obs.SUPPORTED_SCHEMA_VERSIONS:
             errors.append(
-                f"manifest: schema_version {first.get('schema_version')} "
-                f"!= library version {obs.SCHEMA_VERSION}")
-        if first.get("schema_sha256") != obs.fingerprint():
+                f"manifest: schema_version {ver} is not supported by "
+                f"this checkout (want one of "
+                f"{list(obs.SUPPORTED_SCHEMA_VERSIONS)})")
+        elif (ver == obs.SCHEMA_VERSION
+              and first.get("schema_sha256") != obs.fingerprint()):
             errors.append(
                 "manifest: schema_sha256 does not match this checkout's "
                 "metric registry (repro.obs.schema) — log and code "
@@ -67,17 +77,19 @@ def validate(path: str, records) -> int:
             obs.validate_record(rec)
             counts[rec["record"]] += 1
         except obs.ObsSchemaError as e:
-            errors.append(f"line {i + 1}: {e}")
-    if not any(counts[k] for k in TRAJECTORY):
-        errors.append("no per-round records (`round` or `sched_event`) — "
-                      "the log carries no training trajectory")
+            errors.append(f"record {i + 1}: {e}")
+    if not any(counts[k] for k in CONTENT):
+        errors.append(
+            "no content records (`round`, `sched_event`, `bench` or "
+            "`serve`) — the log carries no trajectory or results")
     if errors:
         print(f"{path}: INVALID ({len(errors)} error(s))")
         for e in errors[:20]:
             print(f"  {e}")
         return 1
     print(f"{path}: valid — "
-          + ", ".join(f"{v} {k}" for k, v in sorted(counts.items())))
+          + ", ".join(f"{v} {k}" for k, v in sorted(counts.items())
+                      if v))
     return 0
 
 
@@ -88,7 +100,8 @@ def _fmt_bytes(n) -> str:
 def _traj_row(rec) -> str:
     idx = rec.get("round", rec.get("version", "?"))
     cum = rec.get("cum_total_bytes", 0)
-    cols = [f"loss={rec['loss']:.4f}", f"cum={_fmt_bytes(cum)}"]
+    cols = [f"loss={rec.get('loss', float('nan')):.4f}",
+            f"cum={_fmt_bytes(cum)}"]
     if "eval_loss" in rec:
         cols.append(f"eval={rec['eval_loss']:.4f}")
     if "energy_J" in rec:
@@ -109,9 +122,13 @@ def summarize(path: str, records) -> int:
         by_kind[rec.get("record", "?")].append(rec)
 
     if by_kind.get("manifest"):
-        meta = by_kind["manifest"][0].get("meta", {})
-        print(f"{path}: schema v{by_kind['manifest'][0]['schema_version']}"
+        man = by_kind["manifest"][0]
+        meta = man.get("meta", {})
+        print(f"{path}: schema v{man.get('schema_version', '?')}"
               + (f" — {json.dumps(meta, sort_keys=True)}" if meta else ""))
+    else:
+        print(f"{path}: no manifest record (legacy or hand-written "
+              f"log) — rendering best-effort")
 
     traj = [r for k in TRAJECTORY for r in by_kind.get(k, [])]
     if traj:
@@ -121,6 +138,14 @@ def summarize(path: str, records) -> int:
             if len(traj) > 12 and i == 6:
                 print(f"  ... {len(traj) - 12} more ...")
             print(_traj_row(rec))
+    elif not (by_kind.get("bench") or by_kind.get("serve")):
+        print("\nno trajectory records (`round`/`sched_event`) — "
+              "an empty or setup-only run")
+
+    ndisp = len(by_kind.get("sched_dispatch", []))
+    if ndisp:
+        print(f"\ntrace contexts: {ndisp} dispatches "
+              f"(export with tools/obs_trace.py)")
 
     for summ in by_kind.get("sched_summary", []):
         hist = dict(summ.get("staleness_hist", []))
@@ -130,6 +155,26 @@ def summarize(path: str, records) -> int:
         if hist:
             print("staleness histogram: "
                   + "  ".join(f"{k}:{v}" for k, v in sorted(hist.items())))
+
+    bench = by_kind.get("bench", [])
+    if bench:
+        print(f"\nbench rows ({len(bench)}):")
+        for r in bench:
+            cols = [f"{k}={r[k]}" for k in
+                    ("layout_ops", "us_per_round", "total_bytes",
+                     "reduction_x", "speedup_x") if k in r]
+            print(f"  {r.get('name', '?'):<40} " + "  ".join(cols))
+
+    serve = by_kind.get("serve", [])
+    if serve:
+        last = serve[-1]
+        print(f"\nserving ({len(serve)} samples): last "
+              f"{last['tokens_per_s']:.1f} tok/s, batch {last['batch']}, "
+              f"prefill {last['prefill_s'] * 1e3:.1f}ms"
+              + (f", decode p50/p95/p99 {last['decode_p50_ms']:.2f}/"
+                 f"{last['decode_p95_ms']:.2f}/"
+                 f"{last['decode_p99_ms']:.2f}ms"
+                 if "decode_p50_ms" in last else ""))
 
     spans = by_kind.get("span", [])
     if spans:

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Export an obs run log as Chrome Trace Event / Perfetto JSON.
+
+Reads a JSONL run log that was written with tracing on
+(``--trace`` in `repro.launch.train`, or ``ObsConfig.trace``) and
+renders the whole run as a trace you can open in Perfetto
+(https://ui.perfetto.dev) or ``chrome://tracing``: one lane per
+client with per-stream transfer slices sized by the exact byte
+counters, a server apply lane, and counter tracks for loss and the
+Sophia health probes.
+
+    python tools/obs_trace.py runs/fed.jsonl --out trace.json
+    python tools/obs_trace.py runs/fed.jsonl --validate
+
+``--validate`` (the `make obs-trace-smoke` CI gate) structurally
+validates the export — required keys per event, non-negative
+durations, non-decreasing timestamps per lane — and exits nonzero
+with the error list on failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import logio  # noqa: E402
+from repro.obs.trace import chrome_trace, validate_chrome_trace  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log", help="JSONL run log (written with --trace)")
+    ap.add_argument("--out", default="",
+                    help="write the Chrome trace JSON here "
+                         "(default: <log>.trace.json)")
+    ap.add_argument("--validate", action="store_true",
+                    help="also structurally validate the export and "
+                         "exit nonzero on any error (CI mode)")
+    args = ap.parse_args()
+
+    try:
+        records = logio.read_records(args.log)
+    except logio.ObsLogError as e:
+        raise SystemExit(str(e))
+
+    trace = chrome_trace(records)
+    slices = sum(1 for e in trace["traceEvents"] if e["ph"] == "X")
+    if slices == 0:
+        raise SystemExit(
+            f"{args.log}: no trace slices — was the run recorded with "
+            f"tracing on (--trace / ObsConfig.trace)?")
+
+    out = args.out or f"{args.log}.trace.json"
+    Path(out).write_text(json.dumps(trace, sort_keys=True) + "\n")
+    lanes = {(e["pid"], e["tid"]) for e in trace["traceEvents"]
+             if e["ph"] != "M"}
+    print(f"{out}: {slices} slices across {len(lanes)} lanes "
+          f"({len(trace['traceEvents'])} events)")
+
+    if args.validate:
+        errors = validate_chrome_trace(trace)
+        if errors:
+            print(f"{out}: INVALID ({len(errors)} error(s))")
+            for e in errors[:20]:
+                print(f"  {e}")
+            return 1
+        print(f"{out}: structurally valid Chrome trace")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
