@@ -382,6 +382,58 @@ def _count_layout_ops(jaxpr) -> int:
     return n
 
 
+def _sched_dispatch_donation_check(task, key, batches, regressions):
+    """End-to-end donation gate for the event-loop scheduler: the
+    apply jit receives the donated state PLUS the donated stacked
+    wire/stat/client-state-row buffers of one aggregation, and must
+    still alias every resident-state byte in place (state_copy_B ==
+    0).  A lost ``donate_argnums`` entry or an aliasing-defeating
+    reshape in `VirtualScheduler._apply_impl` shows up here as nonzero
+    copied bytes.  Static property of the compiled program — identical
+    in --smoke and full runs; nothing is executed."""
+    import jax as _jax
+    from repro.core.fed import FedEngine
+    from repro.sched.scheduler import VirtualScheduler
+
+    comm = CommConfig(compressor="int8", use_pallas=True)
+    fed = common.make_fed("fed_sophia", clients=4, local_iters=2,
+                          lr=0.02, tau=2, rounds=4, comm=comm)
+    fed = dataclasses.replace(
+        fed, sched=SchedConfig(discipline="semisync", buffer_size=2))
+    engine = FedEngine(task, fed)
+    state = engine.pack_state(engine.init(_jax.random.fold_in(key, 5)))
+    sch = VirtualScheduler(engine, lambda v: batches, donate=True)
+    K = sch.buffer_size
+    R, C = state["params"].shape
+
+    def rows(x):
+        # dispatch outputs arrive in the fp32 compute dtype; the apply
+        # step downcasts on scatter (`FedEngine._store*`)
+        return jnp.zeros((K,) + x.shape[1:], jnp.float32)
+
+    opt_rows = (_jax.tree.map(rows, state["client_opt"])
+                if "client_opt" in state else None)
+    ef_rows = rows(state["comm_ef"]) if "comm_ef" in state else None
+    compiled = sch._apply_fn.lower(
+        state, jnp.zeros((K, R, C), jnp.float32),
+        jnp.zeros((K,), jnp.float32), jnp.ones((K,), jnp.float32),
+        jnp.arange(K, dtype=jnp.int32), ef_rows, opt_rows, None,
+        None).compile()
+    resident = sum(l.size * l.dtype.itemsize
+                   for l in _jax.tree.leaves(state))
+    ma = compiled.memory_analysis()
+    aliased = int(getattr(ma, "alias_size_in_bytes", 0) or 0)
+    copy_bytes = max(0, resident - aliased)
+    _row("engine/mlp/sched-dispatch-donation", 0.0,
+         f"resident_state_B={resident};state_copy_B={copy_bytes}")
+    if copy_bytes:
+        regressions.append(
+            f"sched-dispatch-donation: the donated apply step left "
+            f"{copy_bytes} bytes of resident state copied per "
+            f"aggregation (want 0 — state and the stacked row buffers "
+            f"aliased in place)")
+
+
 def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     """Round-engine microbenchmark: per-round wall-clock (jitted,
     block_until_ready), the layout-conversion op count of the round
@@ -394,9 +446,14 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
     churn.  The `packed-donated-*` regimes additionally keep
     ``state["params"]`` packed BETWEEN rounds and donate the state to
     the jit — gated on ``state_copy_bytes == 0`` (XLA aliases every
-    resident buffer in place; from `compiled.memory_analysis()`), and
-    the bf16 regime on ``resident_state_bytes`` ≤ 0.55x its fp32 twin
-    (`CommConfig.state_dtype`).  Results append to the committed perf
+    resident buffer in place; from `compiled.memory_analysis()`), the
+    bf16 regime on ``resident_state_bytes`` ≤ 0.55x its fp32 twin
+    (`CommConfig.state_dtype`), and the fp8 regime (bf16 params, e4m3
+    moments, e5m2 hessian via `moment_dtype`/`hessian_dtype`) on ≤
+    0.30x — plus the same in-run ref-gap band as the int8 kernel path.
+    The scheduler's end-to-end donation (dispatch batches + apply-side
+    stacked buffers) is gated alongside by
+    `_sched_dispatch_donation_check`.  Results append to the committed perf
     trajectory in BENCH_engine.json — schema-validated ``bench``
     records named ``baseline/<regime>`` (the pre-flat-resident tree
     engine, frozen) and ``current/<regime>`` (this checkout) — and the
@@ -448,6 +505,16 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
         # layout-op count and donation contract of its probes-off twin
         "packed-donated-probes-pallas": (
             CommConfig(use_pallas=True), True, True, True, True, True),
+        # fp8 residency frontier: bf16 params + e4m3 moments + e5m2
+        # hessian EMA (per-buffer resident dtypes) — the (C, rows,
+        # cols) Sophia stacks dominate resident state, so quartering
+        # them gates at <= 0.30x the fp32 twin below
+        "packed-donated-fp8-pallas": (
+            CommConfig(compressor="int8", use_pallas=True,
+                       state_dtype="bfloat16",
+                       moment_dtype="float8_e4m3fn",
+                       hessian_dtype="float8_e5m2"),
+            True, True, True, True, False),
     }
     import jax as _jax
     from repro.core.fed import FedEngine
@@ -590,6 +657,18 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
             regressions.append(
                 f"packed-donated-bf16-pallas: resident state is "
                 f"{ratio:.2f}x the fp32 twin (want <= 0.55x)")
+    # fp8 residency gate: bf16 params + fp8 m/h must cut resident-state
+    # HBM to about a quarter of the fp32 twin (the Sophia EMA stacks
+    # are the dominant term, so the blend lands near 0.28x)
+    fp8 = results.get("packed-donated-fp8-pallas")
+    if fp8 and fp32:
+        ratio = (fp8["resident_state_bytes"]
+                 / fp32["resident_state_bytes"])
+        fp8["resident_ratio_vs_fp32"] = ratio
+        if ratio > 0.30:
+            regressions.append(
+                f"packed-donated-fp8-pallas: resident state is "
+                f"{ratio:.2f}x the fp32 twin (want <= 0.30x)")
     # ref-gap gate: the kernel path must stay competitive with the
     # pure-JAX reference IN THE SAME RUN (both sides share the machine
     # and the load, so this ratio is jitter-immune in a way the
@@ -609,6 +688,19 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
                 f"uplink-int8-pallas: us_per_round is {ratio:.2f}x the "
                 f"uplink-int8-ref regime in this run (want <= "
                 f"{ref_gap:.2f}x; REPRO_REF_GAP overrides)")
+    # the fp8 regime must pay for its quarter-HBM residency without
+    # falling out of the same in-run band vs the pure-JAX reference
+    # (narrow loads upcast in-VMEM; no extra HBM pass is allowed)
+    if (ref_gap > 0 and fp8 and ref and fp8["us_per_round"]
+            and ref["us_per_round"]):
+        ratio = fp8["us_per_round"] / ref["us_per_round"]
+        fp8["ref_gap_vs_int8_ref"] = ratio
+        if ratio > ref_gap:
+            regressions.append(
+                f"packed-donated-fp8-pallas: us_per_round is "
+                f"{ratio:.2f}x the uplink-int8-ref regime in this run "
+                f"(want <= {ref_gap:.2f}x; REPRO_REF_GAP overrides)")
+    _sched_dispatch_donation_check(task, key, batches, regressions)
     out["engine"] = results
     if regressions:
         # do NOT persist the regressed counts: rewriting 'current'

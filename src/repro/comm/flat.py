@@ -83,13 +83,18 @@ COMPRESSOR_IDS = {"identity": 0, "int8": 1, "int4": 2, "topk": 3,
 _ID_COMPRESSORS = {v: k for k, v in COMPRESSOR_IDS.items()}
 
 #: stable state-dtype ids carried in the v2 flags byte (append only);
-#: 0 == float32 keeps v1 payloads (flags == 0) meaning what they meant
-STATE_DTYPE_IDS = {"float32": 0, "bfloat16": 1}
+#: 0 == float32 keeps v1 payloads (flags == 0) meaning what they meant.
+#: ids 2/3 are the fp8 resident formats (E4M3 for moments, E5M2 for
+#: the wider-range hessian EMA — docs/wire-format.md)
+STATE_DTYPE_IDS = {"float32": 0, "bfloat16": 1,
+                   "float8_e4m3fn": 2, "float8_e5m2": 3}
 _ID_STATE_DTYPES = {v: k for k, v in STATE_DTYPE_IDS.items()}
 #: name -> storage dtype; one registry for validation AND lookup, so
 #: appending a dtype id without its jnp mapping is a loud error, never
 #: a silent float32 fallback
-_STATE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+_STATE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                 "float8_e4m3fn": jnp.float8_e4m3fn,
+                 "float8_e5m2": jnp.float8_e5m2}
 assert set(_STATE_DTYPES) == set(STATE_DTYPE_IDS)
 
 
@@ -310,9 +315,10 @@ def pack(tree, spec: FlatSpec, dtype=jnp.float32) -> jnp.ndarray:
     """pytree -> (rows, cols) wire buffer (zero pad at the tail).
 
     Leaves are flattened via fp32 (the canonical wire precision) and
-    the buffer is stored as ``dtype`` — fp32 by default, or bf16 when
-    the caller keeps resident state in `CommConfig.state_dtype`
-    ="bfloat16" (a value-rounding, layout-preserving cast)."""
+    the buffer is stored as ``dtype`` — fp32 by default, or a narrower
+    resident format (bf16, fp8 e4m3/e5m2) when the caller keeps
+    resident state per `CommConfig.state_dtype` / `moment_dtype` /
+    `hessian_dtype` (a value-rounding, layout-preserving cast)."""
     leaves = jax.tree_util.tree_flatten(tree)[0]
     v = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
     return jnp.pad(v, (0, spec.padded - spec.total)).reshape(
@@ -323,8 +329,9 @@ def unpack(flat: jnp.ndarray, spec: FlatSpec):
     """(rows, cols) buffer -> pytree with the original shapes/dtypes.
 
     The returned leaves are *views-then-casts* of ``flat``: for fp32
-    models this is bit-exact round-tripping of `pack`; a bf16 buffer
-    upcasts losslessly (bf16 ⊂ fp32)."""
+    models this is bit-exact round-tripping of `pack`; a narrower
+    resident buffer (bf16, fp8) upcasts losslessly (every supported
+    storage format ⊂ fp32)."""
     v = flat.reshape(-1)[:spec.total]
     out: List[jnp.ndarray] = []
     off = 0

@@ -201,7 +201,16 @@ class CommConfig:
     # fused Pallas kernels carry a dtype-parameterized load/store path.
     # Wire payloads are unaffected (bytes on the wire follow the
     # compressor, not this dtype).
-    state_dtype: str = "float32"      # float32 | bfloat16
+    state_dtype: str = "float32"      # float32 | bfloat16 | float8_e4m3fn | float8_e5m2
+    # Per-buffer overrides of state_dtype for the two largest resident
+    # stacks, the (C, rows, cols) Sophia EMAs: moment_dtype stores m,
+    # hessian_dtype stores h. "" inherits state_dtype. The fp8 formats
+    # (float8_e4m3fn for m — more mantissa; float8_e5m2 for h — more
+    # range) cut the dominant resident-state HBM to 0.25x of fp32;
+    # compute still upcasts to fp32 in-kernel, so only one store
+    # rounding per round is added per buffer.
+    moment_dtype: str = ""            # "" -> inherit state_dtype
+    hessian_dtype: str = ""           # "" -> inherit state_dtype
     # ---- per-stream packing geometry overrides (0/0.0 = inherit) ------
     # Each stream may override the quantization group size and top-k
     # sparsity of its packed layout: curvature is much smoother than
@@ -295,6 +304,12 @@ class SchedConfig:
     straggler_slowdown: float = 10.0  # straggler: slow-client multiplier
     lognormal_sigma: float = 0.75     # lognormal: client-speed spread
     seed: int = 0                     # latency-sampling salt
+    # Dispatch groups larger than this run as a lax-driven sequence of
+    # fixed-size client chunks through the ONE-launch batched comm step
+    # (autotuned per-chunk kernel geometry), instead of one giant
+    # launch; 0 disables chunking. Chunking is bitwise-neutral: each
+    # chunk computes exactly the per-client op sequence.
+    dispatch_chunk: int = 0           # 0 -> unchunked
 
 
 @dataclass(frozen=True)

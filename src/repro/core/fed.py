@@ -180,6 +180,20 @@ class FedEngine:
         (`CommConfig.state_dtype`); in-round compute is always fp32."""
         return cflat.as_dtype(self.fed.comm.state_dtype)
 
+    @property
+    def moment_dtype(self):
+        """Storage dtype of the (C, rows, cols) Sophia m stack
+        (`CommConfig.moment_dtype`, "" -> `state_dtype`)."""
+        return cflat.as_dtype(self.fed.comm.moment_dtype
+                              or self.fed.comm.state_dtype)
+
+    @property
+    def hessian_dtype(self):
+        """Storage dtype of the (C, rows, cols) Sophia h stack
+        (`CommConfig.hessian_dtype`, "" -> `state_dtype`)."""
+        return cflat.as_dtype(self.fed.comm.hessian_dtype
+                              or self.fed.comm.state_dtype)
+
     @staticmethod
     def params_packed(params) -> bool:
         """Whether ``state["params"]`` is a packed (rows, cols) wire
@@ -195,6 +209,15 @@ class FedEngine:
             return None
         dt = self.state_dtype
         return jax.tree.map(lambda x: x.astype(dt), tree)
+
+    def _store_opt(self, opt):
+        """Scatter-side downcast of Sophia m/h to their per-buffer
+        resident dtypes (`CommConfig.moment_dtype`/`hessian_dtype`,
+        falling back to `state_dtype`).  No-op for fp32 state."""
+        if opt is None:
+            return None
+        return sophia.SophiaState(m=opt.m.astype(self.moment_dtype),
+                                  h=opt.h.astype(self.hessian_dtype))
 
     def _gathered(self, params):
         if self.gather_shardings is None:
@@ -254,8 +277,8 @@ class FedEngine:
             # (and in the resident storage dtype) — the local loop and
             # the hessian stream consume them with zero conversion
             state["client_opt"] = sophia.SophiaState(
-                m=cflat.zeros(rt.spec, (C,), dt),
-                h=cflat.zeros(rt.spec, (C,), dt))
+                m=cflat.zeros(rt.spec, (C,), self.moment_dtype),
+                h=cflat.zeros(rt.spec, (C,), self.hessian_dtype))
         if self.fed.optimizer in ("fedadam", "fedyogi"):
             state["server_opt"] = {"m": tree_zeros_like(params),
                                    "v": tree_zeros_like(params)}
@@ -518,7 +541,18 @@ class FedEngine:
         bitwise equal to ``jax.vmap(comm_client_step)`` over the same
         rows (tests/test_residency.py pins it).  Returns the same
         9-tuple as `comm_client_step`, stacked along clients.
+
+        Dispatch groups larger than `SchedConfig.dispatch_chunk`
+        (when set) run as a lax-driven sequence of fixed-size chunks
+        through this same batched path — see
+        `_comm_client_step_chunked`; each chunk is bitwise the
+        unchunked batched step over its rows.
         """
+        chunk = self.fed.sched.dispatch_chunk
+        if 0 < chunk < int(crngs.shape[0]):
+            return self._comm_client_step_chunked(
+                rt, theta, theta_dn, round_idx, lr, opts, efs, dnms,
+                dnefs, batches, crngs, chunk)
         if rt.dn_on:
             keys = jax.vmap(
                 lambda k: jax.random.fold_in(k, 0xD0))(crngs)
@@ -543,6 +577,41 @@ class FedEngine:
                 h_rows)
         return (xhat, stat, ef_new, opt, losses,
                 dnms if rt.dn_on else None, dnefs, h_hat, h_stat)
+
+    def _comm_client_step_chunked(self, rt: CommRuntime, theta, theta_dn,
+                                  round_idx, lr, opts, efs, dnms, dnefs,
+                                  batches, crngs, chunk: int):
+        """Large-group dispatch: run an N-client group as a
+        `lax.map`-driven sequence of fixed-size ``chunk`` launches of
+        `comm_client_step_batched` (the autotuned per-chunk kernel
+        geometry — `kernels.tuning` keys on the chunk's client count),
+        plus one direct tail call for the N % chunk remainder.
+
+        Every per-client stack is reshaped (N, ...) -> (G, chunk, ...)
+        so the compiled graph holds ONE chunk-sized program body
+        regardless of G; the shared ``theta``/``theta_dn`` broadcast
+        into the body unchanged.  Per-chunk results are bitwise the
+        unchunked batched step over the same rows (each stage is
+        elementwise per client row), pinned by
+        tests/test_residency.py."""
+        n = int(crngs.shape[0])
+        g = n // chunk
+        per_client = (opts, efs, dnms, dnefs, batches, crngs)
+        head = jax.tree.map(
+            lambda x: x[:g * chunk].reshape((g, chunk) + x.shape[1:]),
+            per_client)
+        outs = jax.lax.map(
+            lambda c: self.comm_client_step_batched(
+                rt, theta, theta_dn, round_idx, lr, *c), head)
+        outs = jax.tree.map(
+            lambda x: x.reshape((g * chunk,) + x.shape[2:]), outs)
+        if n % chunk:
+            rest = jax.tree.map(lambda x: x[g * chunk:], per_client)
+            tail = self.comm_client_step_batched(
+                rt, theta, theta_dn, round_idx, lr, *rest)
+            outs = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), outs, tail)
+        return outs
 
     # ------------------------------------------- local client training (flat)
     def _local_sophia_flat(self, spec, theta, m, h, batch, round_idx, rng,
@@ -937,7 +1006,7 @@ class FedEngine:
             state = self._apply_aggregate(state,
                                           cflat.unpack(agg_flat, spec))
         if stateful:
-            state = {**state, "client_opt": self._store(new_opt)}
+            state = {**state, "client_opt": self._store_opt(new_opt)}
         return state, jnp.mean(losses)
 
     def _round_comm(self, state, batches, client_rngs, round_idx, lr, rng,
@@ -1053,10 +1122,11 @@ class FedEngine:
                 state, cflat.unpack(theta + agg_flat, spec))
         if stateful:
             # scatter the participants' optimizer state rows back
-            # (downcast to the resident storage dtype; no-op for fp32)
+            # (downcast to the per-buffer resident dtypes; no-op for
+            # fp32)
             new_opts = jax.tree.map(
                 lambda full, g: full.at[idx].set(g),
-                state["client_opt"], self._store(opt_new_g))
+                state["client_opt"], self._store_opt(opt_new_g))
             if h_on:
                 # curvature averaging: every participant's h re-synced
                 # to the (re-quantized) common averaged broadcast

@@ -15,14 +15,18 @@ kernel with `jax.random` and streamed in, so the reference path
 equivalence is exact; `interpret=True` runs the kernel body on CPU
 (this container), pass False on a real TPU.
 
-Dtype contract (`CommConfig.state_dtype`): the state tiles (model /
-replica / EF streams) may be stored bf16 — every kernel upcasts its
-loads to fp32, computes in fp32, and stores each output in that
+Dtype contract (`CommConfig.state_dtype` / `moment_dtype` /
+`hessian_dtype`): the state tiles (model / replica / EF streams) may
+be stored in a narrower resident format — bf16, or the fp8 formats
+float8_e4m3fn / float8_e5m2 — and every kernel upcasts its loads to
+fp32 in VMEM, computes in fp32, and stores each output in that
 output's declared dtype (the first state input's dtype), so a bf16
-resident buffer costs half the HBM traffic without changing the
-arithmetic.  Noise and scales are always fp32.  With fp32 inputs the
-casts are no-ops and the kernels are bit-identical to their pre-dtype
-versions.
+buffer costs half and an fp8 buffer a quarter of the fp32 HBM traffic
+without changing the arithmetic.  Noise and scales are always fp32.
+With fp32 inputs the casts are no-ops and the kernels are
+bit-identical to their pre-dtype versions.  Launch geometry resolves
+per (kernel, storage dtype, client-chunk size) through
+`repro.kernels.tuning`.
 
 Client batching: each round-trip also has a ``*_batched`` entry point
 over the packed (N, rows, cols) client stack — ONE launch with a
@@ -47,8 +51,8 @@ BLOCK_R = 256
 BLOCK_C = 1024
 
 
-def _grid_specs(R, C, kernel="quant_roundtrip"):
-    br, bc = tuning.blocks_2d(kernel, R, C)
+def _grid_specs(R, C, kernel="quant_roundtrip", dtype=None):
+    br, bc = tuning.blocks_2d(kernel, R, C, dtype=dtype)
     grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
     tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
     rowcol = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
@@ -56,13 +60,16 @@ def _grid_specs(R, C, kernel="quant_roundtrip"):
     return grid, tile, rowcol, scalar
 
 
-def _grid_specs3(N, R, C, kernel, blocks):
+def _grid_specs3(N, R, C, kernel, blocks, dtype=None):
     """Launch geometry of a client-batched (N, R, C) kernel: the grid
     gains a leading client axis; ``shared2`` maps an unbatched (R, C)
     operand (e.g. the one server model every client receives) into the
     same (br, bc) block for every client grid step, where the kernel
-    body broadcasts it against the (bn, br, bc) stacks."""
-    bn, br, bc = tuning.blocks_for(kernel, N, R, C, override=blocks)
+    body broadcasts it against the (bn, br, bc) stacks.  ``dtype`` is
+    the primary state operand's storage dtype — the tuning table may
+    commit per-dtype / per-chunk-size winners."""
+    bn, br, bc = tuning.blocks_for(kernel, N, R, C, override=blocks,
+                                   dtype=dtype)
     grid = (pl.cdiv(N, bn), pl.cdiv(R, br), pl.cdiv(C, bc))
     tile3 = pl.BlockSpec((bn, br, bc), lambda n, i, j: (n, i, j))
     rowcol3 = pl.BlockSpec((bn, br, 1), lambda n, i, j: (n, i, 0))
@@ -92,7 +99,7 @@ def quant_roundtrip_flat(x, noise, scale, *, qmax: int,
     dtype (fp32 compute in-kernel; see the module dtype contract).
     """
     R, C = x.shape
-    grid, tile, rowcol, _ = _grid_specs(R, C)
+    grid, tile, rowcol, _ = _grid_specs(R, C, dtype=x.dtype)
     return pl.pallas_call(
         functools.partial(_quant_kernel, qmax=qmax),
         grid=grid,
@@ -134,7 +141,8 @@ def broadcast_roundtrip_flat(theta, ref, ef, noise, scale, *, qmax: int,
     delta.  Returns (new client model, new EF residual).
     """
     R, C = theta.shape
-    grid, tile, rowcol, _ = _grid_specs(R, C, "broadcast_roundtrip")
+    grid, tile, rowcol, _ = _grid_specs(R, C, "broadcast_roundtrip",
+                                        dtype=theta.dtype)
     return pl.pallas_call(
         functools.partial(_broadcast_kernel, qmax=qmax),
         grid=grid,
@@ -178,7 +186,8 @@ def uplink_roundtrip_flat(theta, start, ef, noise, scale, *, qmax: int,
     (decoded wire reconstruction, new EF residual).
     """
     R, C = theta.shape
-    grid, tile, rowcol, _ = _grid_specs(R, C, "uplink_roundtrip")
+    grid, tile, rowcol, _ = _grid_specs(R, C, "uplink_roundtrip",
+                                        dtype=theta.dtype)
     return pl.pallas_call(
         functools.partial(_uplink_kernel, qmax=qmax),
         grid=grid,
@@ -201,7 +210,8 @@ def _sign_kernel(x_ref, f_ref, out_ref):
 def sign_roundtrip_flat(x, scale, *, interpret: bool = True):
     """out = scale * sign(x); scale is a traced scalar."""
     R, C = x.shape
-    grid, tile, _, scalar = _grid_specs(R, C, "sign_roundtrip")
+    grid, tile, _, scalar = _grid_specs(R, C, "sign_roundtrip",
+                                        dtype=x.dtype)
     flags = jnp.asarray(scale, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         _sign_kernel,
@@ -225,7 +235,8 @@ def topk_threshold_flat(x, thr, *, interpret: bool = True):
     """Magnitude sparsifier: keep x where |x| >= thr (the k-th largest
     magnitude, computed outside), zero elsewhere."""
     R, C = x.shape
-    grid, tile, _, scalar = _grid_specs(R, C, "topk_threshold")
+    grid, tile, _, scalar = _grid_specs(R, C, "topk_threshold",
+                                        dtype=x.dtype)
     flags = jnp.asarray(thr, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         _thresh_kernel,
@@ -253,8 +264,8 @@ def quant_roundtrip_batched(x, noise, scale, *, qmax: int,
     launch.  scale: (N, R, 1) per-client per-row scales; blocks: an
     optional static (bn, br, bc) override of the tuned geometry."""
     N, R, C = x.shape
-    grid, tile3, rowcol3, _, _ = _grid_specs3(N, R, C,
-                                              "quant_roundtrip", blocks)
+    grid, tile3, rowcol3, _, _ = _grid_specs3(
+        N, R, C, "quant_roundtrip", blocks, dtype=x.dtype)
     return pl.pallas_call(
         functools.partial(_quant_kernel, qmax=qmax),
         grid=grid,
@@ -276,7 +287,7 @@ def broadcast_roundtrip_batched(theta, ref, ef, noise, scale, *,
     — or be a (N, R, C) stack; scale: (N, R, 1)."""
     N, R, C = ref.shape
     grid, tile3, rowcol3, _, shared2 = _grid_specs3(
-        N, R, C, "broadcast_roundtrip", blocks)
+        N, R, C, "broadcast_roundtrip", blocks, dtype=theta.dtype)
     t_spec = shared2 if theta.ndim == 2 else tile3
     return pl.pallas_call(
         functools.partial(_broadcast_kernel, qmax=qmax),
@@ -300,7 +311,7 @@ def uplink_roundtrip_batched(theta, start, ef, noise, scale, *,
     or be a (N, R, C) per-client replica stack; scale: (N, R, 1)."""
     N, R, C = theta.shape
     grid, tile3, rowcol3, _, shared2 = _grid_specs3(
-        N, R, C, "uplink_roundtrip", blocks)
+        N, R, C, "uplink_roundtrip", blocks, dtype=theta.dtype)
     s_spec = shared2 if start.ndim == 2 else tile3
     return pl.pallas_call(
         functools.partial(_uplink_kernel, qmax=qmax),
@@ -326,8 +337,8 @@ def sign_roundtrip_batched(x, scale, *, interpret: bool = True,
     """`sign_roundtrip_flat` over an (N, R, C) stack in one launch;
     scale: (N,) per-client scales."""
     N, R, C = x.shape
-    grid, tile3, _, client3, _ = _grid_specs3(N, R, C,
-                                              "sign_roundtrip", blocks)
+    grid, tile3, _, client3, _ = _grid_specs3(
+        N, R, C, "sign_roundtrip", blocks, dtype=x.dtype)
     flags = jnp.asarray(scale, jnp.float32).reshape(N, 1, 1)
     return pl.pallas_call(
         _sign_kernel_batched,
@@ -351,8 +362,8 @@ def topk_threshold_batched(x, thr, *, interpret: bool = True,
     """`topk_threshold_flat` over an (N, R, C) stack in one launch;
     thr: (N,) per-client magnitude thresholds."""
     N, R, C = x.shape
-    grid, tile3, _, client3, _ = _grid_specs3(N, R, C,
-                                              "topk_threshold", blocks)
+    grid, tile3, _, client3, _ = _grid_specs3(
+        N, R, C, "topk_threshold", blocks, dtype=x.dtype)
     flags = jnp.asarray(thr, jnp.float32).reshape(N, 1, 1)
     return pl.pallas_call(
         _thresh_kernel_batched,

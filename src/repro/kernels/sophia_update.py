@@ -57,14 +57,16 @@ def _sophia_kernel(theta_ref, m_ref, h_ref, g_ref, hhat_ref, flags_ref,
 def sophia_update_flat(theta, m, h, g, h_hat, do_h, lr, *, beta1, beta2,
                        rho, eps, weight_decay, interpret: bool = True):
     """Fused update over a flat (R, C) view. Returns (theta, m, h),
-    each in its input's storage dtype (fp32 or bf16 resident state;
-    compute is fp32 in-kernel either way).
+    each in its input's storage dtype (fp32, bf16 or fp8 resident
+    state — m and h may each carry their own dtype via
+    `CommConfig.moment_dtype` / `hessian_dtype`; compute is fp32
+    in-kernel either way).
 
     interpret=True executes the kernel body in Python on CPU (this
     container); on a real TPU pass interpret=False.
     """
     R, C = theta.shape
-    br, bc = tuning.blocks_2d("sophia_update", R, C)
+    br, bc = tuning.blocks_2d("sophia_update", R, C, dtype=theta.dtype)
     grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
     flags = jnp.stack([jnp.asarray(do_h, jnp.float32).reshape(()),
                        jnp.asarray(lr, jnp.float32).reshape(())]
@@ -107,7 +109,7 @@ def sophia_update_batched(theta, m, h, g, h_hat, do_h, lr, *, beta1,
     override of the tuned geometry."""
     N, R, C = theta.shape
     bn, br, bc = tuning.blocks_for("sophia_update", N, R, C,
-                                   override=blocks)
+                                   override=blocks, dtype=theta.dtype)
     grid = (pl.cdiv(N, bn), pl.cdiv(R, br), pl.cdiv(C, bc))
     flags = jnp.stack([jnp.asarray(do_h, jnp.float32).reshape(()),
                        jnp.asarray(lr, jnp.float32).reshape(())]

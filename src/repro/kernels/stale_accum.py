@@ -62,8 +62,8 @@ def stale_accum_flat(wires, weights, inv_norm, *, interpret: bool = True,
                      blocks=None):
     """Fused weighted accumulate over K arrival wires.
 
-    wires: (K, R, C) packed deltas (fp32 or bf16 — loads upcast
-    in-kernel, so bf16 wires never materialize an fp32 copy in HBM);
+    wires: (K, R, C) packed deltas (fp32, bf16 or fp8 — loads upcast
+    in-kernel, so narrow wires never materialize an fp32 copy in HBM);
     weights: (K,) staleness weights; inv_norm: scalar final scale
     (traced).  Returns the (R, C) fp32 aggregate
     ``inv_norm * sum_k weights[k] * wires[k]``.  blocks: optional
@@ -82,7 +82,8 @@ def stale_accum_flat(wires, weights, inv_norm, *, interpret: bool = True,
                                        override=blocks)
     else:
         bk = 1
-        br, bc = tuning.blocks_2d("stale_accum", R, C)
+        br, bc = tuning.blocks_2d("stale_accum", R, C,
+                                  dtype=wires.dtype)
     # accumulation revisits the output tile across K-axis steps, so a
     # partial tail block would double-count padding: only block K when
     # it divides exactly

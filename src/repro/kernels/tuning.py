@@ -39,6 +39,22 @@ package)::
 ``block_n`` batches the client axis of the batched launches (and the
 K wire axis of ``stale_accum``); ``block_r``/``block_c`` tile the
 packed wire buffer.
+
+Entry keys carry optional specificity suffixes::
+
+    <kernel>                       the dtype-agnostic default
+    <kernel>@<dtype>               per-dtype geometry (operand dtype
+                                   name, e.g. "bfloat16",
+                                   "float8_e4m3fn")
+    <kernel>@<dtype>@n<chunk>      per-dtype AND per-client-chunk-size
+                                   geometry (the chunked large-C
+                                   dispatch of SchedConfig.dispatch_chunk)
+
+`blocks_for` resolves most-specific-first and falls back to the bare
+kernel key.  (Before the suffixed keys existed, lookups keyed on the
+kernel name alone, so mixed-dtype runs in one process reused whatever
+geometry was committed for fp32 — the per-dtype winners recorded by
+``tools/autotune_kernels.py --dtype`` were unreachable.)
 """
 from __future__ import annotations
 
@@ -46,6 +62,8 @@ import functools
 import json
 import os
 from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 #: safe fallback tile (the historical fixed BLOCK_R/BLOCK_C)
 DEFAULT_BLOCK_R = 256
@@ -87,17 +105,44 @@ def load_tuning(path: Optional[str] = None) -> Dict[str, Dict[str, int]]:
     return {k: v for k, v in entries.items() if _valid_entry(v)}
 
 
+def _dtype_name(dtype) -> Optional[str]:
+    """Canonical dtype-suffix name of a tuning key (None when no dtype
+    was supplied).  Goes through numpy — ml_dtypes registers the fp8
+    and bf16 formats with it, so this module stays jax-free."""
+    if dtype is None:
+        return None
+    return np.dtype(dtype).name
+
+
+def _lookup(kernel: str, dtype, n: int) -> Dict[str, int]:
+    """Most-specific-first entry resolution:
+    ``<kernel>@<dtype>@n<n>`` -> ``<kernel>@<dtype>`` -> ``<kernel>``.
+    Keying on the kernel name alone (the pre-suffix behaviour) made
+    mixed-dtype runs reuse one geometry for every dtype and chunk
+    size."""
+    table = load_tuning()
+    name = _dtype_name(dtype)
+    if name is not None:
+        for key in (f"{kernel}@{name}@n{int(n)}", f"{kernel}@{name}"):
+            if key in table:
+                return table[key]
+    return table.get(kernel, {})
+
+
 def blocks_for(kernel: str, n: int, r: int, c: int,
-               override: Optional[Tuple[int, int, int]] = None
-               ) -> Tuple[int, int, int]:
+               override: Optional[Tuple[int, int, int]] = None,
+               dtype=None) -> Tuple[int, int, int]:
     """Resolve the (bn, br, bc) block of a batched launch over an
     (n, r, c) stack: the explicit ``override`` (the autotuner's sweep
-    hook) wins, then the committed ``tuning.json`` entry, then the
-    safe defaults; always clamped to the operand dims."""
+    hook) wins, then the most specific committed ``tuning.json`` entry
+    for (``kernel``, ``dtype``, client count ``n``), then the safe
+    defaults; always clamped to the operand dims.  ``dtype`` is the
+    primary operand's storage dtype (the resident state the kernel
+    loads) — omit it to resolve the dtype-agnostic entry."""
     if override is not None:
         bn, br, bc = override
     else:
-        e = load_tuning().get(kernel, {})
+        e = _lookup(kernel, dtype, n)
         bn = e.get("block_n", DEFAULT_BLOCK_N)
         br = e.get("block_r", DEFAULT_BLOCK_R)
         bc = e.get("block_c", DEFAULT_BLOCK_C)
@@ -106,12 +151,13 @@ def blocks_for(kernel: str, n: int, r: int, c: int,
 
 
 def blocks_2d(kernel: str, r: int, c: int,
-              override: Optional[Tuple[int, int]] = None
-              ) -> Tuple[int, int]:
+              override: Optional[Tuple[int, int]] = None,
+              dtype=None) -> Tuple[int, int]:
     """(br, bc) for an unbatched (r, c) launch of ``kernel`` — the 2D
-    slice of the same tuning entry."""
+    slice of the same tuning entry (per-dtype when ``dtype`` is
+    given)."""
     if override is not None:
         br, bc = override
         return max(1, min(int(br), r)), max(1, min(int(bc), c))
-    _, br, bc = blocks_for(kernel, 1, r, c)
+    _, br, bc = blocks_for(kernel, 1, r, c, dtype=dtype)
     return br, bc

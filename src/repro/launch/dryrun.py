@@ -32,6 +32,59 @@ def _mem_dict(mem):
     return out
 
 
+def run_donation_check(arch: str, *, multi_pod: bool = False,
+                       local_iters: int = 2,
+                       out_dir: str = "", tag: str = "") -> dict:
+    """GSPMD donation-aliasing dryrun: lower+compile the PACKED-resident
+    train round on a simulated multi-host mesh with the state donated,
+    and verify the donation SURVIVES PARTITIONING — every per-device
+    shard of the resident (rows, cols) wire buffer and of the
+    (C, rows, cols) client stacks (Sophia m/h, EF, replicas) must be
+    aliased in place by XLA (state_copy_bytes == 0), the multi-host
+    analogue of the single-device residency gate in
+    `benchmarks.run.fig_engine`.  Reduced dims always: this is a
+    partitioning property, not a capacity test."""
+    import numpy as np
+    mesh = make_small_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "check": "donation-aliasing",
+           "mesh": "small" + ("2pod" if multi_pod else "1pod"),
+           "mesh_shape": {k: int(v) for k, v in mesh.shape.items()}}
+    try:
+        bundle = api.build_train(arch, mesh, reduced=True,
+                                 local_iters=local_iters,
+                                 packed_state=True)
+        with mesh:
+            jitted = jax.jit(bundle.fn,
+                             in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings,
+                             donate_argnums=(0,))
+            compiled = jitted.lower(*bundle.args).compile()
+            mem = _mem_dict(compiled.memory_analysis())
+        # per-device resident footprint: each state leaf's shard shape
+        # under its declared sharding (replicated leaves count whole)
+        state_leaves = jax.tree.leaves(bundle.args[0])
+        sh_leaves = jax.tree.leaves(bundle.in_shardings[0])
+        per_dev = sum(
+            int(np.prod(s.shard_shape(l.shape))) * l.dtype.itemsize
+            for l, s in zip(state_leaves, sh_leaves))
+        aliased = mem.get("alias_size_in_bytes", 0)
+        copy_b = max(0, per_dev - aliased)
+        rec.update(
+            status="ok" if copy_b == 0 else "error",
+            memory=mem,
+            resident_shard_bytes_per_dev=per_dev,
+            state_copy_bytes=copy_b)
+        if copy_b:
+            rec["error"] = (
+                f"donation lost under partitioning: {copy_b} of "
+                f"{per_dev} resident bytes/device not aliased in place")
+    except Exception as e:                            # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _save(rec, out_dir, arch, "donation", rec["mesh"], "fed_sophia", tag)
+    return rec
+
+
 def parse_overrides(s: str) -> dict:
     """'k=v,k2=v2' -> {k: v} (values stay strings; api coerces)."""
     out = {}
@@ -159,10 +212,32 @@ def main():
     ap.add_argument("--no-fsdp-gather", action="store_true",
                     help="§Perf baseline: skip the explicit FSDP gather "
                          "constraint in sequential-strategy training")
+    ap.add_argument("--check-donation", action="store_true",
+                    help="GSPMD donation-aliasing dryrun: compile the "
+                         "packed-resident train round with the state "
+                         "donated and assert every resident shard is "
+                         "aliased in place under partitioning")
     args = ap.parse_args()
     overrides = parse_overrides(args.overrides)
 
     archs = configs.ARCH_IDS if args.arch == "all" else [args.arch]
+    if args.check_donation:
+        failures = 0
+        for arch in archs:
+            rec = run_donation_check(arch, multi_pod=args.multi_pod,
+                                     local_iters=args.local_iters,
+                                     out_dir=args.out_dir, tag=args.tag)
+            status = rec["status"]
+            line = f"[{status:7s}] {arch:24s} donation {rec['mesh']}"
+            if status == "ok":
+                line += (f" resident/dev="
+                         f"{rec['resident_shard_bytes_per_dev']}B"
+                         f" state_copy_B={rec['state_copy_bytes']}")
+            else:
+                line += f" {rec['error'][:160]}"
+                failures += 1
+            print(line, flush=True)
+        raise SystemExit(1 if failures else 0)
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
     pods = [False, True] if args.both_meshes else [args.multi_pod]
     failures = 0

@@ -76,6 +76,18 @@ def main():
                          "(params between rounds, Sophia m/h, EF, "
                          "replicas); bfloat16 halves its HBM, compute "
                          "stays fp32")
+    ap.add_argument("--moment-dtype", default="",
+                    choices=("", "float32", "bfloat16",
+                             "float8_e4m3fn", "float8_e5m2"),
+                    help="per-buffer override of --state-dtype for the "
+                         "Sophia first-moment stack (e4m3: more "
+                         "mantissa; '' = follow --state-dtype)")
+    ap.add_argument("--hessian-dtype", default="",
+                    choices=("", "float32", "bfloat16",
+                             "float8_e4m3fn", "float8_e5m2"),
+                    help="per-buffer override of --state-dtype for the "
+                         "hessian-EMA stack (e5m2: more range; "
+                         "'' = follow --state-dtype)")
     ap.add_argument("--tree-state", action="store_true",
                     help="keep params as a pytree between rounds and "
                          "skip buffer donation (the pre-residency "
@@ -91,6 +103,10 @@ def main():
                          "(0 = all in-flight participants)")
     ap.add_argument("--staleness-power", type=float, default=0.5,
                     help="arrival weight (1+staleness)^-p")
+    ap.add_argument("--dispatch-chunk", type=int, default=0,
+                    help="run dispatch groups larger than this as a "
+                         "sequence of fixed-size chunks (one "
+                         "compilation; 0 = whole group at once)")
     ap.add_argument("--latency-profile", default="uniform",
                     choices=LATENCY_PROFILES,
                     help="per-client latency model of the virtual clock")
@@ -133,10 +149,13 @@ def main():
                       downlink_compressor=args.downlink_compressor,
                       hessian_compressor=args.hessian_compressor,
                       state_dtype=args.state_dtype,
+                      moment_dtype=args.moment_dtype,
+                      hessian_dtype=args.hessian_dtype,
                       use_pallas=args.comm_pallas)
     sched = SchedConfig(discipline=args.schedule,
                         buffer_size=args.buffer_size,
                         staleness_power=args.staleness_power,
+                        dispatch_chunk=args.dispatch_chunk,
                         latency_profile=args.latency_profile)
     fed = FedConfig(num_clients=args.clients, local_iters=args.local_iters,
                     optimizer=args.optimizer, lr=args.lr, tau=args.tau,
@@ -190,8 +209,12 @@ def main():
     # the checkpoint manifest and is validated on --resume
     rt = engine.runtime_for(state["params"])
     residency = "tree" if args.tree_state else "packed+donated"
+    dtypes = comm.state_dtype
+    if comm.moment_dtype or comm.hessian_dtype:
+        dtypes += (f" (m: {comm.moment_dtype or comm.state_dtype}, "
+                   f"h: {comm.hessian_dtype or comm.state_dtype})")
     print(f"flat-resident state layout: {rt.spec.rows}x{rt.spec.cols} "
-          f"{comm.state_dtype} ({rt.spec.total:,} coords + "
+          f"{dtypes} ({rt.spec.total:,} coords + "
           f"{rt.spec.padded - rt.spec.total} pad), "
           f"between-round residency: {residency}")
 

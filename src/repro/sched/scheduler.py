@@ -287,15 +287,24 @@ class VirtualScheduler:
     the params *pytree* — packed-resident state is unpacked at this
     boundary).
 
-    ``donate=True`` donates the state to the sync-round and apply
-    jits, so resident buffers update in place on donation-capable
-    backends.  Donation contract: the state passed to `run` is
-    consumed — its buffers are invalidated by the first aggregation;
-    callers keep only the returned state.  The default is undonated
-    (state survives `run`, e.g. for side-by-side comparisons).
+    ``donate=True`` donates end to end: the state to the sync-round
+    and apply jits (resident buffers update in place on
+    donation-capable backends), the dispatch group's batches to the
+    dispatch jit, and the stacked wire/stat/client-state-row buffers
+    of each aggregation to the apply jit — every buffer that is
+    consumed by its call is handed to XLA instead of being recopied
+    per group.  Donation contract: the state passed to `run` is
+    consumed — its buffers are invalidated by the first aggregation —
+    and ``batch_fn`` results are consumed by the dispatch that reads
+    them, so under ``donate=True`` ``batch_fn`` must return fresh
+    buffers per version (host/numpy pytrees are always safe: jit
+    re-commits them to device each call).  Callers keep only the
+    returned state.  The default is undonated (state and batches
+    survive `run`, e.g. for side-by-side comparisons).
     State residency follows the engine: tree- and packed-resident
     state (`FedEngine.pack_state`) both work, at any
-    `CommConfig.state_dtype`.
+    `CommConfig.state_dtype` (incl. per-buffer fp8 via
+    `moment_dtype`/`hessian_dtype`).
     """
 
     def __init__(self, engine, batch_fn: Callable[[int], Any],
@@ -336,11 +345,20 @@ class VirtualScheduler:
         self._stateful = (fed.optimizer == "fed_sophia"
                           and fed.persistent_client_state)
         self._round_fn = engine.round_fn(donate=donate)
-        # dispatch reads the state (its outputs are per-client rows,
-        # not a new state), so only the apply step can donate
-        self._dispatch_fn = jax.jit(self._dispatch_impl)
-        self._apply_fn = jax.jit(self._apply_impl,
-                                 donate_argnums=(0,) if donate else ())
+        self._donate = donate
+        # dispatch READS the state (its outputs are per-client rows,
+        # not a new state), so the state argument never donates there
+        # — but the dispatch group's batches are consumed by the call
+        # (the batch cache resets after a donating dispatch), and the
+        # apply step donates the state plus its stacked
+        # wire/stat/client-state-row buffers (freshly stacked per
+        # aggregation, never reused afterwards)
+        self._dispatch_fn = jax.jit(
+            self._dispatch_impl,
+            donate_argnums=(1,) if donate else ())
+        self._apply_fn = jax.jit(
+            self._apply_impl,
+            donate_argnums=(0, 1, 2, 5, 6, 7, 8) if donate else ())
         self._batch_cache: Tuple[int, Any] = (-1, None)
         # host-side span timers (docs/observability.md): every
         # dispatch/apply/round is timed and correlated with the
@@ -448,7 +466,7 @@ class VirtualScheduler:
         if self._stateful and opt_rows is not None:
             state = {**state, "client_opt": jax.tree.map(
                 lambda full, g: full.at[idx].set(g),
-                state["client_opt"], engine._store(opt_rows))}
+                state["client_opt"], engine._store_opt(opt_rows))}
         if ef_rows is not None:
             state = {**state, "comm_ef": state["comm_ef"].at[idx].set(
                 engine._store(ef_rows))}
@@ -611,6 +629,11 @@ class VirtualScheduler:
                  dnef_new, _h, _hs) = self._dispatch_fn(
                     state, self._batches(version), idx, rng_v,
                     jnp.asarray(version, jnp.int32))
+                if self._donate:
+                    # the dispatch consumed (donated) the cached
+                    # batches — drop the invalidated object so a
+                    # same-version lookup never resurrects it
+                    self._batch_cache = (-1, None)
 
                 def row(tree, pos):
                     return (None if tree is None

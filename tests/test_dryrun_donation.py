@@ -1,0 +1,27 @@
+"""GSPMD donation-aliasing dryrun (fast, tier-1): the packed-resident
+train round, compiled on a simulated 8-device mesh with the state
+donated, must alias every per-device resident shard in place —
+partitioning the (rows, cols) wire buffer and the (C, rows, cols)
+client stacks may not silently reintroduce a per-round state copy.
+Runs in a subprocess: the placeholder device count must be set before
+jax initializes."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=300):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+
+
+def test_donation_survives_partitioning():
+    r = _run(["--arch", "minicpm-2b", "--check-donation",
+              "--local-iters", "2", "--out-dir", ""])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "state_copy_B=0" in r.stdout, r.stdout + r.stderr

@@ -3,14 +3,16 @@
 Pins the tentpole contract of the batched Pallas launches: for every
 kernel in the `repro.kernels.KERNELS` registry, the ONE-launch batched
 entry point over a packed (C, rows, cols) client stack is **bitwise
-equal** to looping the per-client (rows, cols) launch — for both fp32
-and bf16 resident state (the in-VMEM upcast load path), at ragged
-sizes where no axis divides the block shape, under both the committed
-tuning geometry (blocks=None) and explicit overrides.
+equal** to looping the per-client (rows, cols) launch — for fp32,
+bf16 and both fp8 resident formats (e4m3/e5m2; the in-VMEM upcast
+load path), at ragged sizes where no axis divides the block shape,
+under both the committed tuning geometry (blocks=None) and explicit
+overrides.
 
 Against the pure-jnp oracles (`repro.kernels.ref`) the pins are
-allclose: exact for fp32, one-bf16-ulp for bf16 state (the store
-rounds once per output).
+allclose: exact for fp32, one-ulp-class for the narrow formats (the
+store rounds once per output, so the band is 2^-mantissa_bits: bf16
+2^-8, e4m3 2^-3, e5m2 2^-2).
 
 `stale_accum` is special-cased: its tuned path pins block_k=1 (the
 bitwise per-step add order); block_k > 1 folds several wires inside
@@ -40,7 +42,9 @@ from repro.kernels.sophia_update import (sophia_update_batched,
                                          sophia_update_flat)
 from repro.kernels.stale_accum import stale_accum_flat
 
-DTYPES = [jnp.float32, jnp.bfloat16]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn,
+          jnp.float8_e5m2]
+DTYPE_IDS = ["fp32", "bf16", "e4m3", "e5m2"]
 #: ragged base case: no axis of (3, 20, 100) divides (2, 8, 96)
 N, R, C = 3, 20, 100
 RAGGED = (2, 8, 96)
@@ -62,12 +66,19 @@ def _bitwise(a, b):
         np.testing.assert_array_equal(xa, ya)
 
 
+#: one-ulp-class band per storage format (2^-mantissa_bits): the
+#: narrow stores round each output once; fp32 runs the identical fp32
+#: ops, but the compiled batched graph may contract mul+add into FMAs
+#: where the oracle graph doesn't -> a few fp32 ulps absolute on
+#: near-zero residuals
+ULP_TOL = {jnp.dtype(jnp.bfloat16): 2 ** -8,
+           jnp.dtype(jnp.float8_e4m3fn): 2 ** -3,
+           jnp.dtype(jnp.float8_e5m2): 2 ** -2}
+
+
 def _close_to_ref(out, refd, dtype):
-    # bf16 stores round each output once -> one bf16 ulp (2^-8
-    # relative); fp32 runs the identical fp32 ops, but the compiled
-    # batched graph may contract mul+add into FMAs where the oracle
-    # graph doesn't -> a few fp32 ulps absolute on near-zero residuals
-    tol = (dict(rtol=2 ** -8, atol=2 ** -8) if dtype == jnp.bfloat16
+    band = ULP_TOL.get(jnp.dtype(dtype))
+    tol = (dict(rtol=band, atol=band) if band
            else dict(rtol=1e-6, atol=1e-6))
     for a, b in zip(_leaves(out), _leaves(refd)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
@@ -190,7 +201,7 @@ def _cases(dtype, n, r, c):
 CASE_NAMES = sorted(_cases(jnp.float32, 2, 4, 8))
 
 
-@pytest.mark.parametrize("dtype", DTYPES, ids=["fp32", "bf16"])
+@pytest.mark.parametrize("dtype", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("blocks", FAST_BLOCKS, ids=["tuned", "ragged"])
 @pytest.mark.parametrize("kernel", CASE_NAMES)
 def test_batched_bitwise_equals_looped(kernel, blocks, dtype):
@@ -200,7 +211,7 @@ def test_batched_bitwise_equals_looped(kernel, blocks, dtype):
     _bitwise(batched(blocks), looped())
 
 
-@pytest.mark.parametrize("dtype", DTYPES, ids=["fp32", "bf16"])
+@pytest.mark.parametrize("dtype", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("kernel", CASE_NAMES)
 def test_batched_matches_ref(kernel, dtype):
     """Batched launch vs the pure-jnp oracle: exact for fp32, one
@@ -209,7 +220,7 @@ def test_batched_matches_ref(kernel, dtype):
     _close_to_ref(batched(None), oracle(), dtype)
 
 
-@pytest.mark.parametrize("dtype", DTYPES, ids=["fp32", "bf16"])
+@pytest.mark.parametrize("dtype", DTYPES, ids=DTYPE_IDS)
 def test_stale_accum_conformance(dtype):
     """Tuned path (block_k pinned 1) is bitwise equal to any explicit
     (1, br, bc) geometry and allclose to the oracle; an indivisible
@@ -265,8 +276,39 @@ def test_tuning_fallback_and_clamp(tmp_path):
     assert (br, bc) == (10, 50)
 
 
+def test_tuning_dtype_chunk_key_precedence(monkeypatch):
+    """Suffixed tuning keys resolve most-specific-first —
+    ``<kernel>@<dtype>@n<chunk>`` over ``<kernel>@<dtype>`` over the
+    bare ``<kernel>`` fallback (which a dtype with no suffixed entry
+    also lands on)."""
+    from repro.kernels import tuning
+    table = {
+        "quant_roundtrip": {"block_n": 1, "block_r": 11, "block_c": 13},
+        "quant_roundtrip@bfloat16": {"block_n": 2, "block_r": 17,
+                                     "block_c": 19},
+        "quant_roundtrip@bfloat16@n3": {"block_n": 3, "block_r": 23,
+                                        "block_c": 29},
+    }
+    monkeypatch.setattr(tuning, "load_tuning", lambda path=None: table)
+    # chunk-size match wins
+    assert tuning.blocks_for("quant_roundtrip", 3, 100, 100,
+                             dtype=jnp.bfloat16) == (3, 23, 29)
+    # no @n4 entry -> the per-dtype key
+    assert tuning.blocks_for("quant_roundtrip", 4, 100, 100,
+                             dtype=jnp.bfloat16) == (2, 17, 19)
+    # un-suffixed dtype -> bare fallback
+    assert tuning.blocks_for("quant_roundtrip", 4, 100, 100,
+                             dtype=jnp.float8_e5m2) == (1, 11, 13)
+    # no dtype supplied -> bare fallback (the pre-suffix behaviour)
+    assert tuning.blocks_for("quant_roundtrip", 4, 100, 100) \
+        == (1, 11, 13)
+    # the 2D slice resolves per-dtype too
+    assert tuning.blocks_2d("quant_roundtrip", 100, 100,
+                            dtype=jnp.bfloat16) == (17, 19)
+
+
 @pytest.mark.slow
-@pytest.mark.parametrize("dtype", DTYPES, ids=["fp32", "bf16"])
+@pytest.mark.parametrize("dtype", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("blocks", [(1, 256, 1024), (2, 64, 256),
                                     (4, 100, 333)])
 @pytest.mark.parametrize("shape", [(4, 54, 1024), (5, 257, 1000)])

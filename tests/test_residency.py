@@ -1,5 +1,8 @@
 """Device-residency safety net: packed between-round params, buffer
-donation, bf16 resident state, and FSWB v1->v2 checkpoint compat.
+donation (incl. the scheduler's end-to-end dispatch donation), bf16
+and per-buffer fp8 resident state (`CommConfig.moment_dtype` /
+`hessian_dtype`), chunked large-group dispatch
+(`SchedConfig.dispatch_chunk`), and FSWB v1->v2 checkpoint compat.
 
 Three claims are pinned here (docs/architecture.md "Memory layout:
 the life of a round"):
@@ -132,6 +135,13 @@ BATCHED_STEP_MATRIX = [
     ("ef-topk", CommConfig(compressor="topk")),
     ("int8-pallas-bf16", CommConfig(compressor="int8", use_pallas=True,
                                     state_dtype="bfloat16")),
+    # per-buffer fp8 residency: bf16 params, e4m3 moments, e5m2
+    # hessian — gathered rows reach the kernels in their storage
+    # dtypes and upcast in-VMEM
+    ("int8-pallas-fp8", CommConfig(compressor="int8", use_pallas=True,
+                                   state_dtype="bfloat16",
+                                   moment_dtype="float8_e4m3fn",
+                                   hessian_dtype="float8_e5m2")),
 ]
 
 
@@ -222,10 +232,48 @@ def test_donated_scheduler_matches_undonated(task_data):
     batch_fn = lambda v: batches
     s1, t1 = VirtualScheduler(e, batch_fn).run(
         e.init(key), 3, jax.random.fold_in(key, 13))
-    s2, t2 = VirtualScheduler(e, batch_fn, donate=True).run(
+    # donate=True consumes batch_fn results (dispatch-side donation),
+    # so the donated run must hand over fresh copies per version
+    fresh_fn = lambda v: jax.tree.map(jnp.copy, batches)
+    s2, t2 = VirtualScheduler(e, fresh_fn, donate=True).run(
         e.pack_state(e.init(key)), 3, jax.random.fold_in(key, 13))
     assert [ev.loss for ev in t1.events] == [ev.loss for ev in t2.events]
     _assert_bitwise(s1["params"], e.unpack_params(s2))
+
+
+# --------------------------------------------- chunked large-C dispatch
+@pytest.mark.parametrize("chunk", [2, 3, 5],
+                         ids=["even", "ragged-tail", "over-group"])
+def test_chunked_dispatch_bitwise(task_data, chunk):
+    """`SchedConfig.dispatch_chunk` runs an N-client dispatch group as
+    a lax-driven sequence of fixed-size chunks through the batched
+    comm step — bitwise equal to the unchunked ONE-launch path, with
+    an even split, a ragged tail (N % chunk != 0), and a chunk larger
+    than the group (the unchunked fast path)."""
+    from repro.comm import downlink as cdown
+    from repro.configs.base import SchedConfig
+    task, batches, key = task_data
+    comm = CommConfig(compressor="int8")
+    base = _engine(task, comm)
+    chunked = _engine(task, comm, sched=SchedConfig(dispatch_chunk=chunk))
+    state = base.pack_state(base.init(key))
+    params = state["params"]
+    rt = base.runtime_for(params)
+    theta = params.astype(jnp.float32)
+    theta_dn = (cflat.repack(theta, rt.spec, rt.spec_dn)
+                if rt.dn_on else None)
+    round_idx = jnp.asarray(0, jnp.int32)
+    rng = jax.random.fold_in(key, 31)
+    crngs = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(4))
+    args = (theta, theta_dn, round_idx, 0.02,
+            state.get("client_opt"), state.get("comm_ef"),
+            state.get(cdown.MODEL_KEY), state.get(cdown.EF_KEY),
+            batches, crngs)
+    flat = jax.jit(
+        lambda *a: base.comm_client_step_batched(rt, *a))(*args)
+    split = jax.jit(
+        lambda *a: chunked.comm_client_step_batched(rt, *a))(*args)
+    _assert_bitwise(flat, split, f"chunk={chunk}")
 
 
 # ------------------------------------------------------ bf16 resident state
@@ -323,6 +371,45 @@ def test_bf16_round_tolerance_and_dtypes(task_data):
     assert np.isfinite(float(m["loss"]))
 
 
+# ------------------------------------------------- fp8 resident state
+def test_fp8_round_tolerance_and_dtypes(task_data):
+    """One round with per-buffer fp8 residency (bf16 params, e4m3
+    moments, e5m2 hessian) stays in the neighbourhood of its fp32
+    twin, the per-buffer dtypes survive the round's scatter-back
+    downcast, and donated rounds stay finite.  The band is wider than
+    bf16's: the fp8 m/h enter the next round through the Sophia
+    preconditioner, but the clipped step (|step| <= rho) bounds how
+    far one round can drift."""
+    task, batches, key = task_data
+    rng = jax.random.fold_in(key, 16)
+    e32 = _engine(task, CommConfig(compressor="int8"))
+    e8 = _engine(task, CommConfig(compressor="int8",
+                                  state_dtype="bfloat16",
+                                  moment_dtype="float8_e4m3fn",
+                                  hessian_dtype="float8_e5m2"))
+    s32, m32 = jax.jit(e32.round)(e32.pack_state(e32.init(key)),
+                                  batches, rng)
+    s8, m8 = jax.jit(e8.round)(e8.pack_state(e8.init(key)),
+                               batches, rng)
+    assert s8["params"].dtype == jnp.bfloat16
+    assert s8["client_opt"].m.dtype == jnp.float8_e4m3fn
+    assert s8["client_opt"].h.dtype == jnp.float8_e5m2
+    # params start bf16-rounded and move by lr-scaled clipped steps;
+    # the fp8 EMAs only perturb the step direction
+    np.testing.assert_allclose(
+        np.asarray(s8["params"], np.float32), np.asarray(s32["params"]),
+        rtol=1e-1, atol=1e-1)
+    np.testing.assert_allclose(float(m8["loss"]), float(m32["loss"]),
+                               rtol=1e-1)
+    # multi-round stability under donation: dtypes hold, losses finite
+    s, fn = s8, e8.round_fn(donate=True)
+    for r in range(3):
+        s, m = fn(s, batches, jax.random.fold_in(rng, r))
+    assert s["client_opt"].m.dtype == jnp.float8_e4m3fn
+    assert s["client_opt"].h.dtype == jnp.float8_e5m2
+    assert np.isfinite(float(m["loss"]))
+
+
 # ------------------------------------------- FSWB v2 header + v1 compat
 def test_header_v2_roundtrip_and_v1_decode():
     h = cflat.Header(compressor="int8", total=1000, quant_block=128,
@@ -353,6 +440,28 @@ def test_header_v2_roundtrip_and_v1_decode():
     raw = bytearray(h.pack())
     raw[4] = 9
     with pytest.raises(ValueError, match="version"):
+        cflat.Header.unpack(bytes(raw))
+    # fp8 flags-byte ids (2 = e4m3, 3 = e5m2) round-trip under v2
+    for dt in ("float8_e4m3fn", "float8_e5m2"):
+        h8 = cflat.Header(compressor="int8", total=1000, quant_block=128,
+                          state_dtype=dt)
+        got8 = cflat.Header.unpack(h8.pack())
+        assert got8 == h8 and got8.state_dtype == dt
+    # v1 cannot carry an fp8 state dtype either
+    with pytest.raises(ValueError, match="v1"):
+        cflat.Header(compressor="int8", total=1, quant_block=1,
+                     version=1, state_dtype="float8_e5m2").pack()
+    # a raw v1 payload whose flags byte claims an fp8 id is corrupt
+    # (v1 builds never wrote one) — rejected, not decoded
+    for flags in (0x02, 0x03):
+        raw = bytearray(v1.pack())
+        raw[7] = flags
+        with pytest.raises(ValueError, match="reserved"):
+            cflat.Header.unpack(bytes(raw))
+    # v2 low-nibble ids beyond the registry rejected
+    raw = bytearray(h.pack())
+    raw[7] = (raw[7] & 0xF0) | 0x04
+    with pytest.raises(ValueError, match="state-dtype"):
         cflat.Header.unpack(bytes(raw))
 
 

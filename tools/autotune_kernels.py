@@ -4,33 +4,45 @@
 Sweep mode (default)::
 
     PYTHONPATH=src python tools/autotune_kernels.py
+    PYTHONPATH=src python tools/autotune_kernels.py --dtype bfloat16
 
 times every kernel in `repro.kernels.KERNELS` at the committed
 benchmark sizes (the `benchmarks.run` engine workload: a 4-client
 cohort over the packed (54, 1024) wire buffer) across a small grid of
-candidate (block_n, block_r, block_c) launch geometries, and writes
-the per-kernel winners to ``src/repro/kernels/tuning.json`` — the
-table `repro.kernels.tuning` consults at trace time.  Block shape
-never changes kernel values (every entry point is elementwise per
-coordinate), only launch geometry, so re-tuning is always safe.
+candidate (block_n, block_r, block_c) launch geometries, and merges
+the per-kernel winners into ``src/repro/kernels/tuning.json`` — the
+table `repro.kernels.tuning` consults at trace time.  Without
+``--dtype`` the sweep runs fp32 inputs and writes the bare
+``<kernel>`` keys; with ``--dtype`` the resident-state inputs
+(theta/m/h/wires) are cast to that storage dtype and the winners land
+under ``<kernel>@<dtype>`` keys — the narrow-dtype geometries the
+lookup in `repro.kernels.tuning` prefers (most specific first:
+``<kernel>@<dtype>@n<chunk>``, then ``<kernel>@<dtype>``, then
+``<kernel>``).  Sweeps MERGE: re-tuning one dtype never drops the
+others' keys.  Block shape never changes kernel values (every entry
+point is elementwise per coordinate), only launch geometry, so
+re-tuning is always safe.
 
 Check mode (CI: `make autotune-check`)::
 
     PYTHONPATH=src python tools/autotune_kernels.py --check
 
 validates the COMMITTED table: it must parse, carry ``version: 1``,
-its keys must equal the `repro.kernels.KERNELS` registry exactly, and
-every entry's block fields must be ints >= 1.  Then every kernel is
-compiled and run on CPU (interpret mode) at a deliberately ragged
-size with its committed blocks, and the result asserted bitwise equal
-to the safe-default geometry — a committed entry that fails to
-compile, or that somehow changed values, is a CI error.  Exits
-nonzero on any failure.
+every key must be ``<kernel>[@<dtype>][@n<chunk>]`` with ``<kernel>``
+in the `repro.kernels.KERNELS` registry (every registered kernel must
+own a bare fallback key; ``<dtype>`` must be a known storage dtype),
+and every entry's block fields must be ints >= 1.  Then every entry
+is compiled and run on CPU (interpret mode) at a deliberately ragged
+size with its committed blocks — at the entry's own dtype — and the
+result asserted bitwise equal to the safe-default geometry at that
+dtype: a committed entry that fails to compile, or that somehow
+changed values, is a CI error.  Exits nonzero on any failure.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 import time
 
@@ -55,25 +67,39 @@ CHECK_N, CHECK_R, CHECK_C = 3, 20, 100
 
 QMAX = 127
 
+#: the storage dtypes a `--dtype` sweep (or a suffixed tuning key) may
+#: name — the resident-state formats of `repro.comm.flat`
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float8_e4m3fn": jnp.float8_e4m3fn,
+          "float8_e5m2": jnp.float8_e5m2}
+#: tuning keys are `<kernel>[@<dtype>][@n<chunk>]`
+KEY_RE = re.compile(
+    r"^(?P<base>\w+?)(?:@(?P<dtype>[a-z][a-z0-9_]*))?(?:@n(?P<n>\d+))?$")
+
 
 def _flatten(tree):
     return jax.tree.leaves(tree)
 
 
-def make_runners(N: int, R: int, C: int):
+def make_runners(N: int, R: int, C: int, dtype=None):
     """kernel name -> fn(blocks3) running that kernel's client-batched
     launch on fixed deterministic inputs, returning the output leaves
     (blocked until ready).  ``blocks3`` is the (bn, br, bc) override
-    handed to the kernel; None runs the tuned/default path."""
+    handed to the kernel; None runs the tuned/default path.  ``dtype``
+    casts the resident-state inputs (theta/m/h/replica/EF/wire
+    streams) to that storage format — the kernels upcast loads
+    in-VMEM, exactly the narrow-resident engine path; gradient/noise/
+    scale inputs stay fp32 as in the engine."""
     ks = jax.random.split(jax.random.PRNGKey(0), 8)
-    x = jax.random.normal(ks[0], (N, R, C), jnp.float32)
-    y = jax.random.normal(ks[1], (N, R, C), jnp.float32)
-    z = jax.random.normal(ks[2], (N, R, C), jnp.float32)
+    st = dtype or jnp.float32
+    x = jax.random.normal(ks[0], (N, R, C), jnp.float32).astype(st)
+    y = jax.random.normal(ks[1], (N, R, C), jnp.float32).astype(st)
+    z = jax.random.normal(ks[2], (N, R, C), jnp.float32).astype(st)
     g = jax.random.normal(ks[3], (N, R, C), jnp.float32)
     noise = jax.random.uniform(ks[4], (N, R, C), jnp.float32)
     scale = 0.1 + jax.random.uniform(ks[5], (N, R, 1), jnp.float32)
-    theta2 = jax.random.normal(ks[6], (R, C), jnp.float32)
-    wires = jax.random.normal(ks[7], (N, R, C), jnp.float32)
+    theta2 = jax.random.normal(ks[6], (R, C), jnp.float32).astype(st)
+    wires = jax.random.normal(ks[7], (N, R, C), jnp.float32).astype(st)
     weights = jnp.linspace(0.5, 1.0, N)
     cscale = jnp.linspace(0.9, 1.1, N)
 
@@ -130,8 +156,10 @@ def time_blocks(runner, blocks, repeats: int) -> float:
     return best
 
 
-def sweep(out_path: str, repeats: int) -> int:
-    runners = make_runners(SWEEP_N, SWEEP_R, SWEEP_C)
+def sweep(out_path: str, repeats: int, dtype_name: str = "") -> int:
+    dt = DTYPES[dtype_name] if dtype_name else None
+    suffix = f"@{dtype_name}" if dtype_name else ""
+    runners = make_runners(SWEEP_N, SWEEP_R, SWEEP_C, dtype=dt)
     entries = {}
     for kernel in KERNELS:
         runner = runners[kernel]
@@ -139,19 +167,29 @@ def sweep(out_path: str, repeats: int) -> int:
         for blocks in candidates(SWEEP_N):
             us = time_blocks(runner, blocks, repeats) * 1e6
             results.append((us, blocks))
-            print(f"  {kernel:>20s}  bn={blocks[0]:<2d} "
+            print(f"  {kernel + suffix:>32s}  bn={blocks[0]:<2d} "
                   f"br={blocks[1]:<4d} bc={blocks[2]:<4d} "
                   f"{us:10.1f} us")
         best_us, (bn, br, bc) = min(results)
         if kernel == "stale_accum":
             bn = 1                      # tuned path never blocks K
-        entries[kernel] = {"block_n": bn, "block_r": br, "block_c": bc}
-        print(f"  {kernel:>20s}  -> bn={bn} br={br} bc={bc} "
+        entries[kernel + suffix] = {"block_n": bn, "block_r": br,
+                                    "block_c": bc}
+        print(f"  {kernel + suffix:>32s}  -> bn={bn} br={br} bc={bc} "
               f"({best_us:.1f} us)\n")
+    # merge into the committed table: a sweep only owns the keys it
+    # timed (one dtype's worth), the other dtypes' entries survive
+    existing = {}
+    try:
+        with open(out_path) as f:
+            existing = json.load(f).get("entries", {})
+    except (OSError, ValueError):
+        pass
+    existing.update(entries)
     table = {"version": 1,
              "backend": ("cpu-interpret" if INTERPRET
                          else jax.default_backend()),
-             "entries": {k: entries[k] for k in sorted(entries)}}
+             "entries": {k: existing[k] for k in sorted(existing)}}
     with open(out_path, "w") as f:
         json.dump(table, f, indent=2, sort_keys=False)
         f.write("\n")
@@ -173,11 +211,24 @@ def check(path: str) -> int:
     if not isinstance(entries, dict):
         print(f"autotune-check: {path} has no 'entries' dict")
         return 1
-    got, want = set(entries), set(KERNELS)
-    for k in sorted(want - got):
-        errors.append(f"kernel `{k}` has no tuning entry")
-    for k in sorted(got - want):
-        errors.append(f"entry `{k}` is not a registered kernel")
+    # every key must parse as <kernel>[@<dtype>][@n<chunk>]; every
+    # registered kernel must keep its bare fallback entry
+    parsed = {}
+    for k in sorted(entries):
+        m = KEY_RE.match(k)
+        if not m or m.group("base") not in KERNELS:
+            errors.append(f"entry `{k}` does not name a registered "
+                          f"kernel (format: <kernel>[@<dtype>]"
+                          f"[@n<chunk>])")
+            continue
+        if m.group("dtype") and m.group("dtype") not in DTYPES:
+            errors.append(f"entry `{k}`: unknown dtype "
+                          f"`{m.group('dtype')}` (want one of "
+                          f"{sorted(DTYPES)})")
+            continue
+        parsed[k] = m
+    for k in sorted(set(KERNELS) - set(entries)):
+        errors.append(f"kernel `{k}` has no bare tuning entry")
     for k, e in sorted(entries.items()):
         for field in ("block_n", "block_r", "block_c"):
             v = e.get(field) if isinstance(e, dict) else None
@@ -189,33 +240,39 @@ def check(path: str) -> int:
             print(f"  {e}")
         return 1
 
-    # compile + run every kernel at a ragged size with the committed
-    # blocks, and pin bitwise equality vs the safe-default geometry
-    runners = make_runners(CHECK_N, CHECK_R, CHECK_C)
+    # compile + run every entry at a ragged size with the committed
+    # blocks — at the entry's own dtype — and pin bitwise equality vs
+    # the safe-default geometry at that dtype
+    runners_at = {None: make_runners(CHECK_N, CHECK_R, CHECK_C)}
     default = (tuning.DEFAULT_BLOCK_N, tuning.DEFAULT_BLOCK_R,
                tuning.DEFAULT_BLOCK_C)
-    for kernel in KERNELS:
-        e = entries[kernel]
+    for key, m in sorted(parsed.items()):
+        kernel, dname = m.group("base"), m.group("dtype")
+        if dname not in runners_at:
+            runners_at[dname] = make_runners(
+                CHECK_N, CHECK_R, CHECK_C, dtype=DTYPES[dname])
+        runners = runners_at[dname]
+        e = entries[key]
         blocks = (e["block_n"], e["block_r"], e["block_c"])
         try:
             tuned = runners[kernel](blocks)
             base = runners[kernel](default)
         except Exception as exc:   # noqa: BLE001 - report, don't crash
-            errors.append(f"{kernel}: blocks={blocks} failed to "
+            errors.append(f"{key}: blocks={blocks} failed to "
                           f"compile/run: {exc}")
             continue
         for t, b in zip(tuned, base):
             if not np.array_equal(np.asarray(t), np.asarray(b)):
-                errors.append(f"{kernel}: blocks={blocks} changed "
+                errors.append(f"{key}: blocks={blocks} changed "
                               f"values vs default geometry")
                 break
-        print(f"  {kernel:>20s}  blocks={blocks} ok")
+        print(f"  {key:>32s}  blocks={blocks} ok")
     if errors:
         print(f"autotune-check: {len(errors)} kernel failure(s)")
         for e in errors:
             print(f"  {e}")
         return 1
-    print(f"autotune-check: {path} ok ({len(KERNELS)} kernels)")
+    print(f"autotune-check: {path} ok ({len(parsed)} entries)")
     return 0
 
 
@@ -229,10 +286,14 @@ def main() -> int:
                          "src/repro/kernels/tuning.json)")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repeats per candidate (sweep mode)")
+    ap.add_argument("--dtype", default="", choices=[""] + sorted(DTYPES),
+                    help="sweep with resident-state inputs in this "
+                         "storage dtype and record the winners under "
+                         "<kernel>@<dtype> keys (sweep mode)")
     args = ap.parse_args()
     if args.check:
         return check(args.out)
-    return sweep(args.out, args.repeats)
+    return sweep(args.out, args.repeats, args.dtype)
 
 
 if __name__ == "__main__":

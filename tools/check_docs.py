@@ -243,13 +243,25 @@ def check_record_table(errors) -> None:
                       f"`{name}` is not a registered record type")
 
 
+#: tuning keys are `<kernel>[@<dtype>][@n<chunk>]`
+#: (`repro.kernels.tuning` — most specific first at lookup)
+TUNING_KEY_RE = re.compile(
+    r"^(?P<base>\w+?)(?:@(?P<dtype>[a-z][a-z0-9_]*))?(?:@n(?P<n>\d+))?$")
+#: the storage dtypes a suffixed tuning key may name (mirrors
+#: tools/autotune_kernels.py DTYPES — no package import here)
+TUNING_DTYPES = {"float32", "bfloat16", "float8_e4m3fn", "float8_e5m2"}
+
+
 def check_tuning_table(errors) -> None:
     """The committed kernel tuning table (src/repro/kernels/
-    tuning.json) must parse and its entry keys must EQUAL the KERNELS
-    registry (regex-parsed from the kernels package __init__) — a
-    renamed kernel whose tuning entry survives, or a kernel missing
-    from the table, is a CI error.  Compile-level validation lives in
-    `make autotune-check`; this is the no-import text check."""
+    tuning.json) must parse and every entry key must be
+    ``<kernel>[@<dtype>][@n<chunk>]`` with ``<kernel>`` in the KERNELS
+    registry (regex-parsed from the kernels package __init__) and
+    ``<dtype>`` a known storage format; every registered kernel must
+    keep its bare fallback key — a renamed kernel whose tuning entry
+    survives, or a kernel missing from the table, is a CI error.
+    Compile-level validation lives in `make autotune-check`; this is
+    the no-import text check."""
     import json
     m = KERNELS_RE.search(KERNELS_SOURCE.read_text())
     registered = set(re.findall(r'"(\w+)"', m.group(1))) if m else set()
@@ -272,10 +284,19 @@ def check_tuning_table(errors) -> None:
         return
     for name in sorted(registered - set(entries)):
         errors.append(f"src/repro/kernels/tuning.json: kernel `{name}` "
-                      f"has no tuning entry — run `make autotune`")
-    for name in sorted(set(entries) - registered):
-        errors.append(f"src/repro/kernels/tuning.json: entry `{name}` "
-                      f"is not in the repro.kernels.KERNELS registry")
+                      f"has no bare tuning entry — run `make autotune`")
+    for key in sorted(entries):
+        km = TUNING_KEY_RE.match(key)
+        if not km or km.group("base") not in registered:
+            errors.append(
+                f"src/repro/kernels/tuning.json: entry `{key}` is not "
+                f"in the repro.kernels.KERNELS registry (keys are "
+                f"<kernel>[@<dtype>][@n<chunk>])")
+        elif km.group("dtype") and km.group("dtype") not in TUNING_DTYPES:
+            errors.append(
+                f"src/repro/kernels/tuning.json: entry `{key}` names "
+                f"unknown dtype `{km.group('dtype')}` (want one of "
+                f"{sorted(TUNING_DTYPES)})")
 
 
 def main() -> int:
