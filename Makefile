@@ -3,10 +3,17 @@
 # like a hard import of an optional dependency are caught in minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke bench-records-check example-comm docs-check docs-gen obs-smoke obs-trace-smoke autotune autotune-check
+.PHONY: test-fast test-robust test-slow test-all collect bench-comm bench-sched-smoke bench-engine-smoke bench-robust-smoke bench-records-check example-comm docs-check docs-gen obs-smoke obs-trace-smoke autotune autotune-check
 
 test-fast:
 	$(PY) -m pytest -q
+
+# the adversarial-fleet harness on its own: degeneracy pins (robust
+# aggregation bitwise-identical to the mean path when degenerate,
+# across disciplines and comm regimes), kernel-vs-ref conformance,
+# attack geometry and the non-IID partitioner statistics
+test-robust:
+	$(PY) -m pytest -q tests/test_robust.py tests/test_data.py
 
 # fail if README.md / docs/ / benchmarks/README.md reference flags,
 # modules, paths or make targets that no longer exist, or if the
@@ -55,6 +62,12 @@ bench-sched-smoke:
 bench-engine-smoke:
 	$(PY) -m benchmarks.run --only engine --smoke --out ""
 
+# CI-sized adversarial-fleet regime: non-IID partitions + byzantine
+# sign-flip vs robust aggregation, tiny budgets (same code path as the
+# full `--only robust` run behind experiments/bench_robust.json)
+bench-robust-smoke:
+	$(PY) -m benchmarks.run --only robust --smoke --out ""
+
 # CI gate on the obs pipeline: a 2-round scheduled run with Sophia
 # health probes writing schema-validated JSONL, then re-validate every
 # record (manifest header, field sets, exact-int64 byte counters)
@@ -86,6 +99,7 @@ obs-trace-smoke:
 bench-records-check:
 	python tools/obs_report.py experiments/bench_comm.json --validate
 	python tools/obs_report.py experiments/bench_sched.json --validate
+	python tools/obs_report.py experiments/bench_robust.json --validate
 	python tools/obs_report.py BENCH_engine.json --validate
 
 example-comm:

@@ -8,10 +8,13 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm import accounting as comm_accounting
-from repro.configs.base import CommConfig, FedConfig, SchedConfig
+from repro.configs.base import (CommConfig, FedConfig, RobustConfig,
+                                SchedConfig)
 from repro.core.fed import FedEngine
+from repro.data import partition as dpart
 from repro.data import synthetic as syn
 from repro.models.small import CNNTask, MLPTask
 from repro.sched import SchedTrace, VirtualScheduler
@@ -163,6 +166,79 @@ def run_scheduled(model: str, dataset: str, optimizer: str, *,
     return SchedRunResult(trace=trace,
                           final_eval_loss=trace.events[-1].eval_loss,
                           seconds_per_event=dt)
+
+
+@dataclass
+class RobustRunResult:
+    losses: List[float]            # train loss per round
+    eval_losses: List[float]       # held-out eval loss per round
+    total_bytes_per_round: int     # all streams, exact accounting
+    seconds_per_round: float
+
+    def bytes_to_loss(self, target: float) -> Optional[int]:
+        """Cumulative wire bytes at the first round whose eval loss
+        reached ``target`` (None if the run never got there)."""
+        for r, ls in enumerate(self.eval_losses):
+            if ls <= target:
+                return (r + 1) * self.total_bytes_per_round
+        return None
+
+
+def run_robust(model: str, dataset: str, optimizer: str, *,
+               robust: RobustConfig, alpha: float, clients: int = 8,
+               rounds: int = 30, local_iters: int = 10,
+               lr: Optional[float] = None, tau: int = 5,
+               batch: int = 64, seed: int = 0,
+               comm: Optional[CommConfig] = None) -> RobustRunResult:
+    """One synchronous adversarial-fleet run (docs/robustness.md):
+    Dirichlet(alpha) label-skewed clients (`repro.data.partition`,
+    equalized to the engine's fixed (C, n_per) matrix), byzantine /
+    label-noise faults and robust aggregation from ``robust``, eval
+    loss on a held-out split every round."""
+    key = jax.random.PRNGKey(seed)
+    x, y = syn.make_image_data(key, N_SAMPLES, dataset,
+                               noise=NOISE[dataset])
+    ragged = dpart.dirichlet_label_partition(np.asarray(y), clients,
+                                             alpha, seed)
+    part = dpart.equalize(ragged, N_SAMPLES // clients, seed)
+    tr, te = syn.train_test_split(part)
+    task = make_task(model)
+    fed = dataclasses.replace(
+        make_fed(optimizer, clients=clients, local_iters=local_iters,
+                 lr=lr if lr is not None else DEFAULT_LR[optimizer],
+                 tau=tau, rounds=rounds, comm=comm),
+        robust=robust)
+    engine = FedEngine(task, fed)
+    state = engine.init(jax.random.fold_in(key, 2))
+    round_fn = jax.jit(engine.round)
+    teb = syn.client_batches(jax.random.fold_in(key, 3), x, y, te, 128)
+    eval_fn = jax.jit(lambda p: jnp.mean(jax.vmap(
+        lambda b: task.loss(p, b, None))(teb)))
+    wire = comm_accounting.round_bytes(fed.comm, num_params(model),
+                                       clients)
+    noisy = None
+    if robust.label_noise_fraction > 0.0:
+        from repro.robust import attacks as robust_attacks
+        noisy = robust_attacks.label_noise_mask(robust, clients)
+
+    losses, eval_losses = [], []
+    t0 = time.time()
+    for r in range(rounds):
+        batches = syn.client_batches(jax.random.fold_in(key, 100 + r),
+                                     x, y, tr, batch)
+        if noisy is not None and noisy.any():
+            from repro.robust import attacks as robust_attacks
+            batches = dict(batches, y=jnp.asarray(
+                robust_attacks.corrupt_labels(robust, batches["y"],
+                                              noisy, syn.NUM_CLASSES)))
+        state, metrics = round_fn(state, batches,
+                                  jax.random.fold_in(key, 1000 + r))
+        losses.append(float(metrics["loss"]))
+        eval_losses.append(float(eval_fn(state["params"])))
+    dt = (time.time() - t0) / max(rounds, 1)
+    return RobustRunResult(losses=losses, eval_losses=eval_losses,
+                           total_bytes_per_round=wire["total_bytes"],
+                           seconds_per_round=dt)
 
 
 def flops_per_local_iter(model: str, batch: int = 64) -> float:

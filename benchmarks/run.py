@@ -31,6 +31,8 @@ BENCH_ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 #: records (manifest first), regenerated through the recorder
 BENCH_COMM_JSON = os.path.join(ROOT, "experiments", "bench_comm.json")
 BENCH_SCHED_JSON = os.path.join(ROOT, "experiments", "bench_sched.json")
+BENCH_ROBUST_JSON = os.path.join(ROOT, "experiments",
+                                 "bench_robust.json")
 
 
 def _row(name: str, us: float, derived: str):
@@ -350,6 +352,89 @@ def fig_sched(paper_scale: bool, out: dict, smoke: bool = False):
                          write=not smoke)
 
 
+# ------------------------------------------------------ adversarial fleet
+def fig_robust(paper_scale: bool, out: dict, smoke: bool = False):
+    """Bytes-to-target under an adversarial fleet (docs/robustness.md):
+    IID vs Dirichlet(0.1) label skew, 0% vs 20% sign-flip byzantine,
+    mean vs trimmed-mean vs coordinate-median aggregation, MLP on the
+    MNIST-synthetic task.
+
+    The benign run on the SAME Dirichlet(0.1) partition fixes the
+    target: its eval loss 20% through the round budget.  Headline:
+    under 20% sign-flip byzantine clients, plain mean never recovers
+    that benign-skew trajectory within the full budget while trimmed
+    mean and coordinate median do — ``bytes_to_target`` prices the
+    defence.  ``--smoke`` shrinks the budgets (same code path, no
+    acceptance claim)."""
+    from repro.configs.base import RobustConfig
+    clients = 32 if paper_scale else 8
+    rounds = 3 if smoke else 24
+    byz = dict(attack="sign_flip", attack_fraction=0.2)
+    iid, dir01 = 100.0, 0.1
+    regimes = [
+        ("iid/clean/mean", iid, RobustConfig()),
+        ("dir01/clean/mean", dir01, RobustConfig()),
+        ("dir01/byz20/mean", dir01, RobustConfig(**byz)),
+        ("dir01/byz20/trimmed_mean", dir01,
+         RobustConfig(aggregator="trimmed_mean", trim_fraction=0.25,
+                      **byz)),
+        ("dir01/byz20/coordinate_median", dir01,
+         RobustConfig(aggregator="coordinate_median", **byz)),
+        ("iid/byz20/trimmed_mean", iid,
+         RobustConfig(aggregator="trimmed_mean", trim_fraction=0.25,
+                      **byz)),
+    ]
+    target = None
+    recs = []
+    results = []
+    for name, alpha, robust in regimes:
+        results.append((name, common.run_robust(
+            "mlp", "mnist", "fed_sophia", robust=robust, alpha=alpha,
+            clients=clients, rounds=rounds, local_iters=5)))
+        if name == "dir01/clean/mean":
+            # the benign run on the same skewed partition fixes the
+            # bar: its eval loss 20% through the budget — robustness
+            # means recovering the benign-skew trajectory under attack
+            target = float(results[-1][1].eval_losses[
+                min(rounds - 1, int(0.2 * rounds))])
+    for name, res in results:
+        b_target = res.bytes_to_loss(target)
+        full = f"robust/mlp/mnist/{name}"
+        _row(full, res.seconds_per_round * 1e6,
+             f"target_loss={target:.4f}"
+             f";bytes_to_target={b_target}"
+             f";final_eval_loss={res.eval_losses[-1]:.4f}")
+        out[full] = {
+            "target_loss": target,
+            "bytes_to_target": b_target,
+            "eval_losses": res.eval_losses,
+            "final_eval_loss": res.eval_losses[-1],
+            "total_bytes_per_round": res.total_bytes_per_round,
+        }
+        recs.append(_opt(
+            {"record": "bench", "name": full,
+             "target_loss": float(target),
+             "total_bytes": int(res.total_bytes_per_round),
+             "event_eval_losses": [float(v) for v in res.eval_losses],
+             "event_cum_bytes": [
+                 (r + 1) * int(res.total_bytes_per_round)
+                 for r in range(len(res.eval_losses))]},
+            bytes_to_target=None if b_target is None else int(b_target)))
+    if not smoke:
+        # the headline ordering the committed rows must show: robust
+        # aggregation recovers under attack, plain mean does not
+        reached = {n: out[f"robust/mlp/mnist/{n}"]["bytes_to_target"]
+                   for n, _, _ in regimes}
+        assert reached["dir01/byz20/mean"] is None, \
+            "plain mean reached the target under 20% sign-flip"
+        for n in ("dir01/byz20/trimmed_mean",
+                  "dir01/byz20/coordinate_median"):
+            assert reached[n] is not None, \
+                f"{n} failed to reach the target under attack"
+    _write_bench_records(BENCH_ROBUST_JSON, recs, "robust",
+                         write=not smoke)
+
+
 # ----------------------------------------------------- engine micro-bench
 #: jaxpr primitives that implement layout conversion between the pytree
 #: and the packed (rows, cols) wire buffer: pack = concatenate (+pad),
@@ -505,6 +590,11 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
         # layout-op count and donation contract of its probes-off twin
         "packed-donated-probes-pallas": (
             CommConfig(use_pallas=True), True, True, True, True, True),
+        # robustness layer present but DEGENERATE (trimmed_mean at trim
+        # 0 resolves to "mean" — docs/robustness.md): must keep the
+        # layout-op count and donation contract of its robust-off twin
+        "packed-donated-robustoff-pallas": (
+            CommConfig(use_pallas=True), True, True, True, True, False),
         # fp8 residency frontier: bf16 params + e4m3 moments + e5m2
         # hessian EMA (per-buffer resident dtypes) — the (C, rows,
         # cols) Sophia stacks dominate resident state, so quartering
@@ -536,6 +626,10 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
                               lr=0.02, tau=2, rounds=16, comm=comm)
         fed = dataclasses.replace(fed, use_pallas=use_pallas,
                                   obs=ObsConfig(probes=probes))
+        if "robustoff" in name:
+            from repro.configs.base import RobustConfig
+            fed = dataclasses.replace(fed, robust=RobustConfig(
+                aggregator="trimmed_mean", trim_fraction=0.0))
         engine = FedEngine(task, fed)
         state = engine.init(_jax.random.fold_in(key, 4))
         if packed:
@@ -645,6 +739,17 @@ def fig_engine(paper_scale: bool, out: dict, smoke: bool = False):
             f"packed-donated-probes-pallas: layout_ops "
             f"{probed['layout_ops']} != probes-off twin "
             f"{twin['layout_ops']} (probes must stay layout-neutral)")
+    # robust-off gate: a degenerate RobustConfig must leave the traced
+    # round untouched — same layout-op count as the twin without the
+    # robustness layer (the donation gate above already pins its
+    # state_copy_bytes == 0)
+    robustoff = results.get("packed-donated-robustoff-pallas")
+    if robustoff and twin and robustoff["layout_ops"] != twin["layout_ops"]:
+        regressions.append(
+            f"packed-donated-robustoff-pallas: layout_ops "
+            f"{robustoff['layout_ops']} != robust-off twin "
+            f"{twin['layout_ops']} (degenerate robust parameterizations "
+            f"must keep the mean path's traced graph)")
     # bf16 residency gate: the bf16 regime must roughly halve the
     # resident-state HBM of its fp32 twin
     bf16 = results.get("packed-donated-bf16-pallas")
@@ -754,18 +859,19 @@ ALL = {
     "comm": fig_comm_bytes,
     "sched": fig_sched,
     "engine": fig_engine,
+    "robust": fig_robust,
 }
 
 #: regimes that understand --smoke (tiny budgets / no timing, same
 #: code path)
-SMOKE_AWARE = ("sched", "engine")
+SMOKE_AWARE = ("sched", "engine", "robust")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="fig2|fig3|table1|table2|comm|sched|engine|"
-                         "kernel|all")
+                         "robust|kernel|all")
     ap.add_argument("--paper", action="store_true",
                     help="paper scale: 32 clients (slow on CPU)")
     ap.add_argument("--smoke", action="store_true",

@@ -4,8 +4,8 @@ from __future__ import annotations
 import importlib
 
 from repro.configs.base import (FedConfig, INPUT_SHAPES, MLAConfig,
-                                ModelConfig, MoEConfig, RunConfig,
-                                ShapeConfig)
+                                ModelConfig, MoEConfig, RobustConfig,
+                                RunConfig, ShapeConfig)
 
 ARCH_IDS = [
     "qwen3-moe-235b-a22b",

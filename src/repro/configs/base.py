@@ -312,6 +312,65 @@ class SchedConfig:
     dispatch_chunk: int = 0           # 0 -> unchunked
 
 
+#: Robust server-side aggregators (repro.robust). "mean" is today's
+#: weighted-mean path, byte-for-byte; the others are pluggable
+#: replacements for the combination step over the (K, rows, cols)
+#: arrival stack (see docs/robustness.md).
+AGGREGATORS = ("mean", "trimmed_mean", "coordinate_median", "norm_clip")
+
+#: Byzantine wire attacks of the fault-injection layer (repro.robust).
+#: Each transforms a malicious client's packed uplink buffer after
+#: encoding, preserving wire geometry and headers.
+ATTACKS = ("none", "sign_flip", "scale", "random_wire")
+
+
+@dataclass(frozen=True)
+class RobustConfig:
+    """Adversarial-fleet knobs (repro.robust).
+
+    Three orthogonal groups:
+
+    * **aggregation** — ``aggregator`` picks the server-side combiner
+      for client contributions (``AGGREGATORS``). ``trimmed_mean``
+      drops the ``trim_fraction`` per-coordinate extremes on each side
+      before the weighted mean; ``coordinate_median`` is the maximal
+      trim (mid-K survivors); ``norm_clip`` rescales each arrival to
+      L2 norm at most ``clip_norm`` before the weighted mean.
+    * **byzantine faults** — ``attack`` applied to the packed wire
+      buffer of the ``attack_fraction`` lowest-indexed malicious
+      clients (deterministic per ``seed``), plus label-noise clients.
+    * **fleet churn** — dropout/rejoin events on the virtual clock:
+      each dispatch drops with ``dropout_prob`` and rejoins (delivers
+      late) after ``rejoin_delay_s`` virtual seconds.
+
+    The default is degenerate by construction: ``aggregator="mean"``
+    with no adversaries routes through today's weighted-mean path
+    untouched (bitwise), as do ``trimmed_mean`` at trim 0 and
+    ``norm_clip`` at clip 0 (see docs/robustness.md).
+    """
+    aggregator: str = "mean"          # mean | trimmed_mean | coordinate_median | norm_clip
+    trim_fraction: float = 0.0        # per-side per-coordinate trim (trimmed_mean)
+    clip_norm: float = 0.0            # max L2 norm per arrival (norm_clip; 0 = off)
+    # ---- byzantine fault injection ------------------------------------
+    attack: str = "none"              # none | sign_flip | scale | random_wire
+    attack_fraction: float = 0.0      # fraction of clients byzantine
+    attack_scale: float = 10.0        # multiplier for the "scale" attack
+    label_noise_fraction: float = 0.0 # fraction of clients with noisy labels
+    label_noise_rate: float = 0.5     # P(label resampled) for noisy clients
+    # ---- dropout / rejoin on the virtual clock ------------------------
+    dropout_prob: float = 0.0         # per-dispatch client dropout probability
+    rejoin_delay_s: float = 0.0       # extra virtual seconds before a dropped
+    #                                   client's update is delivered
+    seed: int = 0                     # fault-injection salt
+
+    @property
+    def adversarial(self) -> bool:
+        """Any fault injection active (attacks, label noise or churn)."""
+        return ((self.attack != "none" and self.attack_fraction > 0.0)
+                or self.label_noise_fraction > 0.0
+                or self.dropout_prob > 0.0)
+
+
 @dataclass(frozen=True)
 class ObsConfig:
     """Structured telemetry (repro.obs).
@@ -383,6 +442,10 @@ class FedConfig:
     # — see repro.obs and docs/observability.md; the default is fully
     # off (no probe ops in the traced round)
     obs: ObsConfig = field(default_factory=ObsConfig)
+    # adversarial fleet: robust aggregation, byzantine fault injection
+    # and client churn — see repro.robust and docs/robustness.md; the
+    # default is degenerate (today's weighted-mean path, bitwise)
+    robust: RobustConfig = field(default_factory=RobustConfig)
 
 
 @dataclass(frozen=True)

@@ -99,11 +99,14 @@ from repro.comm import accounting, downlink as cdown, flat as cflat
 from repro.comm.compressors import (make_compressor, make_stream_compressor,
                                     participation_indices,
                                     wants_error_feedback)
-from repro.configs.base import FedConfig
+from repro.configs.base import AGGREGATORS, ATTACKS, FedConfig
 from repro.core import sophia
 from repro.core.gnb import gnb_estimate
+from repro.kernels import INTERPRET as _INTERPRET
 from repro.obs import probes as obs_probes
 from repro.core.schedules import lr_at_round
+from repro.robust import aggregators as robust_agg
+from repro.robust import attacks as robust_attacks
 from repro.utils.tree import (tree_count_params, tree_sq_norm,
                               tree_zeros_like)
 
@@ -156,6 +159,23 @@ class FedEngine:
                 "ObsConfig.probes reads the persistent Sophia m/h EMAs: "
                 "it requires optimizer='fed_sophia' with "
                 "persistent_client_state=True")
+        rb = fed.robust
+        if rb.aggregator not in AGGREGATORS:
+            raise ValueError(
+                f"unknown aggregator {rb.aggregator!r} (want one of "
+                f"{AGGREGATORS})")
+        if rb.attack not in ATTACKS:
+            raise ValueError(
+                f"unknown attack {rb.attack!r} (want one of {ATTACKS})")
+        if not 0.0 <= rb.trim_fraction < 0.5:
+            raise ValueError(
+                f"trim_fraction={rb.trim_fraction} must be in [0, 0.5) "
+                "(trimming both sides must leave a survivor)")
+        for name in ("attack_fraction", "label_noise_fraction",
+                     "label_noise_rate", "dropout_prob"):
+            v = getattr(rb, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} must be in [0, 1]")
         # FSDP (sequential strategy): params are STORED sharded over the
         # data axes; each use must see them model-only-sharded, otherwise
         # GSPMD resolves the data-axis contraction by replicating the
@@ -983,13 +1003,33 @@ class FedEngine:
                  else cflat.pack(params, spec))
         opts = state.get("client_opt") if stateful else None
 
+        # adversarial fleet (repro.robust): both knobs are static
+        # config — when off, neither branch below enters the traced
+        # graph and the round is bitwise the historical mean path
+        rb = fed.robust
+        attack_on = robust_attacks.wire_attack_active(rb, C)
+        robust_on = robust_agg.resolve(rb, C) != "mean"
+        adversarial = attack_on or robust_on
+
         if fed.strategy == "parallel":
             # the whole cohort steps through the batched flat loop —
             # one kernel launch per local iteration over (C, rows,
             # cols) stacks
             new_t, new_opt, losses = self._local_update_flat_batched(
                 spec, theta, opts, batches, client_rngs, round_idx, lr)
-            agg_flat = jnp.mean(new_t, axis=0)
+            if not adversarial:
+                agg_flat = jnp.mean(new_t, axis=0)
+        elif adversarial:
+            # robust/attacked sequential: the scan stacks each
+            # client's params (same memory as the parallel stack —
+            # trimming needs the whole cohort at once)
+            def scan_collect(_, xs):
+                opt, batch, crng = xs
+                t_i, opt_i, loss = self._local_update_flat(
+                    spec, theta, opt, batch, crng, round_idx, lr)
+                return 0, (t_i, opt_i, loss)
+            _, (new_t, new_opt, losses) = jax.lax.scan(
+                scan_collect, 0, (opts, batches, client_rngs))
         else:
             def scan_body(acc, xs):
                 opt, batch, crng = xs
@@ -999,6 +1039,22 @@ class FedEngine:
             agg_flat, (new_opt, losses) = jax.lax.scan(
                 scan_body, jnp.zeros_like(theta),
                 (opts, batches, client_rngs))
+
+        if adversarial:
+            # the direct path carries whole client models; attacks and
+            # robust combination are defined on the *contribution
+            # delta* vs the round-start model — equivalent to the wire
+            # transforms of the comm path on an uncompressed uplink
+            deltas = new_t - theta
+            if attack_on:
+                deltas = robust_attacks.attack_wires(
+                    rb, deltas,
+                    jnp.asarray(robust_attacks.byzantine_mask(rb, C)),
+                    client_rngs[0])
+            agg_flat = theta + robust_agg.aggregate_stack(
+                rb, deltas, jnp.ones((C,), jnp.float32),
+                normalize=True, use_pallas=fed.comm.use_pallas,
+                interpret=_INTERPRET)
 
         if packed:
             state = self._apply_aggregate_flat(state, agg_flat)
@@ -1063,12 +1119,34 @@ class FedEngine:
         client = functools.partial(self.comm_client_step, rt, theta,
                                    theta_dn, round_idx, lr)
 
+        # adversarial fleet (repro.robust): static config — when off,
+        # the attack/robust branches never enter the traced graph and
+        # the aggregation below is the historical weighted-mean path.
+        # Attacks transform the packed uplink wire buffer only; the
+        # downlink-replica correction and hessian streams keep their
+        # participation means (docs/robustness.md).
+        rb = fed.robust
+        attack_on = robust_attacks.wire_attack_active(rb, C)
+        robust_on = robust_agg.resolve(rb, S) != "mean"
+
+        def combine_wires(wires):
+            if attack_on:
+                byz = jnp.asarray(robust_attacks.byzantine_mask(rb, C))
+                wires = robust_attacks.attack_wires(rb, wires, byz[idx],
+                                                    rng)
+            if robust_on:
+                return robust_agg.aggregate_stack(
+                    rb, wires, jnp.ones((S,), jnp.float32),
+                    normalize=True, use_pallas=comm.use_pallas,
+                    interpret=_INTERPRET)
+            return jnp.sum(wires, axis=0) / S
+
         if fed.strategy == "parallel":
             (wires, stats, ef_new_g, opt_new_g, losses, dnm_new_g,
              dnef_new_g, h_hat_g, h_stat_g) = self.comm_client_step_batched(
                 rt, theta, theta_dn, round_idx, lr,
                 opts_g, ef_g, dnm_g, dnef_g, batches_g, rngs_g)
-            agg_flat = jnp.sum(wires, axis=0) / S
+            agg_flat = combine_wires(wires)
             wstat = jnp.sum(stats) / S
             if dn_on:
                 dn_mean = jnp.sum(dnm_new_g, axis=0) / S
@@ -1076,30 +1154,39 @@ class FedEngine:
                 h_agg = jnp.sum(h_hat_g, axis=0) / S
                 h_wstat = jnp.sum(h_stat_g) / S
         else:
+            collect = attack_on or robust_on
+
             def scan_body(acc, xs):
                 opt, ef_i, dnm_i, dnef_i, batch, crng = xs
                 (wire, stat, ef_i_new, opt_i, loss, dnm_new, dnef_new,
                  h_hat, h_stat) = client(opt, ef_i, dnm_i, dnef_i,
                                          batch, crng)
-                acc = {**acc, "w": acc["w"] + wire / S,
-                       "s": acc["s"] + stat / S}
+                # robust/attacked runs stack the wires (trimming needs
+                # the whole cohort) instead of accumulating the mean
+                if not collect:
+                    acc = {**acc, "w": acc["w"] + wire / S}
+                acc = {**acc, "s": acc["s"] + stat / S}
                 if dn_on:
                     acc = {**acc, "dn": acc["dn"] + dnm_new / S}
                 if h_on:
                     acc = {**acc, "h": acc["h"] + h_hat / S,
                            "hs": acc["hs"] + h_stat / S}
-                return acc, (ef_i_new, opt_i, loss, dnm_new, dnef_new)
-            acc0 = {"w": cflat.zeros(spec), "s": jnp.zeros((), jnp.float32)}
+                ys = (ef_i_new, opt_i, loss, dnm_new, dnef_new)
+                return acc, (ys + (wire,)) if collect else ys
+            acc0 = {"s": jnp.zeros((), jnp.float32)}
+            if not collect:
+                acc0["w"] = cflat.zeros(spec)
             if dn_on:
                 acc0["dn"] = cflat.zeros(rt.spec_dn)
             if h_on:
                 acc0["h"] = cflat.zeros(rt.spec_h)
                 acc0["hs"] = jnp.zeros((), jnp.float32)
-            acc, (ef_new_g, opt_new_g, losses, dnm_new_g, dnef_new_g) = \
-                jax.lax.scan(scan_body, acc0,
-                             (opts_g, ef_g, dnm_g, dnef_g,
-                              batches_g, rngs_g))
-            agg_flat, wstat = acc["w"], acc["s"]
+            acc, ys = jax.lax.scan(scan_body, acc0,
+                                   (opts_g, ef_g, dnm_g, dnef_g,
+                                    batches_g, rngs_g))
+            (ef_new_g, opt_new_g, losses, dnm_new_g, dnef_new_g) = ys[:5]
+            agg_flat = combine_wires(ys[5]) if collect else acc["w"]
+            wstat = acc["s"]
             if dn_on:
                 dn_mean = acc["dn"]
             if h_on:

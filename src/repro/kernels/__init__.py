@@ -13,6 +13,8 @@ pytree<->flat conversion (gated by ``make bench-engine-smoke``):
   (delta-code + EF + stochastic quant + residual in one VMEM pass).
 * `stale_accum.stale_accum_flat` — the scheduler's staleness-weighted
   buffered aggregation.
+* `robust_agg.robust_agg_flat` — the sort-free trimmed-mean/clip
+  robust combine of `repro.robust` over the (K, rows, cols) stack.
 * `ref` — pure-jnp oracles with identical per-coordinate semantics
   (the equivalence targets in tests/test_kernels.py).
 
@@ -61,4 +63,5 @@ KERNELS = (
     "topk_threshold",
     "sophia_update",
     "stale_accum",
+    "robust_agg",
 )

@@ -85,3 +85,34 @@ def stale_accum_ref(wires, weights, inv_norm):
     w = jnp.asarray(weights, jnp.float32)[:, None, None]
     return jnp.asarray(inv_norm, jnp.float32) * jnp.sum(
         _f32(wires) * w, axis=0)
+
+
+def robust_agg_ref(wires, weights, scales, *, trim, normalize=True):
+    """Reference for kernels.robust_agg.robust_agg_flat: sort-free
+    trimmed/clipped weighted combine of K arrival wires (fp32 out).
+
+    Per coordinate, ``trim`` extremes per side are removed one
+    occurrence at a time (lowest arrival index wins ties — argmax
+    semantics, identical to the kernel); survivors are combined as
+    ``sum_k w_k * scales_k * x_k`` over the surviving k, divided by
+    the surviving weight when ``normalize``.
+    """
+    import jax
+    x = _f32(wires)
+    K = x.shape[0]
+    xs = jnp.asarray(scales, jnp.float32)[:, None, None] * x
+    mask = jnp.ones(xs.shape, jnp.bool_)
+    if trim:
+        iota = jax.lax.broadcasted_iota(jnp.int32, xs.shape, 0)
+        big = jnp.float32(jnp.finfo(jnp.float32).max)
+        for sign in (1.0, -1.0):
+            for _ in range(trim):
+                cand = jnp.where(mask, jnp.float32(sign) * xs, -big)
+                hit = jnp.argmax(cand, axis=0)
+                mask = mask & (iota != hit[None])
+    wm = jnp.where(mask, jnp.asarray(weights, jnp.float32)[:, None, None],
+                   jnp.float32(0.0))
+    num = jnp.sum(xs * wm, axis=0)
+    if normalize:
+        num = num / jnp.sum(wm, axis=0)
+    return num

@@ -19,13 +19,15 @@ from repro import configs, obs
 from repro.checkpoint import ckpt
 from repro.comm import round_bytes
 from repro.comm import flat as cflat
-from repro.configs.base import (LATENCY_PROFILES, SCHED_DISCIPLINES,
-                                CommConfig, FedConfig, ObsConfig,
-                                SchedConfig)
+from repro.configs.base import (AGGREGATORS, ATTACKS, LATENCY_PROFILES,
+                                SCHED_DISCIPLINES, CommConfig, FedConfig,
+                                ObsConfig, RobustConfig, SchedConfig)
 from repro.core.fed import FedEngine
 from repro.data import synthetic as syn
 from repro.metrics import energy
 from repro.models import transformer as T
+from repro.robust import aggregators as robust_agg
+from repro.robust import attacks as robust_attacks
 from repro.sched import VirtualScheduler
 
 
@@ -110,6 +112,35 @@ def main():
     ap.add_argument("--latency-profile", default="uniform",
                     choices=LATENCY_PROFILES,
                     help="per-client latency model of the virtual clock")
+    # adversarial fleet (repro.robust; docs/robustness.md)
+    ap.add_argument("--aggregator", default="mean", choices=AGGREGATORS,
+                    help="server-side combiner of client contributions "
+                         "(degenerate parameterizations keep the mean "
+                         "path bitwise)")
+    ap.add_argument("--trim-fraction", type=float, default=0.0,
+                    help="trimmed_mean: per-coordinate per-side trim "
+                         "fraction of the arrival stack")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="norm_clip: max L2 norm per arrival (0 = off)")
+    ap.add_argument("--attack", default="none", choices=ATTACKS,
+                    help="byzantine wire attack applied to malicious "
+                         "clients' packed uplink buffers")
+    ap.add_argument("--attack-fraction", type=float, default=0.0,
+                    help="fraction of clients byzantine")
+    ap.add_argument("--attack-scale", type=float, default=10.0,
+                    help="multiplier of the 'scale' attack")
+    ap.add_argument("--label-noise-fraction", type=float, default=0.0,
+                    help="fraction of clients training on corrupted "
+                         "labels")
+    ap.add_argument("--label-noise-rate", type=float, default=0.5,
+                    help="per-sample corruption probability on "
+                         "label-noise clients")
+    ap.add_argument("--dropout-prob", type=float, default=0.0,
+                    help="per-dispatch client dropout probability on "
+                         "the virtual clock (scheduler disciplines)")
+    ap.add_argument("--rejoin-delay-s", type=float, default=0.0,
+                    help="extra virtual seconds before a dropped "
+                         "client's update is delivered")
     # structured telemetry (repro.obs; docs/observability.md)
     ap.add_argument("--probes", action="store_true",
                     help="device-side Sophia health probes in the round "
@@ -157,11 +188,22 @@ def main():
                         staleness_power=args.staleness_power,
                         dispatch_chunk=args.dispatch_chunk,
                         latency_profile=args.latency_profile)
+    robust = RobustConfig(aggregator=args.aggregator,
+                          trim_fraction=args.trim_fraction,
+                          clip_norm=args.clip_norm,
+                          attack=args.attack,
+                          attack_fraction=args.attack_fraction,
+                          attack_scale=args.attack_scale,
+                          label_noise_fraction=args.label_noise_fraction,
+                          label_noise_rate=args.label_noise_rate,
+                          dropout_prob=args.dropout_prob,
+                          rejoin_delay_s=args.rejoin_delay_s,
+                          seed=args.seed)
     fed = FedConfig(num_clients=args.clients, local_iters=args.local_iters,
                     optimizer=args.optimizer, lr=args.lr, tau=args.tau,
                     total_rounds=args.rounds, use_pallas=args.use_pallas,
                     schedule=over.get("schedule", "const"), comm=comm,
-                    sched=sched,
+                    sched=sched, robust=robust,
                     obs=ObsConfig(probes=args.probes, trace=args.trace,
                                   flush_every=args.obs_flush_every))
     task = T.LMTask(cfg)
@@ -199,6 +241,20 @@ def main():
           f" downlink={comm.downlink_compressor}"
           f" hessian={comm.hessian_compressor}"
           f" participation={comm.participation:g}")
+    # effective robust path of a full sync cohort (degenerate
+    # parameterizations resolve to "mean" — today's path, bitwise)
+    eff_agg = robust_agg.resolve(robust, wire["participants"])
+    attack_on = robust_attacks.wire_attack_active(robust,
+                                                 fed.num_clients)
+    if eff_agg != "mean" or robust.adversarial:
+        byz = [int(i) for i in
+               robust_attacks.byzantine_mask(
+                   robust, fed.num_clients).nonzero()[0]]
+        print(f"adversarial fleet: aggregator={eff_agg} "
+              f"attack={robust.attack if attack_on else 'none'} "
+              f"byzantine={byz} "
+              f"label_noise={robust.label_noise_fraction:g} "
+              f"dropout={robust.dropout_prob:g}")
     print("per-round wire bytes: "
           + " ".join(f"{k}={wire[k]:,}" for k in
                      ("uplink_bytes", "downlink_bytes",
@@ -241,12 +297,23 @@ def main():
                   "compressor": comm.compressor,
                   "schedule": args.schedule, "probes": fed.obs.probes,
                   "trace": fed.obs.trace, "residency": residency,
-                  "state_dtype": comm.state_dtype})
+                  "state_dtype": comm.state_dtype,
+                  "aggregator": robust.aggregator,
+                  "attack": robust.attack})
+
+    noisy = robust_attacks.label_noise_mask(robust, fed.num_clients)
 
     def make_batches(r):
         kb = jax.random.fold_in(key, 1000 + r)
         batches = syn.make_token_batch(kb, fed.num_clients, args.batch,
                                        args.seq, cfg.vocab_size)
+        if noisy.any():
+            # label-noise clients train on corrupted targets; the
+            # corruption runs at data-build time (host numpy), so the
+            # jitted round is untouched
+            batches = dict(batches, labels=jnp.asarray(
+                robust_attacks.corrupt_labels(robust, batches["labels"],
+                                              noisy, cfg.vocab_size)))
         if cfg.embedding_inputs:
             ke = jax.random.fold_in(kb, 1)
             batches = {"embeds": jax.random.normal(
@@ -279,6 +346,12 @@ def main():
         for k in obs.PROBE_METRICS:
             if k in row:
                 rec[k] = row[k]
+        # robust context rides along only when the run departs from
+        # the default mean/no-attack path (schema: optional fields)
+        if eff_agg != "mean":
+            rec["aggregator"] = eff_agg
+        if attack_on:
+            rec["attack"] = robust.attack
         recorder.emit(rec)
 
     with obs.profile_trace(args.profile_dir):

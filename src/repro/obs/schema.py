@@ -141,6 +141,19 @@ METRICS: Dict[str, Metric] = _registry(
            "per-arrival aggregation weights (1+staleness)^-p"),
     Metric("discipline", "str", "",
            "scheduler discipline: sync | semisync | async"),
+    # ---- adversarial fleet (repro.robust): emitted only when the
+    # ---- run departs from the default mean/no-attack path
+    Metric("aggregator", "str", "",
+           "effective robust aggregator of the event: mean | "
+           "trimmed_mean | coordinate_median | norm_clip"),
+    Metric("attack", "str", "",
+           "active byzantine wire attack: sign_flip | scale | "
+           "random_wire"),
+    Metric("byzantine_clients", "list[int]", "",
+           "ids of the event's participants marked byzantine"),
+    Metric("dropped_clients", "list[int]", "",
+           "ids of the event's participants that dropped out and "
+           "rejoined (delayed arrivals)"),
     Metric("events", "int64", "count", "aggregation events in the run"),
     Metric("final_time_s", "float64", "s",
            "virtual clock at the last event"),
@@ -240,7 +253,8 @@ RECORDS: Dict[str, RecordType] = {
                   "hessian_uplink_bytes", "hessian_downlink_bytes",
                   "total_bytes", "cum_total_bytes", "energy_J",
                   "carbon_kg"),
-        optional=("eval_loss", "wall_s", "comm_J", "compute_J")
+        optional=("eval_loss", "wall_s", "comm_J", "compute_J",
+                  "aggregator", "attack")
         + _PROBE_FIELDS),
     # one virtual-clock aggregation event (repro.sched.SchedEvent)
     "sched_event": RecordType(
@@ -248,7 +262,9 @@ RECORDS: Dict[str, RecordType] = {
                   "staleness", "weights", "loss", "cum_uplink_bytes",
                   "cum_downlink_bytes", "cum_hessian_uplink_bytes",
                   "cum_hessian_downlink_bytes", "cum_total_bytes"),
-        optional=("eval_loss", "energy_J", "carbon_kg", "trace_ids")
+        optional=("eval_loss", "energy_J", "carbon_kg", "trace_ids",
+                  "aggregator", "attack", "byzantine_clients",
+                  "dropped_clients")
         + _PROBE_FIELDS),
     # one scheduler dispatch: trace context for the compute ->
     # transfer -> arrival -> apply chain (repro.sched.SchedDispatch)

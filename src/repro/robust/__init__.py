@@ -1,0 +1,33 @@
+"""Adversarial fleet: byzantine fault injection + robust aggregation.
+
+Two orthogonal layers over the packed wire substrate (`repro.comm.flat`):
+
+* `attacks` — the fault-injection model.  A deterministic subset of
+  clients (``RobustConfig.attack_fraction`` of the fleet, chosen per
+  ``RobustConfig.seed``) is *byzantine*: their packed uplink wire
+  buffers are transformed after encoding (sign-flip, scaled-gradient,
+  random-wire — the ``ATTACKS`` registry in `repro.configs.base`).
+  A second deterministic subset trains on noisy labels, and the
+  virtual-clock scheduler (`repro.sched`) injects dropout/rejoin
+  events that delay deliveries by ``rejoin_delay_s`` virtual seconds.
+* `aggregators` — pluggable robust server-side combination of the
+  (K, rows, cols) arrival stack (the ``AGGREGATORS`` registry):
+  ``trimmed_mean`` drops per-coordinate extremes sort-free,
+  ``coordinate_median`` is its maximal trim, ``norm_clip`` rescales
+  each arrival to a bounded L2 norm.  The Pallas fast path is
+  `repro.kernels.robust_agg`; the jnp oracle is
+  `repro.kernels.ref.robust_agg_ref`.
+
+Degeneracy contract (docs/robustness.md, pinned by
+tests/test_robust.py): ``aggregator="mean"``, ``trimmed_mean`` at
+trim count 0 and ``norm_clip`` at clip 0 all *resolve* to the
+untouched weighted-mean path — same traced graph, bitwise-identical
+round outputs — and with ``attack="none"`` no attack op enters the
+graph at all.
+"""
+from repro.configs.base import AGGREGATORS, ATTACKS, RobustConfig  # noqa: F401
+from repro.robust.aggregators import (aggregate_stack, clip_scales,  # noqa: F401
+                                      resolve, trim_count)
+from repro.robust.attacks import (attack_wires, byzantine_mask,  # noqa: F401
+                                  corrupt_labels, label_noise_mask,
+                                  wire_attack_active)

@@ -1,0 +1,121 @@
+"""Byzantine fault injection over the packed wire substrate.
+
+Membership is *deterministic config arithmetic*: the byzantine and
+label-noise subsets are drawn host-side from ``RobustConfig.seed``
+(independent streams), so a run replays bit-for-bit and tests can
+recompute the masks.  The masks are static numpy constants folded
+into the jitted round/dispatch — with ``attack="none"`` (or an empty
+mask) callers skip `attack_wires` entirely and the traced graph is
+unchanged.
+
+Wire attacks transform a malicious client's *encoded uplink buffer*
+(the packed (rows, cols) fp32 payload the server would decode), never
+its local training: geometry, dtype and headers are preserved
+(pinned by tests/test_property.py).  In the engine's direct path the
+same transforms apply in delta space (contribution minus the round-
+start model) — equivalent semantics on an uncompressed wire.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTACKS
+
+#: fold_in salt separating the random-wire attack stream from every
+#: other per-round consumer of the round rng
+ATTACK_SALT = 0xB12A
+
+
+def _subset_mask(seed_stream, fraction: float,
+                 num_clients: int) -> np.ndarray:
+    n = int(round(fraction * num_clients))
+    n = max(0, min(num_clients, n))
+    mask = np.zeros(num_clients, dtype=bool)
+    if n:
+        rng = np.random.default_rng(seed_stream)
+        mask[rng.permutation(num_clients)[:n]] = True
+    return mask
+
+
+def byzantine_mask(robust, num_clients: int) -> np.ndarray:
+    """(C,) bool: which clients mount the configured wire attack.
+    Deterministic per ``robust.seed``; all-False when disabled."""
+    if robust.attack not in ATTACKS:
+        raise ValueError(
+            f"unknown attack {robust.attack!r} (want one of {ATTACKS})")
+    if robust.attack == "none":
+        return np.zeros(num_clients, dtype=bool)
+    return _subset_mask([robust.seed, 0], robust.attack_fraction,
+                        num_clients)
+
+
+def label_noise_mask(robust, num_clients: int) -> np.ndarray:
+    """(C,) bool: which clients train on noisy labels (independent of
+    the byzantine subset; deterministic per ``robust.seed``)."""
+    return _subset_mask([robust.seed, 1], robust.label_noise_fraction,
+                        num_clients)
+
+
+def wire_attack_active(robust, num_clients: int) -> bool:
+    """True iff `attack_wires` would change anything — callers gate on
+    this so the benign graph never contains attack ops."""
+    return (robust.attack != "none"
+            and bool(byzantine_mask(robust, num_clients).any()))
+
+
+def attack_wires(robust, wires, mask, key):
+    """Apply the configured byzantine transform to the masked rows of
+    a packed (N, rows, cols) wire stack.
+
+    ``mask`` is the (N,) per-row malicious indicator (bool, traced or
+    constant); ``key`` seeds the ``random_wire`` noise (ignored by the
+    deterministic attacks).  Output has the input's shape and dtype —
+    wire geometry and headers are untouched, only payload values
+    change:
+
+    * ``sign_flip``    — ``-x`` (gradient ascent on delivery);
+    * ``scale``        — ``attack_scale * x`` (model-poisoning boost);
+    * ``random_wire``  — gaussian noise matched to each wire's own
+      per-client standard deviation (a garbage but plausibly-scaled
+      payload).
+    """
+    if robust.attack not in ATTACKS:
+        raise ValueError(
+            f"unknown attack {robust.attack!r} (want one of {ATTACKS})")
+    if robust.attack == "none":
+        return wires
+    x = wires.astype(jnp.float32)
+    m = jnp.asarray(mask).reshape((-1,) + (1,) * (x.ndim - 1))
+    if robust.attack == "sign_flip":
+        evil = -x
+    elif robust.attack == "scale":
+        evil = jnp.float32(robust.attack_scale) * x
+    else:  # random_wire
+        std = jnp.std(x, axis=tuple(range(1, x.ndim)), keepdims=True)
+        noise = jax.random.normal(jax.random.fold_in(key, ATTACK_SALT),
+                                  x.shape, jnp.float32)
+        evil = noise * jnp.maximum(std, jnp.float32(1e-8))
+    return jnp.where(m, evil, x).astype(wires.dtype)
+
+
+def corrupt_labels(robust, labels, mask, num_classes: int) -> np.ndarray:
+    """Label-noise clients: resample each masked client's labels
+    uniformly with probability ``label_noise_rate``.
+
+    ``labels`` is a host-side int array with leading client axis C
+    (any trailing shape); returns a fresh array, deterministic per
+    ``robust.seed``.  Runs at data-build time, so the jitted round
+    never carries corruption ops.
+    """
+    out = np.array(labels)
+    if robust.label_noise_fraction <= 0.0 or robust.label_noise_rate <= 0.0:
+        return out
+    rng = np.random.default_rng([robust.seed, 2])
+    flip = rng.random(out.shape) < robust.label_noise_rate
+    rand = rng.integers(0, num_classes, out.shape)
+    flip &= np.asarray(mask, dtype=bool).reshape(
+        (-1,) + (1,) * (out.ndim - 1))
+    out[flip] = rand[flip]
+    return out

@@ -55,6 +55,8 @@ from repro.configs.base import SCHED_DISCIPLINES
 from repro.core.schedules import lr_at_round
 from repro.kernels import INTERPRET as _INTERPRET
 from repro.obs.spans import SpanLog
+from repro.robust import aggregators as robust_agg
+from repro.robust import attacks as robust_attacks
 from repro.sched import latency
 
 
@@ -87,6 +89,15 @@ class SchedEvent:
     # trace ids of the arrivals folded into this event, aligned with
     # ``clients`` — populated only under ``ObsConfig.trace``
     trace_ids: Tuple[int, ...] = ()
+    # adversarial-fleet context (repro.robust): the *effective*
+    # aggregator that combined this event's arrivals, the wire attack
+    # in play, the byzantine arrivals among ``clients``, and the
+    # arrivals that were dropout/rejoin deliveries — all defaults
+    # (hence absent from records) for non-adversarial runs
+    aggregator: str = "mean"
+    attack: str = "none"
+    byzantine: Tuple[int, ...] = ()
+    dropped: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,6 +224,14 @@ class SchedTrace:
                 r.update(ev.probes)
             if ev.trace_ids:
                 r["trace_ids"] = list(ev.trace_ids)
+            if ev.aggregator != "mean":
+                r["aggregator"] = ev.aggregator
+            if ev.attack != "none":
+                r["attack"] = ev.attack
+            if ev.byzantine:
+                r["byzantine_clients"] = list(ev.byzantine)
+            if ev.dropped:
+                r["dropped_clients"] = list(ev.dropped)
             recs.append(r)
         recs.extend(d.to_record() for d in self.dispatches)
         recs.append({
@@ -253,7 +272,11 @@ class SchedTrace:
                     cum_hessian_downlink_bytes=r[
                         "cum_hessian_downlink_bytes"],
                     probes=probes or None,
-                    trace_ids=tuple(r.get("trace_ids", ()))))
+                    trace_ids=tuple(r.get("trace_ids", ())),
+                    aggregator=r.get("aggregator", "mean"),
+                    attack=r.get("attack", "none"),
+                    byzantine=tuple(r.get("byzantine_clients", ())),
+                    dropped=tuple(r.get("dropped_clients", ()))))
         if discipline is None:
             raise ValueError(
                 "no sched_summary record — not a to_records() trace")
@@ -274,6 +297,7 @@ class _InFlight:
     dnm: Any = None
     dnef: Any = None
     trace_id: int = 0         # 0 when tracing is off
+    dropped: bool = False     # delivery delayed by a dropout/rejoin
 
 
 class VirtualScheduler:
@@ -344,6 +368,17 @@ class VirtualScheduler:
             self.buffer_size = 1           # async applies every arrival
         self._stateful = (fed.optimizer == "fed_sophia"
                           and fed.persistent_client_state)
+        # adversarial fleet (repro.robust): the byzantine mask is a
+        # static host constant folded into the dispatch jit; churn
+        # draws come from a dedicated host rng stream consumed per
+        # dispatch (in group order), so runs replay bit-for-bit —
+        # and are consumed AT ALL only when churn is configured
+        rb = fed.robust
+        self.robust = rb
+        self._byz_mask = robust_attacks.byzantine_mask(rb, C)
+        self._attack_on = robust_attacks.wire_attack_active(rb, C)
+        self._churn_on = rb.dropout_prob > 0.0
+        self._churn_rng = np.random.default_rng([rb.seed, 3])
         self._round_fn = engine.round_fn(donate=donate)
         self._donate = donate
         # dispatch READS the state (its outputs are per-client rows,
@@ -408,9 +443,18 @@ class VirtualScheduler:
         batches_g = take(batches)
         rngs_g = jax.vmap(lambda i: jax.random.fold_in(rng_v, i))(idx)
 
-        return engine.comm_client_step_batched(
+        out = engine.comm_client_step_batched(
             rt, theta, theta_dn, round_idx, lr,
             opts_g, ef_g, dnm_g, dnef_g, batches_g, rngs_g)
+        if self._attack_on:
+            # byzantine rows of the dispatch group mount the
+            # configured transform on their packed uplink wire buffer
+            # (repro.robust.attacks); benign runs never trace this
+            wires = robust_attacks.attack_wires(
+                self.robust, out[0],
+                jnp.asarray(self._byz_mask)[idx], rng_v)
+            out = (wires,) + out[1:]
+        return out
 
     def _apply_impl(self, state, wires, stats, weights, idx,
                     ef_rows, opt_rows, dnm_rows, dnef_rows):
@@ -428,7 +472,15 @@ class VirtualScheduler:
         normalize = self.sched.discipline == "semisync"
         wsum = jnp.sum(weights)
         inv_norm = (1.0 / wsum) if normalize else jnp.float32(1.0)
-        if comm.use_pallas:
+        if robust_agg.resolve(self.robust, wires.shape[0]) != "mean":
+            # robust combine of the arrival stack (same staleness
+            # weights and normalization semantics); degenerate
+            # parameterizations resolve to "mean" above and keep the
+            # stale_accum path below untouched — bitwise
+            agg_flat = robust_agg.aggregate_stack(
+                self.robust, wires, weights, normalize=normalize,
+                use_pallas=comm.use_pallas, interpret=_INTERPRET)
+        elif comm.use_pallas:
             from repro.kernels.stale_accum import stale_accum_flat
             agg_flat = stale_accum_flat(wires, weights, inv_norm,
                                         interpret=_INTERPRET)
@@ -500,6 +552,18 @@ class VirtualScheduler:
 
     def _weight(self, staleness: int) -> float:
         return float((1.0 + staleness) ** (-self.sched.staleness_power))
+
+    def _event_ctx(self, ids, dropped=()) -> Dict[str, Any]:
+        """Adversarial-fleet fields of one event (`repro.robust`): the
+        effective aggregator for this event's arrival count, the wire
+        attack in play, and the byzantine arrivals among ``ids`` —
+        all defaults for non-adversarial runs, so existing traces and
+        their records are unchanged."""
+        return {
+            "aggregator": robust_agg.resolve(self.robust, len(ids)),
+            "attack": self.robust.attack if self._attack_on else "none",
+            "byzantine": tuple(i for i in ids if self._byz_mask[i]),
+            "dropped": tuple(dropped)}
 
     def _event_probes(self, state=None,
                       metrics=None) -> Optional[Dict[str, float]]:
@@ -588,7 +652,8 @@ class VirtualScheduler:
                 cum_hessian_uplink_bytes=cum["hessian_uplink_bytes"],
                 cum_hessian_downlink_bytes=cum["hessian_downlink_bytes"],
                 probes=self._event_probes(metrics=metrics),
-                trace_ids=tids)
+                trace_ids=tids,
+                **self._event_ctx([int(i) for i in part]))
             trace.events.append(ev)
             if self._hit_target(ev, target_loss, stop_at_target):
                 break
@@ -640,13 +705,24 @@ class VirtualScheduler:
                             else jax.tree.map(lambda x: x[pos], tree))
 
                 for pos, i in enumerate(group):
+                    # dropout/rejoin on the virtual clock: the client
+                    # goes offline mid-round and delivers its (stale)
+                    # update rejoin_delay_s after coming back — one
+                    # host rng draw per dispatched client, in group
+                    # order, so replays are deterministic
+                    extra, was_dropped = 0.0, False
+                    if self._churn_on and (self._churn_rng.random()
+                                           < self.robust.dropout_prob):
+                        extra = float(self.robust.rejoin_delay_s)
+                        was_dropped = True
+                    arrival = at_time + float(durations[i]) + extra
                     tid = 0
                     if self._trace_on:
                         tid, next_tid = next_tid, next_tid + 1
                         trace.dispatches.append(SchedDispatch(
                             trace_id=tid, client=i, version=version,
                             time=at_time,
-                            arrival=at_time + float(durations[i]),
+                            arrival=arrival,
                             downlink_s=float(legs[0][i]),
                             compute_s=float(legs[1][i]),
                             uplink_s=float(legs[2][i]),
@@ -655,13 +731,13 @@ class VirtualScheduler:
                             hessian_uplink_bytes=stream_h,
                             hessian_downlink_bytes=stream_h))
                     inflight[i] = _InFlight(
-                        arrival=at_time + float(durations[i]),
+                        arrival=arrival,
                         version=version,
                         wire=wires[pos], stat=stats[pos],
                         loss=float(losses[pos]),
                         ef=row(ef_new, pos), opt=row(opt_new, pos),
                         dnm=row(dnm_new, pos), dnef=row(dnef_new, pos),
-                        trace_id=tid)
+                        trace_id=tid, dropped=was_dropped)
                     cum_bytes += down_bytes
                     cum["downlink_bytes"] += stream_dn
                     cum["hessian_downlink_bytes"] += stream_h
@@ -721,7 +797,9 @@ class VirtualScheduler:
                 cum_hessian_uplink_bytes=cum["hessian_uplink_bytes"],
                 cum_hessian_downlink_bytes=cum["hessian_downlink_bytes"],
                 probes=self._event_probes(state=state),
-                trace_ids=tids)
+                trace_ids=tids,
+                **self._event_ctx(ids, dropped=[
+                    i for i, r in zip(ids, recs) if r.dropped]))
             trace.events.append(ev)
             buffer = []
             if self._hit_target(ev, target_loss, stop_at_target):

@@ -1,0 +1,148 @@
+"""Non-IID partitioner tests (repro.data.partition).
+
+The statistical pin: the Dirichlet label-skew concentration statistic
+(`label_concentration`, mean max class share per client) is MONOTONE
+in 1/alpha — large alpha gives near-IID clients, small alpha
+concentrates each class on few clients.  Everything else is exact:
+determinism per seed, apportionment sums, minimum-sample floors, the
+fixed-geometry `equalize` contract, quantity skew and feature shift.
+"""
+import numpy as np
+import pytest
+
+from repro.data import partition as dpart
+
+SEED = 11
+
+
+@pytest.fixture(scope="module")
+def labels():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, 10, size=4096)
+
+
+# ----------------------------------------------- dirichlet label skew
+def test_dirichlet_partition_exact_cover(labels):
+    """The partition is an exact disjoint cover of the pool."""
+    parts = dpart.dirichlet_label_partition(labels, 8, alpha=0.5,
+                                            seed=SEED)
+    allidx = np.concatenate(parts)
+    assert allidx.size == labels.size
+    assert np.array_equal(np.sort(allidx), np.arange(labels.size))
+
+
+def test_dirichlet_partition_deterministic(labels):
+    """Same seed -> identical partition; different seed differs."""
+    a = dpart.dirichlet_label_partition(labels, 8, alpha=0.1, seed=SEED)
+    b = dpart.dirichlet_label_partition(labels, 8, alpha=0.1, seed=SEED)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    c = dpart.dirichlet_label_partition(labels, 8, alpha=0.1,
+                                        seed=SEED + 1)
+    assert any(not np.array_equal(pa, pc) for pa, pc in zip(a, c))
+
+
+def test_dirichlet_partition_min_per_client(labels):
+    """Every client owns at least min_per_client samples even at the
+    pathological alpha."""
+    parts = dpart.dirichlet_label_partition(labels, 16, alpha=0.05,
+                                            seed=SEED, min_per_client=8)
+    assert all(p.size >= 8 for p in parts)
+
+
+def test_dirichlet_concentration_monotone_in_inverse_alpha(labels):
+    """The statistical pin: smaller alpha -> larger mean max class
+    share, averaged over seeds; alpha=100 sits near the IID floor."""
+    def stat(alpha):
+        vals = []
+        for s in range(5):
+            parts = dpart.dirichlet_label_partition(labels, 8, alpha,
+                                                    seed=s)
+            vals.append(dpart.label_concentration(
+                dpart.label_marginals(labels, parts, 10)))
+        return float(np.mean(vals))
+
+    iid, mid, skew = stat(100.0), stat(1.0), stat(0.1)
+    assert iid < mid < skew
+    assert iid < 0.2          # near the 1/num_classes = 0.1 floor
+    assert skew > 0.45        # strong per-client class concentration
+
+
+def test_dirichlet_rejects_bad_alpha(labels):
+    with pytest.raises(ValueError):
+        dpart.dirichlet_label_partition(labels, 4, alpha=0.0, seed=0)
+
+
+# -------------------------------------------------------- apportionment
+def test_apportion_exact_sum_and_proportionality():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        shares = rng.dirichlet(np.ones(7))
+        total = int(rng.integers(1, 5000))
+        counts = dpart._apportion(rng, total, shares)
+        assert counts.sum() == total
+        assert np.all(np.abs(counts - shares * total) < 1.0 + 1e-9)
+
+
+# -------------------------------------------------------- quantity skew
+def test_quantity_skew_sizes_sum_and_minimum():
+    sizes = dpart.quantity_skew_sizes(1000, 8, alpha=0.3, seed=SEED,
+                                      min_per_client=5)
+    assert sizes.sum() == 1000
+    assert np.all(sizes >= 5)
+    np.testing.assert_array_equal(
+        sizes, dpart.quantity_skew_sizes(1000, 8, alpha=0.3, seed=SEED,
+                                         min_per_client=5))
+    with pytest.raises(ValueError):
+        dpart.quantity_skew_sizes(3, 4, alpha=0.3, seed=0)
+
+
+def test_subsample_respects_sizes_and_ownership(labels):
+    parts = dpart.dirichlet_label_partition(labels, 4, alpha=0.5,
+                                            seed=SEED)
+    sizes = np.array([10, 20, 30, 10 ** 9])
+    out = dpart.subsample(parts, sizes, seed=SEED)
+    for p, s, o in zip(parts, sizes, out):
+        assert o.size == min(int(s), p.size)
+        assert np.isin(o, p).all()
+        assert np.unique(o).size == o.size  # without replacement
+
+
+# ------------------------------------------------------------- equalize
+def test_equalize_fixed_geometry_and_ownership(labels):
+    parts = dpart.dirichlet_label_partition(labels, 8, alpha=0.1,
+                                            seed=SEED)
+    out = dpart.equalize(parts, 64, seed=SEED)
+    assert out.shape == (8, 64) and out.dtype == np.int32
+    for i, p in enumerate(parts):
+        assert np.isin(out[i], p).all()
+        if p.size >= 64:
+            assert np.unique(out[i]).size == 64
+    with pytest.raises(ValueError):
+        dpart.equalize([np.zeros((0,), np.int64)], 4, seed=0)
+
+
+# -------------------------------------------------------- feature shift
+def test_feature_shift_identity_and_determinism():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((4, 32, 5)).astype(np.float32)
+    np.testing.assert_array_equal(dpart.feature_shift(x, 0.0, SEED), x)
+    a = dpart.feature_shift(x, 0.5, SEED)
+    b = dpart.feature_shift(x, 0.5, SEED)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == x.shape and a.dtype == np.float32
+    assert not np.array_equal(a, x)
+    # per-client affine: x == 0 maps to the client bias everywhere
+    z = dpart.feature_shift(np.zeros_like(x), 0.5, SEED)
+    for c in range(4):
+        assert np.unique(z[c]).size == 1
+
+
+# ------------------------------------------------------------ marginals
+def test_label_marginals_rows_are_distributions(labels):
+    parts = dpart.dirichlet_label_partition(labels, 8, alpha=0.2,
+                                            seed=SEED)
+    m = dpart.label_marginals(labels, parts, 10)
+    assert m.shape == (8, 10)
+    np.testing.assert_allclose(m.sum(axis=1), 1.0, rtol=1e-9)
+    assert 0.1 <= dpart.label_concentration(m) <= 1.0

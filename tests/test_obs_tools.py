@@ -352,6 +352,7 @@ def test_dashboard_render_sections():
 # -------------------------------------- committed bench record files
 BENCH_FILES = ("experiments/bench_comm.json",
                "experiments/bench_sched.json",
+               "experiments/bench_robust.json",
                "BENCH_engine.json")
 
 

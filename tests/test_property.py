@@ -273,3 +273,104 @@ def test_aggregation_mean_bounds(vals):
     agg = np.asarray(tree_mean_axis0({"w": jnp.asarray(vals)})["w"])
     assert np.all(agg <= vals.max(axis=0) + 1e-5)
     assert np.all(agg >= vals.min(axis=0) - 1e-5)
+
+
+# --------------------------- robust aggregation invariants
+#
+# The adversarial-fleet contracts of docs/robustness.md, driven by
+# hypothesis: trimmed means stay inside the survivor hull, the
+# coordinate median ignores arrival order, norm clipping is a no-op
+# on in-ball stacks, and wire attacks never change wire geometry.
+
+#: (K, rows, cols) robust-stack geometry pool — like GEOMETRIES, each
+#: shape is one jit compile so the values/seeds do the roaming
+ROBUST_GEOMETRIES = [(5, 4, 8), (9, 3, 16), (4, 7, 5)]
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(ROBUST_GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       trim=st.integers(0, 2))
+def test_trimmed_mean_within_survivor_hull(geom, seed, trim):
+    """The trimmed mean lies per-coordinate inside [min, max] of the
+    sorted-interior survivors, for any weights > 0."""
+    from repro.kernels.ref import robust_agg_ref
+    K, R, C = geom
+    trim = min(trim, (K - 1) // 2)
+    key = jax.random.PRNGKey(seed)
+    wires = 10.0 * jax.random.normal(jax.random.fold_in(key, 1),
+                                     (K, R, C))
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (K,),
+                           minval=0.1, maxval=2.0)
+    out = np.asarray(robust_agg_ref(wires, w, jnp.ones((K,)),
+                                    trim=trim, normalize=True))
+    srt = np.sort(np.asarray(wires), axis=0)[trim:K - trim]
+    assert np.all(out >= srt.min(axis=0) - 1e-4)
+    assert np.all(out <= srt.max(axis=0) + 1e-4)
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(ROBUST_GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_coordinate_median_permutation_invariant(geom, seed):
+    """Shuffling the arrival axis leaves the coordinate median
+    unchanged (uniform weights; ties broken by value, not index)."""
+    from repro.configs.base import RobustConfig
+    from repro.robust import aggregators as ragg
+    K, R, C = geom
+    key = jax.random.PRNGKey(seed)
+    wires = jax.random.normal(jax.random.fold_in(key, 1), (K, R, C))
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), K)
+    rb = RobustConfig(aggregator="coordinate_median")
+    ones = jnp.ones((K,), jnp.float32)
+    a = ragg.aggregate_stack(rb, wires, ones)
+    b = ragg.aggregate_stack(rb, wires[perm], ones)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(ROBUST_GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       clip=st.floats(min_value=0.5, max_value=50.0, width=32))
+def test_norm_clip_idempotent_on_in_ball_stacks(geom, seed, clip):
+    """Clipping a stack whose arrivals are already inside the norm
+    ball is a bitwise no-op (scale factor exactly 1.0), and clipped
+    outputs never exceed the ball."""
+    from repro.robust import aggregators as ragg
+    K, R, C = geom
+    key = jax.random.PRNGKey(seed)
+    raw = jax.random.normal(jax.random.fold_in(key, 1), (K, R, C))
+    nrm = jnp.sqrt(jnp.sum(raw * raw, axis=(1, 2), keepdims=True))
+    inside = raw * (0.999 * clip / jnp.maximum(nrm, 1e-30))
+    s = np.asarray(ragg.clip_scales(inside, jnp.float32(clip)))
+    np.testing.assert_array_equal(s, np.ones_like(s))
+    s_out = np.asarray(ragg.clip_scales(10.0 * raw, jnp.float32(clip)))
+    scaled = np.asarray(10.0 * raw) * s_out[:, None, None]
+    norms = np.sqrt((scaled ** 2).sum(axis=(1, 2)))
+    assert np.all(norms <= clip * (1 + 1e-5))
+
+
+@settings(**SETTINGS)
+@given(geom=st.sampled_from(ROBUST_GEOMETRIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       attack=st.sampled_from(["sign_flip", "scale", "random_wire"]),
+       frac=st.sampled_from([0.0, 0.25, 0.5, 1.0]))
+def test_attacks_preserve_wire_geometry_property(geom, seed, attack,
+                                                 frac):
+    """Wire attacks keep the packed stack's shape and dtype and leave
+    benign rows bitwise untouched for any mask."""
+    from repro.configs.base import RobustConfig
+    from repro.robust import attacks as ratt
+    K, R, C = geom
+    rb = RobustConfig(attack=attack, attack_fraction=frac,
+                      seed=seed % 1000)
+    mask = jnp.asarray(ratt.byzantine_mask(rb, K))
+    wires = jax.random.normal(jax.random.PRNGKey(seed), (K, R, C))
+    out = ratt.attack_wires(rb, wires, mask,
+                            jax.random.PRNGKey(seed + 1))
+    assert out.shape == wires.shape and out.dtype == wires.dtype
+    m = np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(out)[~m],
+                                  np.asarray(wires)[~m])
+    assert int(m.sum()) == int(round(frac * K))

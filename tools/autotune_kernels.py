@@ -56,6 +56,7 @@ from repro.kernels.quantize import (broadcast_roundtrip_batched,
                                     sign_roundtrip_batched,
                                     topk_threshold_batched,
                                     uplink_roundtrip_batched)
+from repro.kernels.robust_agg import robust_agg_flat
 from repro.kernels.sophia_update import sophia_update_batched
 from repro.kernels.stale_accum import stale_accum_flat
 
@@ -135,6 +136,12 @@ def make_runners(N: int, R: int, C: int, dtype=None):
             stale_accum_flat, wires, weights, jnp.float32(1.0),
             interpret=INTERPRET,
             blocks=None if b is None else (1, b[1], b[2])),
+        # robust_agg holds the whole K axis in-block (trimming needs
+        # every wire at once), so only the (br, bc) tile is tunable
+        "robust_agg": lambda b: run(
+            robust_agg_flat, wires, weights, cscale, trim=1,
+            normalize=True, interpret=INTERPRET,
+            blocks=None if b is None else (b[1], b[2])),
     }
 
 
@@ -171,7 +178,7 @@ def sweep(out_path: str, repeats: int, dtype_name: str = "") -> int:
                   f"br={blocks[1]:<4d} bc={blocks[2]:<4d} "
                   f"{us:10.1f} us")
         best_us, (bn, br, bc) = min(results)
-        if kernel == "stale_accum":
+        if kernel in ("stale_accum", "robust_agg"):
             bn = 1                      # tuned path never blocks K
         entries[kernel + suffix] = {"block_n": bn, "block_r": br,
                                     "block_c": bc}

@@ -28,6 +28,11 @@ that no longer exist, so the docs cannot silently drift from the code:
   docs can't drift from the record schema;
 * the record-type table in the same doc's "Record schema" section
   must list exactly the ``RECORDS`` registry's record types;
+* the aggregator and attack tables in ``docs/robustness.md`` must list
+  exactly the ``AGGREGATORS`` / ``ATTACKS`` registries of
+  ``src/repro/configs/base.py`` (regex-parsed tuples — no package
+  import), so the robustness doc can't drift from the fleet's
+  registered combiners and fault injectors;
 * the committed kernel tuning table ``src/repro/kernels/tuning.json``
   must parse and its entry keys must equal the ``KERNELS`` registry in
   ``src/repro/kernels/__init__.py`` (regex-parsed — no package
@@ -69,7 +74,8 @@ RECORD_DECL_RE = re.compile(r'"(\w+)": RecordType\(')
 PATH_RE = re.compile(r"[\w./-]+/[\w.-]+\.(?:py|md|json|yml|ini)\b")
 MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
 FIELD_RE = re.compile(
-    r"\b(CommConfig|FedConfig|ModelConfig|SchedConfig|ObsConfig)\.(\w+)")
+    r"\b(CommConfig|FedConfig|ModelConfig|SchedConfig|RobustConfig"
+    r"|ObsConfig)\.(\w+)")
 MAKE_RE = re.compile(r"\bmake ([\w-]+)")
 FLAG_RE = re.compile(r"(?<!-)--([\w-]+)")
 ONLY_RE = re.compile(r"--only[= ](\w+)")
@@ -243,6 +249,51 @@ def check_record_table(errors) -> None:
                       f"`{name}` is not a registered record type")
 
 
+ROBUST_DOC = ROOT / "docs" / "robustness.md"
+#: the adversarial-fleet registries are one-line string tuples in
+#: src/repro/configs/base.py — regex-parseable without importing
+ROBUST_REGISTRY_RE = {
+    "Aggregators": re.compile(r"^AGGREGATORS = \((.*?)\)", re.S | re.M),
+    "Attacks": re.compile(r"^ATTACKS = \((.*?)\)", re.S | re.M),
+}
+
+
+def check_robust_registries(errors) -> None:
+    """The '## Aggregators' and '## Attacks' tables in
+    docs/robustness.md must list EXACTLY the AGGREGATORS / ATTACKS
+    registries of repro.configs.base — a combiner or fault injector
+    added/renamed without a doc row (or a row outliving its registry
+    entry) is a CI error."""
+    src = CONFIG_SOURCE.read_text()
+    if not ROBUST_DOC.exists():
+        errors.append("docs/robustness.md is missing (the adversarial-"
+                      "fleet registry tables live there)")
+        return
+    text = ROBUST_DOC.read_text()
+    for section, regex in ROBUST_REGISTRY_RE.items():
+        m = regex.search(src)
+        registered = set(re.findall(r'"(\w+)"', m.group(1))) if m else set()
+        if not registered:
+            errors.append(f"tools/check_docs.py: found no "
+                          f"{section.upper()} registry in "
+                          f"src/repro/configs/base.py")
+            continue
+        sec = re.search(rf"## {section}\n(.*?)(?:\n## |\Z)", text, re.S)
+        if not sec:
+            errors.append(f"docs/robustness.md: no '## {section}' "
+                          f"section")
+            continue
+        documented = set(re.findall(r"^\| `(\w+)` \|", sec.group(1),
+                                    re.M))
+        for name in sorted(registered - documented):
+            errors.append(f"docs/robustness.md: `{name}` is registered "
+                          f"in repro.configs.base but missing from the "
+                          f"{section} table")
+        for name in sorted(documented - registered):
+            errors.append(f"docs/robustness.md: {section} table row "
+                          f"`{name}` is not a registered name")
+
+
 #: tuning keys are `<kernel>[@<dtype>][@n<chunk>]`
 #: (`repro.kernels.tuning` — most specific first at lookup)
 TUNING_KEY_RE = re.compile(
@@ -309,6 +360,7 @@ def main() -> int:
     check_config_reference(errors)
     check_metric_catalogue(errors)
     check_record_table(errors)
+    check_robust_registries(errors)
     check_tuning_table(errors)
     if errors:
         print(f"docs-check: {len(errors)} stale reference(s)")

@@ -28,7 +28,8 @@ TRAIN_SOURCE = ROOT / "src" / "repro" / "launch" / "train.py"
 OUT = ROOT / "docs" / "configuration.md"
 
 #: the runtime config classes the reference covers, in document order
-CLASSES = ("FedConfig", "CommConfig", "SchedConfig", "ObsConfig")
+CLASSES = ("FedConfig", "CommConfig", "SchedConfig", "RobustConfig",
+           "ObsConfig")
 
 #: fields whose train.py flag does NOT follow the name == flag rule
 FLAG_OVERRIDES = {
@@ -45,6 +46,7 @@ FLAG_DENY = {
     ("SchedConfig", "seed"),
     ("FedConfig", "seed"),
     ("FedConfig", "schedule"),   # --schedule is SchedConfig.discipline
+    ("RobustConfig", "seed"),    # masks reuse the launcher's --seed
 }
 
 HEADER = """\
@@ -60,7 +62,8 @@ HEADER = """\
 Every field of the federated runtime's config dataclasses
 (`repro.configs.base`).  `FedConfig` owns the round (Alg. 1
 hyper-parameters) and embeds one `CommConfig` (the client<->server
-wire model), one `SchedConfig` (virtual-time round scheduling) and
+wire model), one `SchedConfig` (virtual-time round scheduling), one
+`RobustConfig` (the adversarial fleet — docs/robustness.md) and
 one `ObsConfig` (structured telemetry — docs/observability.md).
 Model-architecture configs (`ModelConfig` and the zoo under
 `src/repro/configs/`) are intentionally out of scope: they describe
